@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks: fused Pallas paths vs pure-jnp references
+(interpret mode on CPU — relative numbers are structural, the tiling
+claims are validated on the dry-run HLO)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.entropy_probe.ref import attention_graph_stats_ref
+from repro.kernels.vnge_q.ref import vnge_q_stats_ref
+from repro.kernels.bsr_spmv.ops import bsr_matvec, dense_to_bsr
+from repro.kernels.bsr_spmv.ref import bsr_matvec_ref
+from repro.graphs.generators import random_geometric_community
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # vnge_q: jnp reference path (the Pallas kernel is validated in tests;
+    # on CPU the interpret mode is not a timing proxy)
+    for n in (512, 1024):
+        w = rng.random((n, n)).astype(np.float32)
+        w = np.triu(w, 1)
+        w = jnp.asarray(w + w.T)
+        f = jax.jit(vnge_q_stats_ref)
+        emit(f"kernels/vnge_q_ref/n{n}", time_fn(f, w), "jnp oracle")
+
+    # bsr_spmv vs dense matvec
+    g = random_geometric_community(2048, 16, 0.3, 0.00002, seed=1)
+    w = np.asarray(g.weights)
+    m = dense_to_bsr(w, b=128)
+    x = jnp.asarray(rng.random(m.n).astype(np.float32))
+    dense_w = jnp.asarray(w)
+    f_dense = jax.jit(lambda v: dense_w @ v)
+    f_bsr = jax.jit(lambda v: bsr_matvec_ref(m, v))
+    t_d = time_fn(f_dense, x)
+    t_b = time_fn(f_bsr, x)
+    nnzb = m.col_ids.shape[0] * m.col_ids.shape[1]
+    total_b = (m.n // 128) ** 2
+    emit("kernels/spmv_dense/n1024", t_d, "")
+    emit("kernels/spmv_bsr/n1024", t_b,
+         f"blocks={nnzb}/{total_b};speedup={t_d/t_b:.2f}x")
+
+    # entropy probe reference
+    logits = jnp.asarray(rng.normal(0, 1, (4, 256, 256)).astype(np.float32))
+    f = jax.jit(attention_graph_stats_ref)
+    emit("kernels/entropy_probe_ref/bh4_s256", time_fn(f, logits), "")
+
+
+if __name__ == "__main__":
+    run()

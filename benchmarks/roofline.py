@@ -1,0 +1,45 @@
+"""Roofline report: reads the dry-run artifacts (dryrun_results.jsonl)
+and emits the three-term roofline per (arch × shape × mesh) — the
+EXPERIMENTS.md §Roofline table source."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.jsonl")
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --both-meshes --out "
+             "dryrun_results.jsonl` first")
+        return
+    best = {}
+    for line in open(RESULTS):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"])
+        best[key] = r  # last write wins (reruns supersede)
+    for (arch, shape, mesh), r in sorted(best.items()):
+        if r["status"] != "OK":
+            emit(f"roofline/{arch}/{shape}/{mesh}", 0.0,
+                 f"{r['status']}:{r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        dom = max(("compute", "memory", "collective"),
+                  key=lambda k: r[f"{k}_term_s"])
+        step = max(r["compute_term_s"], r["memory_term_s"],
+                   r["collective_term_s"])
+        emit(f"roofline/{arch}/{shape}/{mesh}", step,
+             f"compute={r['compute_term_s']:.3f}s;"
+             f"memory={r['memory_term_s']:.3f}s;"
+             f"collective={r['collective_term_s']:.3f}s;"
+             f"bottleneck={dom};"
+             f"useful_flops={r.get('useful_flops_ratio', 0):.2f};"
+             f"hbm_peak={r.get('mem_peak_gb', 0)}GB")
+
+
+if __name__ == "__main__":
+    run()

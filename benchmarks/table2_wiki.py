@@ -1,0 +1,84 @@
+"""Paper Table 2 (+ S1): anomaly detection on evolving hyperlink-style
+networks — PCC/SRCC against the anomaly proxy + per-method timing.
+
+The real Wikipedia dumps are unavailable offline; we use the bursty churn
+stream (same unweighted add/delete dynamics with known per-month change
+fraction as the ex-post-facto proxy, DESIGN.md §7) and compare FINGER
+(Fast + Incremental) against all 7 baselines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit
+from repro.baselines import (
+    bhattacharyya_distance,
+    cosine_distance,
+    deltacon_distance,
+    graph_edit_distance,
+    hellinger_distance,
+    lambda_distance,
+    rmd_distance,
+    veo_score,
+)
+from repro.baselines.vnge_variants import vnge_variant_score
+from repro.core import finger_state, jsdist_fast, jsdist_incremental
+from repro.graphs.streams import churn_stream
+
+
+def _spearman(a, b):
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    return float(np.corrcoef(ra, rb)[0, 1])
+
+
+def run() -> None:
+    seq = churn_stream(n=300, steps=30, burst_steps=(7, 15, 23),
+                       burst_multiplier=10.0, seed=0)
+    proxy = seq.anomaly_truth
+    pairs = list(zip(seq.graphs[:-1], seq.graphs[1:]))
+
+    methods = {
+        "FINGER-JS(Fast)": lambda a, b: jsdist_fast(a, b, power_iters=50),
+        "DeltaCon": deltacon_distance,
+        "RMD": rmd_distance,
+        "lambda(Adj)": lambda a, b: lambda_distance(a, b, matrix="adj"),
+        "lambda(Lap)": lambda a, b: lambda_distance(a, b, matrix="lap"),
+        "GED": graph_edit_distance,
+        "VNGE-NL": lambda a, b: vnge_variant_score(a, b, "nl"),
+        "VNGE-GL": lambda a, b: vnge_variant_score(a, b, "gl"),
+        "VEO": veo_score,
+        "cosine(deg)": cosine_distance,
+        "Bhattacharyya(deg)": bhattacharyya_distance,
+        "Hellinger(deg)": hellinger_distance,
+    }
+
+    for name, fn in methods.items():
+        jfn = jax.jit(fn)
+        t0 = time.perf_counter()
+        scores = [float(jfn(a, b)) for a, b in pairs]
+        dt = time.perf_counter() - t0
+        pcc = float(np.corrcoef(scores, proxy)[0, 1])
+        srcc = _spearman(scores, proxy)
+        emit(f"table2/{name}", dt / len(pairs),
+             f"PCC={pcc:.4f};SRCC={srcc:.4f}")
+
+    # FINGER incremental over the delta stream (Algorithm 2)
+    st = finger_state(seq.graphs[0])
+    t0 = time.perf_counter()
+    scores = []
+    for d in seq.deltas:
+        dist, st = jsdist_incremental(st, d, exact_smax=True)
+        scores.append(float(dist))
+    dt = time.perf_counter() - t0
+    pcc = float(np.corrcoef(scores, proxy)[0, 1])
+    srcc = _spearman(scores, proxy)
+    emit("table2/FINGER-JS(Inc)", dt / len(seq.deltas),
+         f"PCC={pcc:.4f};SRCC={srcc:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""End-to-end anomaly detection (the paper's Section 4 tasks):
+
+1. DoS-attack detection in an AS-peering-style dynamic network
+   (paper Table 3) — FINGER vs DeltaCon vs VEO.
+2. Bifurcation detection in a Hi-C-like weighted sequence
+   (paper Fig. 4).
+
+    PYTHONPATH=src python examples/anomaly_detection.py
+"""
+import numpy as np
+
+import jax
+
+from repro.baselines import deltacon_distance, veo_score
+from repro.core import jsdist_fast
+from repro.graphs.streams import dos_attack_sequence, hic_bifurcation_sequence
+
+
+def score_sequence(graphs, fn):
+    return [float(fn(graphs[t], graphs[t + 1]))
+            for t in range(len(graphs) - 1)]
+
+
+def main():
+    print("=== DoS attack detection (X = 10% of nodes) ===")
+    seq, attack_at = dos_attack_sequence(n=300, attack_frac=0.10, seed=7)
+    for name, fn in [
+        ("FINGER-JS", jax.jit(lambda a, b: jsdist_fast(a, b, power_iters=50))),
+        ("DeltaCon ", jax.jit(deltacon_distance)),
+        ("VEO      ", jax.jit(veo_score)),
+    ]:
+        scores = score_sequence(seq.graphs, fn)
+        det = int(np.argmax(scores))
+        mark = "HIT " if det == attack_at else "miss"
+        print(f"  {name}: detected transition {det} "
+              f"(planted {attack_at}) [{mark}]  scores="
+              + " ".join(f"{s:.3f}" for s in scores))
+
+    print("\n=== Hi-C bifurcation detection (planted at transition 5) ===")
+    seq = hic_bifurcation_sequence(n=200, bifurcation_at=5, seed=0)
+    for name, fn in [
+        ("FINGER-JS", jax.jit(lambda a, b: jsdist_fast(a, b, power_iters=50))),
+        ("VEO      ", jax.jit(veo_score)),
+    ]:
+        scores = score_sequence(seq.graphs, fn)
+        det = int(np.argmax(scores))
+        print(f"  {name}: detected transition {det} "
+              f"(weighted-graph sensitivity: "
+              f"peak/median = {max(scores)/(np.median(scores)+1e-12):.2f})")
+
+
+if __name__ == "__main__":
+    main()

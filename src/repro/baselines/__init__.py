@@ -1,0 +1,11 @@
+"""The 7+ baseline graph-similarity methods the paper compares against."""
+from repro.baselines.deltacon import deltacon_distance, deltacon_similarity, rmd_distance
+from repro.baselines.degree_dist import (
+    bhattacharyya_distance,
+    cosine_distance,
+    hellinger_distance,
+)
+from repro.baselines.ged import graph_edit_distance
+from repro.baselines.lambda_dist import lambda_distance
+from repro.baselines.veo import veo_score
+from repro.baselines.vnge_variants import vnge_gl, vnge_nl

@@ -1,0 +1,38 @@
+"""Distances between degree distributions (paper supplement N):
+cosine, Bhattacharyya, Hellinger. KL is excluded (support mismatch),
+matching the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.types import DenseGraph
+
+
+def _degree_hist(g: DenseGraph, n_bins: int) -> jax.Array:
+    deg = jnp.sum((g.weights > 0).astype(jnp.float32), axis=1)
+    hist = jnp.zeros((n_bins,), jnp.float32)
+    idx = jnp.clip(deg.astype(jnp.int32), 0, n_bins - 1)
+    hist = hist.at[idx].add(1.0)
+    return hist / jnp.maximum(jnp.sum(hist), 1.0)
+
+
+def cosine_distance(g1: DenseGraph, g2: DenseGraph, n_bins: int = 256):
+    p = _degree_hist(g1, n_bins)
+    q = _degree_hist(g2, n_bins)
+    denom = jnp.maximum(jnp.linalg.norm(p) * jnp.linalg.norm(q), 1e-30)
+    return 1.0 - jnp.dot(p, q) / denom
+
+
+def bhattacharyya_distance(g1: DenseGraph, g2: DenseGraph, n_bins: int = 256):
+    p = _degree_hist(g1, n_bins)
+    q = _degree_hist(g2, n_bins)
+    bc = jnp.sum(jnp.sqrt(p * q))
+    return -jnp.log(jnp.clip(bc, 1e-30, 1.0))
+
+
+def hellinger_distance(g1: DenseGraph, g2: DenseGraph, n_bins: int = 256):
+    p = _degree_hist(g1, n_bins)
+    q = _degree_hist(g2, n_bins)
+    return jnp.sqrt(jnp.maximum(0.5 * jnp.sum((jnp.sqrt(p) - jnp.sqrt(q)) ** 2), 0.0))

@@ -1,0 +1,16 @@
+"""Graph edit distance for undirected unweighted graphs on a common node
+set (Bunke et al. 2007): number of edge additions + removals needed to
+convert G1 into G2 (node set fixed, as in the paper's sequences).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.types import DenseGraph
+
+
+def graph_edit_distance(g1: DenseGraph, g2: DenseGraph) -> jax.Array:
+    a1 = (g1.weights > 0).astype(jnp.float32)
+    a2 = (g2.weights > 0).astype(jnp.float32)
+    return 0.5 * jnp.sum(jnp.abs(a1 - a2))  # each undirected edge counted once

@@ -1,0 +1,51 @@
+"""VNGE heuristics using alternative Laplacians (the paper's last two
+baselines). Both lack approximation guarantees — the paper's point.
+
+- VNGE-NL (Han et al., 2012): density matrix from the *normalized*
+  Laplacian, Φ = L_sym / n with L_sym = I - D^{-1/2} W D^{-1/2}
+  (trace(L_sym) = n for graphs without isolated nodes), entropy
+  approximated quadratically: H_NL ≈ 1 - 1/n - (1/n²) Σ_{(u,v)∈E} w_uv²/(s_u s_v).
+- VNGE-GL (Ye et al., 2014): generalized Laplacian of directed graphs;
+  for our undirected inputs in-degree = out-degree and their quadratic
+  form reduces to
+  H_GL ≈ 1 - 1/n - (1/(2n²)) Σ_{(u,v)∈E} [ 1/(s_u s_v) + w_uv²/s_u² ].
+  (Identical-input reduction documented in DESIGN.md §8.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.types import DenseGraph
+
+
+def _safe_inv(x: jax.Array) -> jax.Array:
+    return jnp.where(x > 0, 1.0 / jnp.maximum(x, 1e-30), 0.0)
+
+
+def vnge_nl(g: DenseGraph) -> jax.Array:
+    w = g.weights
+    n = g.n_nodes
+    s = jnp.sum(w, axis=1)
+    inv_s = _safe_inv(s)
+    # Σ over directed pairs counts each undirected edge twice → ½ factor
+    pair_term = 0.5 * jnp.sum((w * w) * inv_s[:, None] * inv_s[None, :])
+    return 1.0 - 1.0 / n - (1.0 / (n * n)) * pair_term
+
+
+def vnge_gl(g: DenseGraph) -> jax.Array:
+    w = g.weights
+    n = g.n_nodes
+    s = jnp.sum(w, axis=1)
+    inv_s = _safe_inv(s)
+    adj = (w > 0).astype(w.dtype)
+    cross = 0.5 * jnp.sum(adj * inv_s[:, None] * inv_s[None, :])
+    self_term = 0.5 * jnp.sum((w * w) * (inv_s ** 2)[:, None])
+    return 1.0 - 1.0 / n - (1.0 / (2.0 * n * n)) * (cross + self_term)
+
+
+def vnge_variant_score(g1: DenseGraph, g2: DenseGraph, kind: str = "nl"):
+    """Anomaly score per paper supplement J: |H(G2) - H(G1)| (their JS
+    distances were ineffective, so consecutive-difference is used)."""
+    fn = vnge_nl if kind == "nl" else vnge_gl
+    return jnp.abs(fn(g2) - fn(g1))

@@ -1,0 +1,20 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix with sliding-window attention.
+
+24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000.
+[arXiv:2401.16818; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6912,
+    vocab_size=32000,
+    sliding_window=4096,
+    rope_theta=10000.0,
+    notes="SWA on all layers -> long_500k runnable (window-bounded KV).",
+))

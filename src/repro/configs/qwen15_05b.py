@@ -1,0 +1,19 @@
+"""qwen1.5-0.5b [dense] — MHA with QKV bias.
+
+24L d_model=1024 16H (kv=16) d_ff=2816 vocab=151936.
+[hf:Qwen/Qwen1.5-0.5B; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+))

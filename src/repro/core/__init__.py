@@ -1,0 +1,33 @@
+"""FINGER core: the paper's primary contribution.
+
+Exact VNGE, the Lemma-1 quadratic proxy Q, FINGER-Ĥ (eq. 1), FINGER-H̃
+(eq. 2), Theorem-2 incremental updates, and the Jensen–Shannon graph
+distance Algorithms 1 & 2.
+"""
+from repro.core.bounds import scaled_approximation_error, theorem1_bounds
+from repro.core.incremental import delta_stats, h_tilde_after, update_state
+from repro.core.jsdist import (
+    average_graph,
+    js_distance,
+    jsdist_exact,
+    jsdist_fast,
+    jsdist_incremental,
+    jsdist_stream,
+    jsdist_tilde,
+)
+from repro.core.state import FingerState, finger_state
+from repro.core.vnge import (
+    exact_vnge,
+    quadratic_q,
+    strength_stats,
+    vnge_hat,
+    vnge_tilde,
+)
+
+__all__ = [
+    "exact_vnge", "quadratic_q", "vnge_hat", "vnge_tilde", "strength_stats",
+    "FingerState", "finger_state", "update_state", "h_tilde_after",
+    "delta_stats", "average_graph", "js_distance", "jsdist_fast",
+    "jsdist_exact", "jsdist_tilde", "jsdist_incremental", "jsdist_stream",
+    "theorem1_bounds", "scaled_approximation_error",
+]

@@ -1,0 +1,74 @@
+"""Beyond-quadratic approximation of VNGE (paper §2.2's remark) — an
+implemented NEGATIVE result that validates the paper's design choice.
+
+The paper notes that "higher-order (beyond quadratic) approximation of H
+is plausible at the price of less computational efficiency...the cubic
+approximation of H involves the computation of trace(W³)". We implement
+it: truncating the paper's series −x ln x = Σ_z (−1)^z/z · x(x−1)^z at
+z = 2 and summing over the spectrum of L_N (Σλ = 1):
+
+  Q₃ = Σ λ(1−λ) + ½ Σ λ(λ−1)²  =  3/2 − 2 Σλ² + ½ Σλ³
+
+with Σλ² / Σλ³ from trace identities (one dense matmul; the Σλ³ edge
+form involves the triangle sum trace(W³), as the paper predicts).
+
+**Finding (tests/test_extensions.py):** for the balanced spectra where
+FINGER's guarantees hold (λ ~ 1/n → 0), the z = 2 term contributes
++½ Σ λ(λ−1)² ≈ +½ — the expansion point x = 1 is far from the
+eigenvalue mass, so the cubic proxy is *worse* than Q (measured: ER
+n=120, H/ln n = 0.994, Q = 0.991, Q₃ = 1.483). It only helps when
+eigenvalues sit near 1 (tiny near-complete graphs). This is presumably
+exactly why the paper stops at the quadratic — reproduced and recorded
+rather than assumed.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vnge import strength_stats
+from repro.graphs.types import DenseGraph, EdgeList
+
+Graph = Union[DenseGraph, EdgeList]
+
+
+def spectral_moments_3(g: DenseGraph):
+    """(Σλ, Σλ², Σλ³) of L_N via trace identities (no eigendecomposition).
+
+    trace(L³) for L = S − W expands to
+      Σ s³ + 3 Σ_i s_i W²_ii... — we avoid sign bookkeeping by forming
+    L densely once and using trace(L³) = Σ_ij (L²)_ij L_ji (one matmul).
+    """
+    w = g.weights
+    s = jnp.sum(w, axis=1)
+    l = jnp.diag(s) - w
+    tr = jnp.sum(s)
+    c = jnp.where(tr > 0, 1.0 / tr, 0.0)
+    l2 = l @ l
+    m2 = jnp.sum(l * l)            # trace(L²)  (L symmetric)
+    m3 = jnp.sum(l2 * l)           # trace(L³)
+    return 1.0, c * c * m2, c ** 3 * m3
+
+
+def cubic_q(g: Graph) -> jax.Array:
+    """Q₃: third-order Taylor approximation of H (beyond-paper impl of
+    the paper's suggested extension)."""
+    if isinstance(g, EdgeList):
+        g = g.to_dense()
+    _, m2, m3 = spectral_moments_3(g)
+    return 1.5 - 2.0 * m2 + 0.5 * m3
+
+
+def vnge_hat3(g: Graph, lambda_max=None, power_iters: int = 100) -> jax.Array:
+    """Ĥ₃ = −Q₃ ln λ_max — eq. (1) with the cubic proxy."""
+    from repro.graphs.spectral import power_iteration_lmax
+
+    if isinstance(g, EdgeList):
+        g = g.to_dense()
+    q3 = cubic_q(g)
+    if lambda_max is None:
+        lambda_max = power_iteration_lmax(g, num_iters=power_iters)
+    lam = jnp.clip(lambda_max, 1e-30, 1.0)
+    return -q3 * jnp.log(lam)

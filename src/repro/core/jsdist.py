@@ -1,0 +1,109 @@
+"""Jensen–Shannon graph distance: Algorithms 1 (Fast) and 2 (Incremental).
+
+  JSdiv(G, G')  = H(Ḡ) - ½ [H(G) + H(G')],   Ḡ = (G ⊕ G')/2
+  JSdist(G, G') = sqrt(JSdiv)                 (a valid metric)
+
+Algorithm 1 evaluates the three entropies with FINGER-Ĥ (eq. 1);
+Algorithm 2 uses FINGER-H̃ with Theorem-2 updates for the ΔG/2 and ΔG
+graphs — O(Δn + Δm) per step of a stream.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.incremental import update_state
+from repro.core.state import FingerState
+from repro.core.vnge import exact_vnge, vnge_hat, vnge_tilde
+from repro.graphs.types import DenseGraph, EdgeList, GraphDelta
+
+Graph = Union[DenseGraph, EdgeList]
+
+__all__ = [
+    "average_graph",
+    "js_distance",
+    "jsdist_fast",
+    "jsdist_incremental",
+    "jsdist_exact",
+]
+
+
+def average_graph(g: Graph, g2: Graph) -> Graph:
+    """Ḡ = (G ⊕ G')/2 with W̄ = (W + W')/2 on a common node set."""
+    if isinstance(g, DenseGraph) and isinstance(g2, DenseGraph):
+        return DenseGraph(weights=0.5 * (g.weights + g2.weights),
+                          n_nodes=g.n_nodes)
+    if isinstance(g, EdgeList) and isinstance(g2, EdgeList):
+        # Concatenate the two halved edge lists; duplicate (i, j) slots sum
+        # in every downstream strength/weight reduction, except Σ w² which
+        # requires physical merging — so merge via dense only if needed.
+        # For exactness we go through dense here (host graphs are moderate);
+        # the streaming path uses jsdist_incremental instead.
+        return average_graph(g.to_dense(), g2.to_dense())
+    raise TypeError("average_graph: mismatched graph representations")
+
+
+def _js_from_entropies(h_avg, h_a, h_b):
+    div = h_avg - 0.5 * (h_a + h_b)
+    return jnp.sqrt(jnp.maximum(div, 0.0))  # clamp eigensolver/approx noise
+
+
+def js_distance(g: Graph, g2: Graph, entropy_fn: Callable[[Graph], jax.Array]):
+    """JSdist under an arbitrary entropy functional (H, Ĥ, H̃, baselines)."""
+    gbar = average_graph(g, g2)
+    return _js_from_entropies(entropy_fn(gbar), entropy_fn(g), entropy_fn(g2))
+
+
+def jsdist_fast(g: Graph, g2: Graph, power_iters: int = 100) -> jax.Array:
+    """Algorithm 1: FINGER-JSdist (Fast), linear complexity via Ĥ."""
+    return js_distance(g, g2, lambda x: vnge_hat(x, power_iters=power_iters))
+
+
+def jsdist_exact(g: Graph, g2: Graph) -> jax.Array:
+    """Exact JSdist via full eigendecompositions (the O(n³) reference)."""
+    return js_distance(g, g2, exact_vnge)
+
+
+def jsdist_tilde(g: Graph, g2: Graph) -> jax.Array:
+    """JSdist with H̃ on full graphs (batch counterpart of Algorithm 2)."""
+    return js_distance(g, g2, vnge_tilde)
+
+
+def jsdist_incremental(
+    state: FingerState,
+    delta: GraphDelta,
+    exact_smax: bool = False,
+) -> Tuple[jax.Array, FingerState]:
+    """Algorithm 2: FINGER-JSdist (Incremental).
+
+    Given state(G) and ΔG, returns (JSdist(G, G ⊕ ΔG), state(G ⊕ ΔG)).
+    Uses two Theorem-2 updates (ΔG/2 and ΔG) — O(Δn + Δm) total.
+    """
+    half_state = update_state(state, delta.scaled(0.5), exact_smax=exact_smax)
+    full_state = update_state(state, delta, exact_smax=exact_smax)
+    dist = _js_from_entropies(
+        half_state.h_tilde(), state.h_tilde(), full_state.h_tilde()
+    )
+    return dist, full_state
+
+
+def jsdist_stream(
+    init_state: FingerState,
+    deltas: GraphDelta,
+    exact_smax: bool = False,
+) -> Tuple[jax.Array, FingerState]:
+    """Scan Algorithm 2 over a batched stream of T deltas (leading axis).
+
+    Lowers the whole online loop to a single XLA while-scan — the
+    TPU-idiomatic form of the paper's streaming setting. Returns the (T,)
+    distances and the final state.
+    """
+
+    def step(state, delta):
+        dist, new_state = jsdist_incremental(state, delta, exact_smax=exact_smax)
+        return new_state, dist
+
+    final_state, dists = jax.lax.scan(step, init_state, deltas)
+    return dists, final_state

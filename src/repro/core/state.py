@@ -1,0 +1,46 @@
+"""FingerState: the O(n) sufficient statistics for incremental FINGER.
+
+Theorem 2 updates Q' from (Q, c, ΔG); eq. (3) additionally needs s_max
+and (for exact Δs_max on the affected nodes) the current strength vector.
+Carrying the (n,) strengths keeps the state linear in nodes and makes the
+whole online loop a pure `lax.scan` over deltas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vnge import strength_stats
+from repro.graphs.types import DenseGraph, EdgeList, _pytree_dataclass
+
+Graph = Union[DenseGraph, EdgeList]
+
+
+@_pytree_dataclass
+class FingerState:
+    """Sufficient statistics of the current graph G for FINGER-H̃ updates."""
+
+    q: jax.Array  # Lemma-1 quadratic proxy Q of G
+    s_total: jax.Array  # S = trace(L) = 1/c
+    s_max: jax.Array  # largest nodal strength
+    strengths: jax.Array  # (n,) nodal strengths of G
+
+    @property
+    def c(self) -> jax.Array:
+        return jnp.where(self.s_total > 0, 1.0 / self.s_total, 0.0)
+
+    def h_tilde(self) -> jax.Array:
+        """H̃(G) = -Q ln(2 c s_max) from the carried statistics (eq. 2)."""
+        arg = jnp.clip(2.0 * self.c * self.s_max, 1e-30, None)
+        return -self.q * jnp.log(arg)
+
+
+def finger_state(g: Graph) -> FingerState:
+    """Build the state from a full graph (one O(n + m) pass)."""
+    s_total, sum_s2, sum_w2, s_max = strength_stats(g)
+    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+    q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+    return FingerState(q=q, s_total=s_total, s_max=s_max, strengths=g.strengths())

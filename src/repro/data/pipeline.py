@@ -1,0 +1,44 @@
+"""Deterministic synthetic data pipeline.
+
+Batches are a pure function of (seed, step) via key folding — the
+cornerstone of the fault-tolerance story: a restarted or re-scaled job
+regenerates exactly the token stream it would have seen, so resume and
+elastic re-sharding never skew the data order (DESIGN.md §6). A real
+deployment swaps `synthetic_batch` for a deterministic-shard reader with
+the same (seed, step) contract.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, seed: int,
+                    step: int) -> Dict[str, jax.Array]:
+    """Markov-ish synthetic tokens with learnable structure (so a few
+    hundred steps of training visibly reduce loss)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    v = cfg.vocab_size
+    # restricted alphabet + copy structure => the loss visibly drops
+    # within tens of steps (unigram: ln(V) -> ln(V_eff); then copying)
+    v_eff = min(v, 64)
+    base = jax.random.randint(key, (batch, seq + 1), 0, v_eff)
+    k2 = jax.random.fold_in(key, 1)
+    mask = jax.random.bernoulli(k2, 0.75, (batch, seq + 1))
+    shifted = jnp.roll(base, 1, axis=1)
+    toks = jnp.where(mask, shifted, base)
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.is_encoder_decoder:
+        k3 = jax.random.fold_in(key, 2)
+        out["frames"] = jax.random.normal(
+            k3, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+    elif cfg.frontend == "vision_stub":
+        k3 = jax.random.fold_in(key, 2)
+        out["extra_embeds"] = jax.random.normal(
+            k3, (batch, cfg.n_frontend_tokens, cfg.d_model),
+            jnp.float32) * 0.02
+    return out

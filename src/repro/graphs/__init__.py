@@ -1,0 +1,18 @@
+"""Graph substrate: representations, Laplacian ops, spectra, generators."""
+from repro.graphs.laplacian import (
+    laplacian_dense,
+    laplacian_matvec,
+    normalized_laplacian_dense,
+    trace_l,
+)
+from repro.graphs.spectral import (
+    exact_eigvals_ln,
+    lmax_lmin_positive,
+    power_iteration_lmax,
+)
+from repro.graphs.types import (
+    DenseGraph,
+    EdgeList,
+    GraphDelta,
+    apply_delta_dense,
+)

@@ -1,0 +1,53 @@
+"""Combinatorial graph Laplacian operators (dense and matrix-free)."""
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.types import DenseGraph, EdgeList
+
+Graph = Union[DenseGraph, EdgeList]
+
+
+def laplacian_dense(g: DenseGraph) -> jax.Array:
+    """L = S - W."""
+    s = g.strengths()
+    return jnp.diag(s) - g.weights
+
+
+def trace_l(g: Graph) -> jax.Array:
+    """trace(L) = Σ_i s_i = 2 Σ_E w_ij."""
+    if isinstance(g, DenseGraph):
+        return jnp.sum(g.weights)
+    return 2.0 * jnp.sum(g.masked_weights())
+
+
+def normalized_laplacian_dense(g: DenseGraph) -> jax.Array:
+    """L_N = L / trace(L) — the density matrix of the paper."""
+    l = laplacian_dense(g)
+    return l / jnp.trace(l)
+
+
+def laplacian_matvec(g: Graph) -> Callable[[jax.Array], jax.Array]:
+    """Matrix-free x ↦ L x, O(n + m) for edge lists, O(n²) dense."""
+    if isinstance(g, DenseGraph):
+        s = g.strengths()
+
+        def mv_dense(x):
+            return s * x - g.weights @ x
+
+        return mv_dense
+
+    s = g.strengths()
+    w = g.masked_weights()
+
+    def mv_sparse(x):
+        # (W x)_i = Σ_j w_ij x_j ; undirected edges stored once.
+        wx = jnp.zeros_like(x)
+        wx = wx.at[g.senders].add(w * x[g.receivers], mode="drop")
+        wx = wx.at[g.receivers].add(w * x[g.senders], mode="drop")
+        return s * x - wx
+
+    return mv_sparse

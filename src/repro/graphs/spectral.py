@@ -1,0 +1,78 @@
+"""Spectral utilities: power iteration for λ_max of L_N, exact eigvals.
+
+λ_max of the PSD matrix L_N = L / trace(L) is what FINGER-Ĥ (eq. 1)
+consumes. Power iteration on a PSD matrix converges to the largest
+eigenvalue from almost any start vector; each iteration is one Laplacian
+matvec (O(n + m) matrix-free), which is the linear-complexity claim of
+the paper (Section 2.3).
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.laplacian import laplacian_dense, laplacian_matvec, trace_l
+from repro.graphs.types import DenseGraph, EdgeList
+
+Graph = Union[DenseGraph, EdgeList]
+
+
+def power_iteration_lmax(
+    g: Graph,
+    num_iters: int = 100,
+    tol: float = 1e-7,
+    seed: int = 0,
+) -> jax.Array:
+    """Largest eigenvalue of L_N via matrix-free power iteration.
+
+    Runs a fixed-shape `lax.while_loop` with a Rayleigh-quotient
+    convergence test (relative change < tol) and an iteration cap, which
+    keeps the op jit-able and schedulable inside larger programs.
+    """
+    n = g.n_nodes
+    mv = laplacian_matvec(g)
+    s_total = trace_l(g)
+    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.normal(key, (n,), dtype=jnp.float32)
+    x0 = x0 / jnp.linalg.norm(x0)
+
+    def cond(carry):
+        i, _, lam, lam_prev = carry
+        rel = jnp.abs(lam - lam_prev) / jnp.maximum(jnp.abs(lam), 1e-30)
+        return jnp.logical_and(i < num_iters, rel > tol)
+
+    def body(carry):
+        i, x, lam, _ = carry
+        y = c * mv(x)
+        norm = jnp.linalg.norm(y)
+        # If y collapses (e.g. empty graph), keep x to avoid NaNs.
+        x_new = jnp.where(norm > 0, y / jnp.maximum(norm, 1e-30), x)
+        lam_new = jnp.dot(x_new, c * mv(x_new))
+        return i + 1, x_new, lam_new, lam
+
+    lam0 = jnp.dot(x0, c * mv(x0))
+    _, _, lam, _ = jax.lax.while_loop(cond, body, (0, x0, lam0, lam0 + 1.0))
+    return jnp.maximum(lam, 0.0)
+
+
+def exact_eigvals_ln(g: Graph) -> jax.Array:
+    """Full eigenspectrum of L_N (the O(n³) object FINGER avoids)."""
+    if isinstance(g, EdgeList):
+        g = g.to_dense()
+    l = laplacian_dense(g)
+    tr = jnp.trace(l)
+    ln = l / jnp.where(tr > 0, tr, 1.0)
+    return jnp.linalg.eigvalsh(ln)
+
+
+def lmax_lmin_positive(g: Graph, eps: float = 1e-12) -> Tuple[jax.Array, jax.Array]:
+    """(λ_max, λ_min⁺): largest and smallest *positive* eigenvalue of L_N."""
+    ev = exact_eigvals_ln(g)
+    lam_max = ev[-1]
+    pos = ev > eps
+    lam_min = jnp.min(jnp.where(pos, ev, jnp.inf))
+    return lam_max, lam_min

@@ -1,0 +1,235 @@
+"""Graph representations used across the FINGER framework.
+
+Three interchangeable representations, all registered as JAX pytrees so
+they can flow through jit / scan / shard_map:
+
+- ``DenseGraph``  : (n, n) symmetric weight matrix. The natural format for
+  attention graphs, Hi-C contact maps, and the exact-VNGE oracle.
+- ``EdgeList``    : padded COO with an explicit validity mask. The natural
+  format for streaming graphs and O(n + m) FINGER computation.
+- ``GraphDelta``  : a padded set of undirected edge-weight changes
+  (additions, deletions = negative deltas, re-weights), the unit of the
+  paper's incremental setting (Theorem 2).
+
+All graphs are undirected with nonnegative weights; every undirected edge
+(i, j), i < j, is stored exactly once in EdgeList/GraphDelta.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pytree_dataclass(cls=None, *, static_fields=()):
+    """Minimal frozen-dataclass pytree registration helper."""
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        fields = [f.name for f in dataclasses.fields(c)]
+        data_fields = [f for f in fields if f not in static_fields]
+
+        def flatten(obj):
+            children = tuple(getattr(obj, f) for f in data_fields)
+            aux = tuple(getattr(obj, f) for f in static_fields)
+            return children, aux
+
+        def unflatten(aux, children):
+            kwargs = dict(zip(data_fields, children))
+            kwargs.update(dict(zip(static_fields, aux)))
+            return c(**kwargs)
+
+        jax.tree_util.register_pytree_node(c, flatten, unflatten)
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)
+
+
+@_pytree_dataclass(static_fields=("n_nodes",))
+class DenseGraph:
+    """Symmetric dense weighted adjacency. ``weights[i, j] == weights[j, i]``."""
+
+    weights: jax.Array  # (n, n), nonnegative, zero diagonal
+    n_nodes: int
+
+    @property
+    def n(self) -> int:
+        return self.n_nodes
+
+    def strengths(self) -> jax.Array:
+        return jnp.sum(self.weights, axis=1)
+
+    @staticmethod
+    def from_weights(w: jax.Array) -> "DenseGraph":
+        n = w.shape[0]
+        w = 0.5 * (w + w.T)
+        w = w * (1.0 - jnp.eye(n, dtype=w.dtype))
+        return DenseGraph(weights=w, n_nodes=n)
+
+
+@_pytree_dataclass(static_fields=("n_nodes",))
+class EdgeList:
+    """Padded undirected edge list. Invalid (padding) slots have mask 0.
+
+    ``senders[k] < receivers[k]`` for valid slots; each undirected edge
+    appears exactly once.
+    """
+
+    senders: jax.Array  # (m_pad,) int32
+    receivers: jax.Array  # (m_pad,) int32
+    weights: jax.Array  # (m_pad,) float
+    mask: jax.Array  # (m_pad,) float 0/1
+    n_nodes: int
+
+    @property
+    def n(self) -> int:
+        return self.n_nodes
+
+    @property
+    def m_pad(self) -> int:
+        return self.senders.shape[0]
+
+    def n_edges(self) -> jax.Array:
+        return jnp.sum(self.mask).astype(jnp.int32)
+
+    def masked_weights(self) -> jax.Array:
+        return self.weights * self.mask
+
+    def strengths(self) -> jax.Array:
+        w = self.masked_weights()
+        s = jnp.zeros((self.n_nodes,), dtype=self.weights.dtype)
+        s = s.at[self.senders].add(w, mode="drop")
+        s = s.at[self.receivers].add(w, mode="drop")
+        return s
+
+    def to_dense(self) -> DenseGraph:
+        w = self.masked_weights()
+        a = jnp.zeros((self.n_nodes, self.n_nodes), dtype=self.weights.dtype)
+        a = a.at[self.senders, self.receivers].add(w, mode="drop")
+        a = a.at[self.receivers, self.senders].add(w, mode="drop")
+        return DenseGraph(weights=a, n_nodes=self.n_nodes)
+
+    @staticmethod
+    def from_dense(g: DenseGraph, m_pad: Optional[int] = None) -> "EdgeList":
+        """Host-side conversion (uses numpy; not jit-able)."""
+        w = np.asarray(g.weights)
+        iu, ju = np.triu_indices(g.n_nodes, k=1)
+        vals = w[iu, ju]
+        nz = vals != 0.0
+        iu, ju, vals = iu[nz], ju[nz], vals[nz]
+        m = len(vals)
+        if m_pad is None:
+            m_pad = max(int(m), 1)
+        if m > m_pad:
+            raise ValueError(f"m={m} exceeds m_pad={m_pad}")
+        pad = m_pad - m
+        return EdgeList(
+            senders=jnp.asarray(np.concatenate([iu, np.zeros(pad, np.int32)]), jnp.int32),
+            receivers=jnp.asarray(np.concatenate([ju, np.zeros(pad, np.int32)]), jnp.int32),
+            weights=jnp.asarray(np.concatenate([vals, np.zeros(pad)]), jnp.float32),
+            mask=jnp.asarray(np.concatenate([np.ones(m), np.zeros(pad)]), jnp.float32),
+            n_nodes=g.n_nodes,
+        )
+
+    @staticmethod
+    def from_arrays(senders, receivers, weights, n_nodes: int,
+                    m_pad: Optional[int] = None) -> "EdgeList":
+        senders = np.asarray(senders, np.int32)
+        receivers = np.asarray(receivers, np.int32)
+        weights = np.asarray(weights, np.float32)
+        lo = np.minimum(senders, receivers)
+        hi = np.maximum(senders, receivers)
+        senders, receivers = lo, hi
+        m = len(senders)
+        if m_pad is None:
+            m_pad = max(m, 1)
+        pad = m_pad - m
+        return EdgeList(
+            senders=jnp.asarray(np.concatenate([senders, np.zeros(pad, np.int32)])),
+            receivers=jnp.asarray(np.concatenate([receivers, np.zeros(pad, np.int32)])),
+            weights=jnp.asarray(np.concatenate([weights, np.zeros(pad, np.float32)])),
+            mask=jnp.asarray(np.concatenate([np.ones(m, np.float32),
+                                             np.zeros(pad, np.float32)])),
+            n_nodes=n_nodes,
+        )
+
+
+@_pytree_dataclass(static_fields=("n_nodes",))
+class GraphDelta:
+    """Padded set of undirected edge-weight deltas (Theorem 2's ΔG).
+
+    ``dw[k]`` is the signed weight change of edge (senders[k], receivers[k]).
+    Edge addition: dw = +w; deletion: dw = -w_old; re-weight: dw = w_new - w_old.
+    ``w_old[k]`` is the edge's weight in G *before* the delta (0 for additions);
+    carrying it makes the Theorem-2 ΔQ computable in O(Δm) without touching W.
+    """
+
+    senders: jax.Array  # (k_pad,) int32
+    receivers: jax.Array  # (k_pad,) int32
+    dw: jax.Array  # (k_pad,) float
+    w_old: jax.Array  # (k_pad,) float
+    mask: jax.Array  # (k_pad,) float 0/1
+    n_nodes: int
+
+    @property
+    def n(self) -> int:
+        return self.n_nodes
+
+    def scaled(self, factor: float) -> "GraphDelta":
+        """ΔG/2 for Algorithm 2 (the averaged graph G ⊕ ΔG/2)."""
+        return GraphDelta(
+            senders=self.senders, receivers=self.receivers,
+            dw=self.dw * factor, w_old=self.w_old, mask=self.mask,
+            n_nodes=self.n_nodes,
+        )
+
+    def delta_strengths(self, n: Optional[int] = None) -> jax.Array:
+        """Δs_i for all nodes (dense (n,) scatter; zero off ΔV)."""
+        n = n or self.n_nodes
+        dwm = self.dw * self.mask
+        ds = jnp.zeros((n,), dtype=self.dw.dtype)
+        ds = ds.at[self.senders].add(dwm, mode="drop")
+        ds = ds.at[self.receivers].add(dwm, mode="drop")
+        return ds
+
+    def delta_s_total(self) -> jax.Array:
+        """ΔS = Σ_i Δs_i = 2 Σ_E Δw."""
+        return 2.0 * jnp.sum(self.dw * self.mask)
+
+    @staticmethod
+    def from_arrays(senders, receivers, dw, w_old, n_nodes: int,
+                    k_pad: Optional[int] = None) -> "GraphDelta":
+        senders = np.asarray(senders, np.int32)
+        receivers = np.asarray(receivers, np.int32)
+        lo = np.minimum(senders, receivers)
+        hi = np.maximum(senders, receivers)
+        dw = np.asarray(dw, np.float32)
+        w_old = np.asarray(w_old, np.float32)
+        k = len(senders)
+        if k_pad is None:
+            k_pad = max(k, 1)
+        pad = k_pad - k
+        z = np.zeros(pad, np.float32)
+        return GraphDelta(
+            senders=jnp.asarray(np.concatenate([lo, np.zeros(pad, np.int32)])),
+            receivers=jnp.asarray(np.concatenate([hi, np.zeros(pad, np.int32)])),
+            dw=jnp.asarray(np.concatenate([dw, z])),
+            w_old=jnp.asarray(np.concatenate([w_old, z])),
+            mask=jnp.asarray(np.concatenate([np.ones(k, np.float32), z])),
+            n_nodes=n_nodes,
+        )
+
+
+def apply_delta_dense(g: DenseGraph, delta: GraphDelta) -> DenseGraph:
+    """G' = G ⊕ ΔG on the dense representation (oracle path)."""
+    dwm = delta.dw * delta.mask
+    w = g.weights
+    w = w.at[delta.senders, delta.receivers].add(dwm, mode="drop")
+    w = w.at[delta.receivers, delta.senders].add(dwm, mode="drop")
+    return DenseGraph(weights=w, n_nodes=g.n_nodes)

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the FINGER compute hot-spots.
+
+- ``vnge_q``        : fused one-HBM-pass Lemma-1 statistics over dense W
+- ``bsr_spmv``      : block-sparse Laplacian matvec (λ_max power iteration)
+- ``entropy_probe`` : attention-graph VNGE stats from logits, A never in HBM
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with CPU interpret fallback) and ref.py (pure-jnp oracle).
+"""
+from repro.kernels.bsr_spmv.ops import (
+    BsrMatrix,
+    bsr_matvec,
+    dense_to_bsr,
+    power_iteration_lmax_bsr,
+)
+from repro.kernels.entropy_probe.ops import (
+    attention_graph_entropy,
+    attention_graph_stats,
+)
+from repro.kernels.vnge_q.ops import (
+    quadratic_q_dense,
+    vnge_q_stats,
+    vnge_tilde_dense,
+)

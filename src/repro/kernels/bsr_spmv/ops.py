@@ -1,0 +1,65 @@
+"""Public ops: BSR SpMV and the BSR-backed power iteration for λ_max."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bsr_spmv.kernel import bsr_matvec_pallas
+from repro.kernels.bsr_spmv.ref import BsrMatrix, bsr_matvec_ref, dense_to_bsr
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bsr_matvec(m: BsrMatrix, x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    if not use_pallas:
+        return bsr_matvec_ref(m, x)
+    return bsr_matvec_pallas(m.values, m.col_ids, x, interpret=not _on_tpu())
+
+
+def power_iteration_lmax_bsr(
+    m: BsrMatrix,
+    num_iters: int = 100,
+    tol: float = 1e-7,
+    seed: int = 0,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """λ_max of L_N = (S - W)/trace(L) with W in BSR form.
+
+    The matvec L x = s ∘ x - W x reuses the kernel; strengths come from
+    one W·1 matvec. Padding rows are all-zero and contribute λ = 0, so
+    they never perturb λ_max of the PSD matrix.
+    """
+    n = m.n
+    ones = jnp.ones((n,), jnp.float32)
+    s = bsr_matvec(m, ones, use_pallas=use_pallas)
+    s_total = jnp.sum(s)
+    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+
+    def ln_mv(x):
+        return c * (s * x - bsr_matvec(m, x, use_pallas=use_pallas))
+
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.normal(key, (n,), jnp.float32)
+    x0 = x0 / jnp.linalg.norm(x0)
+
+    def cond(carry):
+        i, _, lam, lam_prev = carry
+        rel = jnp.abs(lam - lam_prev) / jnp.maximum(jnp.abs(lam), 1e-30)
+        return jnp.logical_and(i < num_iters, rel > tol)
+
+    def body(carry):
+        i, x, lam, _ = carry
+        y = ln_mv(x)
+        norm = jnp.linalg.norm(y)
+        x_new = jnp.where(norm > 0, y / jnp.maximum(norm, 1e-30), x)
+        lam_new = jnp.dot(x_new, ln_mv(x_new))
+        return i + 1, x_new, lam_new, lam
+
+    lam0 = jnp.dot(x0, ln_mv(x0))
+    _, _, lam, _ = jax.lax.while_loop(cond, body, (0, x0, lam0, lam0 + 1.0))
+    return jnp.maximum(lam, 0.0)
+
+
+__all__ = ["BsrMatrix", "dense_to_bsr", "bsr_matvec", "power_iteration_lmax_bsr"]

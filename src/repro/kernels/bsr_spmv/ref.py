@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the BSR SpMV y = W x and its format helpers."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class BsrMatrix(NamedTuple):
+    """ELL-of-blocks sparse layout, MXU-aligned (DESIGN.md §3).
+
+    values:  (n_rb, max_bpr, b, b) f32 — dense blocks per row-stripe
+    col_ids: (n_rb, max_bpr) int32    — column-block index (0 for padding;
+                                        padded value blocks are all-zero,
+                                        so any id is numerically safe)
+    n:       padded matrix dimension (n_rb * b)
+    n_orig:  original dimension before padding
+    """
+
+    values: jax.Array
+    col_ids: jax.Array
+    n: int
+    n_orig: int
+
+    @property
+    def block(self) -> int:
+        return self.values.shape[-1]
+
+
+def dense_to_bsr(w: np.ndarray, b: int = 128) -> BsrMatrix:
+    """Host-side conversion. Keeps only blocks with any nonzero entry."""
+    n_orig = w.shape[0]
+    n = ((n_orig + b - 1) // b) * b
+    wp = np.zeros((n, n), dtype=np.float32)
+    wp[:n_orig, :n_orig] = w
+    n_rb = n // b
+    tiles = wp.reshape(n_rb, b, n_rb, b).transpose(0, 2, 1, 3)  # (rb, cb, b, b)
+    nz = np.abs(tiles).sum(axis=(2, 3)) > 0  # (rb, cb)
+    max_bpr = max(int(nz.sum(axis=1).max()), 1)
+    values = np.zeros((n_rb, max_bpr, b, b), dtype=np.float32)
+    col_ids = np.zeros((n_rb, max_bpr), dtype=np.int32)
+    for r in range(n_rb):
+        cols = np.nonzero(nz[r])[0]
+        for k, cidx in enumerate(cols):
+            values[r, k] = tiles[r, cidx]
+            col_ids[r, k] = cidx
+    return BsrMatrix(jnp.asarray(values), jnp.asarray(col_ids), n, n_orig)
+
+
+def bsr_density(m: BsrMatrix) -> float:
+    """Fraction of stored blocks that are real (non-padding)."""
+    n_rb, max_bpr = m.col_ids.shape
+    stored = n_rb * max_bpr
+    return float(stored * m.block * m.block) / float(m.n * m.n)
+
+
+def bsr_matvec_ref(m: BsrMatrix, x: jax.Array) -> jax.Array:
+    """y = W x on the BSR layout, pure jnp (oracle)."""
+    b = m.block
+    n_rb, max_bpr = m.col_ids.shape
+    xb = x.reshape(n_rb, b)  # column blocks == row blocks (square)
+
+    def row(vals_r, cols_r):
+        gathered = xb[cols_r]  # (max_bpr, b)
+        return jnp.einsum("kij,kj->i", vals_r, gathered)
+
+    y = jax.vmap(row)(m.values, m.col_ids)
+    return y.reshape(-1)

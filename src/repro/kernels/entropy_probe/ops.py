@@ -1,0 +1,44 @@
+"""Public op: per-head attention-graph VNGE statistics and entropies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.entropy_probe.kernel import attention_graph_stats_pallas
+from repro.kernels.entropy_probe.ref import (
+    attention_graph_stats_ref,
+    entropy_from_stats,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention_graph_stats(
+    logits: jax.Array, bs: int = 128, use_pallas: bool = True,
+) -> jax.Array:
+    """logits (BH, S, S) → (BH, 4) [S_tot, Σs², Σ_E w², s_max] of the
+    symmetrized zero-diagonal attention graph. Never materializes A in
+    HBM on the Pallas path."""
+    if not use_pallas or logits.shape[-1] % bs != 0:
+        return attention_graph_stats_ref(logits)
+    scal, colsum, diag = attention_graph_stats_pallas(
+        logits, bs=bs, interpret=not _on_tpu())
+    sum_a2, cross, sum_d2 = scal[:, 0], scal[:, 1], scal[:, 2]
+    r = 1.0 - diag          # row sums of A minus the diagonal
+    c = colsum - diag       # column sums minus the diagonal
+    s = 0.5 * (r + c)       # strengths of W = (A + Aᵀ)/2, zero diag
+    s_total = jnp.sum(s, axis=-1)
+    sum_s2 = jnp.sum(s * s, axis=-1)
+    sum_w2 = 0.25 * (sum_a2 - sum_d2) + 0.25 * (cross - sum_d2)
+    s_max = jnp.max(s, axis=-1)
+    return jnp.stack([s_total, sum_s2, sum_w2, s_max], axis=-1)
+
+
+def attention_graph_entropy(
+    logits: jax.Array, bs: int = 128, use_pallas: bool = True,
+) -> jax.Array:
+    """FINGER-H̃ of each head's attention graph, (BH,) f32."""
+    return entropy_from_stats(
+        attention_graph_stats(logits, bs=bs, use_pallas=use_pallas))

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle: attention-graph VNGE statistics from raw logits.
+
+Interprets each head's attention matrix A = softmax(logits) as a weighted
+directed graph, symmetrizes W = (A + Aᵀ)/2 with a zeroed diagonal, and
+returns the Lemma-1 sufficient statistics of W per (batch·head):
+
+  [S = Σ s_i, Σ s_i², Σ_E w_ij², s_max]
+
+This is the object the FINGER telemetry probes (DESIGN.md §5) feed into
+Q / H̃ / JS-distance tracking across layers and steps. The oracle
+materializes the full (S, S) attention matrix; the Pallas kernel must
+match it without ever writing A to HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_graph_stats_ref(logits: jax.Array) -> jax.Array:
+    """logits: (BH, S, S) → (BH, 4) f32 [S_tot, Σs², Σ_E w², s_max]."""
+    a = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    n = a.shape[-1]
+    eye = jnp.eye(n, dtype=a.dtype)
+    w = 0.5 * (a + jnp.swapaxes(a, -1, -2)) * (1.0 - eye)
+
+    s = jnp.sum(w, axis=-1)  # (BH, S)
+    s_total = jnp.sum(s, axis=-1)
+    sum_s2 = jnp.sum(s * s, axis=-1)
+    sum_w2 = 0.5 * jnp.sum(w * w, axis=(-1, -2))
+    s_max = jnp.max(s, axis=-1)
+    return jnp.stack([s_total, sum_s2, sum_w2, s_max], axis=-1)
+
+
+def entropy_from_stats(stats: jax.Array) -> jax.Array:
+    """FINGER-H̃ (eq. 2) per head from the 4-vector statistics."""
+    s_total, sum_s2, sum_w2, s_max = (
+        stats[..., 0], stats[..., 1], stats[..., 2], stats[..., 3])
+    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+    q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+    arg = jnp.clip(2.0 * c * s_max, 1e-30, None)
+    return -q * jnp.log(arg)

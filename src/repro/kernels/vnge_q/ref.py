@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused Lemma-1 reduction over a dense W.
+
+Returns the four sufficient statistics (S, Σ s_i², Σ_E w_ij², s_max) in a
+single conceptual pass; the Pallas kernel must match this bit-for-bit up
+to float accumulation order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vnge_q_stats_ref(w: jax.Array) -> jax.Array:
+    """w: (n, n) symmetric, zero diagonal. Returns (4,) f32:
+    [S, sum_s2, sum_w2_edges, s_max]."""
+    w = w.astype(jnp.float32)
+    s = jnp.sum(w, axis=1)
+    s_total = jnp.sum(s)
+    sum_s2 = jnp.sum(s * s)
+    sum_w2 = 0.5 * jnp.sum(w * w)  # each undirected edge appears twice in W
+    s_max = jnp.max(s)
+    return jnp.stack([s_total, sum_s2, sum_w2, s_max])
+
+
+def q_from_stats(stats: jax.Array) -> jax.Array:
+    s_total, sum_s2, sum_w2 = stats[0], stats[1], stats[2]
+    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+    return 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)

@@ -1,0 +1,320 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the first import of jax in the process: the placeholder-device
+flag below is read at first jax initialization.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above must precede every other import)
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
+from repro.configs.archs import ARCH_IDS
+from repro.distributed.sharding import (
+    ShardingRules,
+    multi_pod_rules,
+    single_pod_rules,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import (
+    build_forward_fn,
+    input_logical_axes,
+    input_specs,
+    model_param_defs,
+)
+from repro.models.params import count_params, param_specs, param_structs
+from repro.optim.adamw import AdamWConfig, AdamWState
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.train.step import build_serve_step, build_train_step
+
+# TPU v5e hardware constants for the roofline terms (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9            # B/s
+ICI_BW = 50e9             # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """Assignment skip rules (documented in DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        runnable = (cfg.family in ("ssm", "hybrid")
+                    or (cfg.sliding_window and not cfg.local_global_period))
+        if not runnable:
+            return ("full-attention arch: 500k decode requires "
+                    "sub-quadratic attention (DESIGN.md §5)")
+    if cfg.is_encoder_decoder and shape.name == "long_500k":
+        return "enc-dec audio arch: 500k decode not meaningful"
+    return None
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes of every collective op in the (SPMD) HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    # lines look like: %all-gather.5 = bf16[4608,2,128]{...} all-gather(...)
+    pat = re.compile(
+        r"=\s+(?:\()?((?:\w+\[[\d,]*\](?:\{[^}]*\})?(?:,\s*)?)+)(?:\))?\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\(")
+    for m in pat.finditer(hlo_text):
+        shapes, op = m.groups()
+        nbytes = sum(_shape_bytes(s) for s in re.findall(r"\w+\[[\d,]*\]",
+                                                         shapes))
+        out[op] += nbytes
+    return out
+
+
+def _opt_state_structs(p_structs, moment_dtype=jnp.float32):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, moment_dtype)
+    mom = jax.tree_util.tree_map(f32, p_structs)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=mom,
+                      nu=jax.tree_util.tree_map(
+                          lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                          mom))
+
+
+def _opt_state_specs(p_specs):
+    return AdamWState(step=P(), mu=p_specs,
+                      nu=jax.tree_util.tree_map(lambda s: s, p_specs))
+
+
+def _axes_to_specs(axes_tree, rules: ShardingRules, batch_replicated: bool):
+    def one(axes):
+        if batch_replicated:
+            axes = tuple(None if a == "batch" else a for a in axes)
+        return rules.spec_for(axes)
+
+    return jax.tree_util.tree_map(
+        one, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and not hasattr(x, "_fields"))
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                verbose: bool = True, n_microbatches: int = 0,
+                triangular: bool = False, remat_policy: str = "full",
+                serve_resident: bool = False,
+                bf16_norms: bool = False) -> Dict:
+    cfg = get_config(arch)
+    if triangular or remat_policy != "full" or bf16_norms:
+        cfg = dataclasses.replace(cfg, flash_triangular=triangular,
+                                  remat_policy=remat_policy,
+                                  norm_f32=not bf16_norms)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    result: Dict = {"arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if multi_pod else "16x16"}
+    if reason:
+        result.update(status="SKIP", reason=reason)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rules = multi_pod_rules(16) if multi_pod else single_pod_rules(16)
+    batch_shards = 1
+    for ax in rules.batch:
+        batch_shards *= mesh.shape[ax]
+    batch_replicated = shape.global_batch % batch_shards != 0
+    if batch_replicated:
+        rules = dataclasses.replace(rules, batch=())
+        if shape.kind == "decode":
+            # idle data axis -> spread the KV sequence over (data, model)
+            rules = dataclasses.replace(rules, seq_kv_over_data=True)
+    if serve_resident and shape.kind == "decode":
+        # §Perf: serving keeps weights resident (model-axis sharded only)
+        # instead of FSDP-gathering per layer per token.
+        rules = dataclasses.replace(rules, fsdp=None)
+
+    defs = model_param_defs(cfg, rules)
+    p_structs = param_structs(defs, dtype=jnp.bfloat16)
+    p_specs = param_specs(defs, rules)
+    in_specs_model = input_specs(cfg, shape, rules)
+    in_axes = input_logical_axes(cfg, shape, rules)
+    batch_pspecs = _axes_to_specs(in_axes, rules, batch_replicated)
+
+    def ns(spec_tree):
+        from jax.sharding import NamedSharding
+        return jax.tree_util.tree_map(
+            lambda sp: NamedSharding(mesh, sp), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    p_specs = ns(p_specs)
+    batch_pspecs = ns(batch_pspecs)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            n_params = count_params(defs)
+            big = n_params > 100e9  # bf16 optimizer state tier (DESIGN §6)
+            mdt = jnp.bfloat16 if big else jnp.float32
+            opt_structs = _opt_state_structs(p_structs, mdt)
+            opt_specs = ns(_opt_state_specs(param_specs(defs, rules)))
+            rows_per_dev = max(shape.global_batch // batch_shards, 1)
+            default_micro = rows_per_dev if big else max(1, rows_per_dev // 2)
+            micro = n_microbatches or max(1, min(default_micro, 16))
+            while shape.global_batch % (micro * batch_shards) and micro > 1:
+                micro -= 1
+            result["n_microbatches"] = micro
+            step = build_train_step(cfg, rules, AdamWConfig(),
+                                    n_microbatches=micro, acc_dtype=mdt)
+            jitted = jax.jit(step,
+                             in_shardings=(p_specs, opt_specs, batch_pspecs),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_structs, opt_structs, in_specs_model)
+        elif shape.kind == "prefill":
+            fwd = build_forward_fn(cfg, rules)
+            jitted = jax.jit(fwd, in_shardings=(p_specs, batch_pspecs))
+            lowered = jitted.lower(p_structs, in_specs_model)
+        else:  # decode
+            serve = build_serve_step(cfg, rules)
+            jitted = jax.jit(
+                serve,
+                in_shardings=(p_specs, batch_pspecs["tokens"],
+                              batch_pspecs["cache"], ns(P())),
+                donate_argnums=(2,))
+            lowered = jitted.lower(p_structs, in_specs_model["tokens"],
+                                   in_specs_model["cache"],
+                                   in_specs_model["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo_text = compiled.as_text()
+    corrected = hlo_analyze(hlo_text)  # loop-aware (see hlo_analysis.py)
+
+    flops = float(corrected["flops"])
+    bytes_hbm = float(corrected["bytes"])
+    coll = {k: float(v) for k, v in corrected["collectives"].items()}
+    coll_total = float(corrected["collective_bytes"])
+
+    # MODEL_FLOPS: 6·N_active·tokens for train, 2·N_active·tokens else.
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    flops_per_tok = (6.0 if shape.kind == "train" else 2.0) \
+        * cfg.n_active_params()
+    model_flops_per_device = flops_per_tok * tokens / n_chips
+    result.update(
+        status="OK",
+        n_chips=n_chips,
+        n_params=count_params(defs),
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        # cost_analysis is per-device (post-SPMD); roofline terms are
+        # per-device seconds directly.
+        device_flops=flops,
+        device_bytes=bytes_hbm,
+        raw_cost_flops=float(cost.get("flops", 0.0)),
+        raw_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        model_flops_per_device=model_flops_per_device,
+        useful_flops_ratio=(model_flops_per_device / flops) if flops else 0.0,
+        collective_bytes=coll,
+        collective_total=coll_total,
+        compute_term_s=flops / PEAK_FLOPS_BF16,
+        memory_term_s=bytes_hbm / HBM_BW,
+        collective_term_s=coll_total / ICI_BW,
+        mem_args_gb=round(mem.argument_size_in_bytes / 2**30, 3),
+        mem_out_gb=round(mem.output_size_in_bytes / 2**30, 3),
+        mem_temp_gb=round(mem.temp_size_in_bytes / 2**30, 3),
+        mem_total_gb=round((mem.argument_size_in_bytes
+                            + mem.output_size_in_bytes
+                            + mem.temp_size_in_bytes) / 2**30, 3),
+        # donated inputs alias outputs (params/opt for train, cache for
+        # decode), so the true per-device peak is args + temp.
+        mem_peak_gb=round((mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes) / 2**30, 3),
+        fits_hbm=bool((mem.argument_size_in_bytes
+                       + mem.temp_size_in_bytes) / 2**30 <= 16.0),
+        batch_replicated=batch_replicated,
+    )
+    terms = {"compute": result["compute_term_s"],
+             "memory": result["memory_term_s"],
+             "collective": result["collective_term_s"]}
+    result["bottleneck"] = max(terms, key=terms.get)
+    if verbose:
+        print(json.dumps(result, indent=None, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="FINGER framework dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--triangular", action="store_true")
+    ap.add_argument("--remat-policy", default="full")
+    ap.add_argument("--serve-resident", action="store_true")
+    ap.add_argument("--bf16-norms", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    r = dryrun_cell(arch, shape, multi_pod=mp,
+                                    n_microbatches=args.microbatches,
+                                    triangular=args.triangular,
+                                    remat_policy=args.remat_policy,
+                                    serve_resident=args.serve_resident,
+                                    bf16_norms=args.bf16_norms)
+                except Exception as e:  # a failure here is a bug
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "FAIL", "error": repr(e)[:500]}
+                    print(json.dumps(r), file=sys.stderr)
+                results.append(r)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(r, default=str) + "\n")
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status'] == 'OK' for r in results)} OK, "
+          f"{sum(r['status'] == 'SKIP' for r in results)} SKIP, "
+          f"{n_fail} FAIL")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

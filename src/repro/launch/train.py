@@ -1,0 +1,121 @@
+"""Training launcher: end-to-end driver with checkpointing, resume,
+FINGER telemetry, straggler monitoring and optional grad compression.
+
+CPU-scale usage (examples/ wrap this):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.pipeline import synthetic_batch
+from repro.distributed.compression import init_residuals
+from repro.distributed.sharding import NO_SHARDING
+from repro.models.api import model_param_defs
+from repro.models.params import count_params, init_params
+from repro.optim.adamw import AdamWConfig, init_state
+from repro.train.checkpoint import save_checkpoint
+from repro.train.fault_tolerance import StragglerMonitor, maybe_resume
+from repro.train.step import build_train_step
+from repro.train.telemetry import (
+    RoutingGraphTracker,
+    attention_entropy_probe,
+    routing_graph,
+)
+
+
+def run(cfg, steps: int, batch_size: int, seq: int, ckpt_dir=None,
+        ckpt_every: int = 50, probe_every: int = 10, seed: int = 0,
+        compress: bool = False, lr: float = 1e-3, log=print):
+    rules = NO_SHARDING
+    defs = model_param_defs(cfg, rules)
+    log(f"model {cfg.name}: {count_params(defs)/1e6:.1f}M params")
+    params = init_params(defs, jax.random.PRNGKey(seed))
+    opt_cfg = AdamWConfig(lr_peak=lr, warmup_steps=min(20, steps // 5 + 1),
+                          total_steps=steps)
+    opt_state = init_state(params)
+    residuals = init_residuals(params) if compress else None
+
+    start_step = 0
+    if ckpt_dir:
+        state_tpl = {"params": params, "opt": opt_state}
+        restored, start_step = maybe_resume(ckpt_dir, state_tpl)
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            log(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(build_train_step(cfg, rules, opt_cfg,
+                                       compress_grads=compress))
+    monitor = StragglerMonitor()
+    tracker = RoutingGraphTracker()
+    history = []
+    for step in range(start_step, steps):
+        batch = synthetic_batch(cfg, batch_size, seq, seed, step)
+        monitor.start()
+        if compress:
+            params, opt_state, residuals, metrics = step_fn(
+                params, opt_state, residuals, batch)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        straggler = monitor.stop()
+        rec = {"step": step, "loss": float(metrics["loss"]),
+               "grad_norm": float(metrics["grad_norm"]),
+               "straggler": straggler}
+        if probe_every and step % probe_every == 0 and not cfg.is_encoder_decoder:
+            ent = attention_entropy_probe(params, batch["tokens"], cfg, rules,
+                                          probe_len=min(seq, 128),
+                                          use_pallas=False)
+            if ent is not None:
+                rec["attn_entropy_mean"] = float(jnp.mean(ent))
+            g = routing_graph(params, batch, cfg, rules)
+            d = tracker.update(g, step)
+            if d is not None:
+                rec["routing_jsdist"] = d
+        history.append(rec)
+        if step % max(1, steps // 20) == 0 or step == steps - 1:
+            log(json.dumps(rec))
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state},
+                            metadata={"arch": cfg.name})
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, {"params": params, "opt": opt_state},
+                        metadata={"arch": cfg.name})
+    return params, opt_state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--probe-every", type=int, default=10)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    t0 = time.time()
+    _, _, history = run(cfg, args.steps, args.batch, args.seq,
+                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                        probe_every=args.probe_every, lr=args.lr,
+                        compress=args.compress_grads)
+    print(f"done in {time.time()-t0:.1f}s; "
+          f"loss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

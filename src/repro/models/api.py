@@ -1,0 +1,141 @@
+"""Unified model API: param defs, train/serve step builders, input specs.
+
+Every architecture exposes the same surface:
+
+  defs        = model_param_defs(cfg, rules)
+  loss        = build_loss_fn(cfg, rules)(params, batch)
+  serve       = build_decode_fn(cfg, rules)(params, tokens, cache, pos)
+  specs       = input_specs(cfg, shape, rules)   # ShapeDtypeStructs only
+
+The dry-run lowers `train_step`/`serve_step` against `input_specs`; smoke
+tests call the same builders with `cfg.reduced()` and real arrays.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import transformer, whisper
+from repro.models.transformer import n_periods  # noqa: F401 (re-export)
+
+
+def model_param_defs(cfg: ModelConfig, rules: ShardingRules) -> Dict:
+    if cfg.is_encoder_decoder:
+        return whisper.param_defs(cfg, rules)
+    return transformer.param_defs(cfg, rules)
+
+
+def build_loss_fn(cfg: ModelConfig, rules: ShardingRules, remat: bool = True):
+    if cfg.is_encoder_decoder:
+        def loss(params, batch):
+            return whisper.loss_fn(params, batch, cfg, rules)
+        return loss
+
+    def loss(params, batch):
+        return transformer.lm_loss(params, batch, cfg, rules, remat=remat)
+
+    return loss
+
+
+def build_forward_fn(cfg: ModelConfig, rules: ShardingRules,
+                     remat: bool = True):
+    """Prefill path: returns full-sequence logits (inference-prefill)."""
+    if cfg.is_encoder_decoder:
+        def fwd(params, batch):
+            enc = whisper.encode(params, batch["frames"], cfg, rules)
+            return whisper.decode_train(params, batch["tokens"], enc, cfg,
+                                        rules)
+        return fwd
+
+    def fwd(params, batch):
+        logits, _ = transformer.forward(
+            params, batch["tokens"], cfg, rules,
+            extra_embeds=batch.get("extra_embeds"), remat=remat)
+        return logits
+
+    return fwd
+
+
+def build_decode_fn(cfg: ModelConfig, rules: ShardingRules):
+    if cfg.is_encoder_decoder:
+        def step(params, tokens, cache, pos):
+            return whisper.decode_step(params, tokens, cache, pos, cfg, rules)
+        return step
+
+    def step(params, tokens, cache, pos):
+        return transformer.decode_step(params, tokens, cache, pos, cfg, rules)
+
+    return step
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int,
+               rules: ShardingRules):
+    if cfg.is_encoder_decoder:
+        return whisper.cache_spec(cfg, batch, seq_len, rules)
+    return transformer.cache_spec(cfg, batch, seq_len, rules)
+
+
+def init_cache_arrays(cfg: ModelConfig, batch: int, seq_len: int,
+                      rules: ShardingRules):
+    structs, _ = cache_spec(cfg, batch, seq_len, rules)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), structs)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rules: ShardingRules) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train    : {tokens (B,S), labels (B,S)[, frames/extra_embeds]}
+    prefill  : {tokens (B,S)[, frames/extra_embeds]}
+    decode   : {tokens (B,1), cache, pos ()}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            specs = {
+                "frames": jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+                "tokens": tok(b, s),
+            }
+        elif cfg.frontend == "vision_stub":
+            nf = cfg.n_frontend_tokens
+            specs = {
+                "tokens": tok(b, s - nf),
+                "extra_embeds": jax.ShapeDtypeStruct(
+                    (b, nf, cfg.d_model), jnp.bfloat16),
+            }
+        else:
+            specs = {"tokens": tok(b, s)}
+        if shape.kind == "train":
+            specs["labels"] = tok(*specs["tokens"].shape)
+        return specs
+    # decode: one new token against a seq_len cache
+    structs, _ = cache_spec(cfg, b, s, rules)
+    return {
+        "tokens": tok(b, 1),
+        "cache": structs,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def input_logical_axes(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: ShardingRules) -> Dict:
+    """Logical sharding axes matching input_specs' structure."""
+    if shape.kind in ("train", "prefill"):
+        axes = {"tokens": ("batch", None)}
+        if cfg.is_encoder_decoder:
+            axes["frames"] = ("batch", None, None)
+        elif cfg.frontend == "vision_stub":
+            axes["extra_embeds"] = ("batch", None, None)
+        if shape.kind == "train":
+            axes["labels"] = ("batch", None)
+        return axes
+    _, cache_axes = cache_spec(cfg, shape.global_batch, shape.seq_len, rules)
+    return {"tokens": ("batch", None), "cache": cache_axes, "pos": ()}

@@ -1,0 +1,87 @@
+"""Shared neural layers: norms, RoPE, gated MLPs, embeddings, softcaps."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             upcast: bool = True) -> jax.Array:
+    dt = x.dtype
+    if upcast:
+        x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(y.dtype))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 style soft capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin = jnp.sin(ang)[..., None, :]  # (..., S, 1, D/2) broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """Gated MLP: down( act(x·gate) ∘ (x·up) ). GeGLU when act='gelu'."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return jnp.einsum("...f,fd->...d", a * u, w_down)
+
+
+def embed(tokens: jax.Array, table: jax.Array,
+          scale_by_dim: bool = False) -> jax.Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.sqrt(jnp.asarray(table.shape[-1], x.dtype))
+    return x
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits via the (possibly tied) embedding table (V, D)."""
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-level CE with f32 log-sum-exp; logits may be bf16 and
+    vocab-sharded (the reductions keep the vocab axis local)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,218 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked-parallel form.
+
+The selective state space recurrence per head h (head dim p, state n):
+
+  S_t = exp(-exp(A_log)·dt_t) · S_{t-1} + dt_t · (B_t ⊗ x_t)
+  y_t = C_t · S_t + D · x_t
+
+is evaluated with the SSD chunk decomposition (arXiv:2405.21060): the
+sequence is split into chunks of length `c`; within a chunk the dual
+quadratic (attention-like) form is used, across chunks a `lax.scan`
+carries the (h, n, p) state. Both paths are MXU einsums — the
+TPU-idiomatic replacement for the CUDA selective-scan kernel
+(hardware-adaptation note in DESIGN.md §3).
+
+SSD heads shard over "model" (padded to the TP degree like attention
+heads; padded heads have zero out_proj rows → exact no-ops).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain, pad_to_multiple
+from repro.models.layers import rms_norm
+from repro.models.params import PDef
+
+
+def ssm_dims(cfg: ModelConfig, rules: ShardingRules) -> Tuple[int, int, int]:
+    """(n_heads_eff, head_dim, d_state)."""
+    h = cfg.d_inner // cfg.ssm_head_dim
+    tp = rules.tp_size if rules and rules.tensor else 1
+    if tp > 1 and h % tp != 0:
+        h = pad_to_multiple(h, tp)
+    return h, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_param_defs(cfg: ModelConfig, n_layers: int, rules: ShardingRules):
+    d = cfg.d_model
+    h, p_dim, n = ssm_dims(cfg, rules)
+    di = h * p_dim  # effective (padded) inner width
+    L = n_layers
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": PDef((L, d, 2 * di + 2 * n + h),
+                        ("layers", "embed", "d_inner")),
+        "conv_w": PDef((L, cfg.ssm_conv, conv_ch), ("layers", None, "d_inner")),
+        "conv_b": PDef((L, conv_ch), ("layers", "d_inner"), init="zeros"),
+        "a_log": PDef((L, h), ("layers", "d_inner"), init="zeros"),
+        "d_skip": PDef((L, h), ("layers", "d_inner"), init="ones"),
+        "dt_bias": PDef((L, h), ("layers", "d_inner"), init="zeros"),
+        "norm": PDef((L, di), ("layers", "d_inner"), init="zeros"),
+        "out_proj": PDef((L, di, d), ("layers", "d_inner", "embed")),
+    }
+
+
+class SsmState(NamedTuple):
+    """Decode cache: recurrent state + conv tail."""
+
+    s: jax.Array       # (B, h, n, p) f32
+    conv: jax.Array    # (B, conv_width-1, conv_channels)
+
+
+def _split_proj(zxbcdt, di, n, h):
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + n]
+    c = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xs, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + bias)
+
+
+def ssd_mixer(
+    p,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    chunk: int = 128,
+) -> jax.Array:
+    """Full-sequence (train/prefill) SSD pass."""
+    bsz, s, _ = x.shape
+    h, pd, n = ssm_dims(cfg, rules)
+    di = h * pd
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    zxbcdt = constrain(zxbcdt, rules, ("batch", None, "d_inner"))
+    z, xs, b, c, dt = _split_proj(zxbcdt, di, n, h)
+    xbc = _causal_conv(jnp.concatenate([xs, b, c], -1),
+                       p["conv_w"], p["conv_b"])
+    xs, b, c = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,h)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (h,) negative
+    log_da = dt * a  # (B,S,h) log decay ≤ 0
+    xh = xs.reshape(bsz, s, h, pd).astype(jnp.float32)
+    dtx = xh * dt[..., None]  # dt-scaled input
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    # --- chunked SSD ---
+    lda = log_da.reshape(bsz, nc, chunk, h)
+    cum = jnp.cumsum(lda, axis=2)  # within-chunk cumulative log decay
+    total = cum[:, :, -1, :]  # (B,nc,h)
+
+    bc_ = bf.reshape(bsz, nc, chunk, n)
+    cc_ = cf.reshape(bsz, nc, chunk, n)
+    dtxc = dtx.reshape(bsz, nc, chunk, h, pd)
+
+    # intra-chunk (dual quadratic form): y_q += Σ_{k≤q} C_q·B_k decay(q,k) dtx_k
+    scores = jnp.einsum("bmqn,bmkn->bmqk", cc_, bc_)  # (B,nc,q,k)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,q,k,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # clamp BEFORE exp: masked (future) pairs have decay > 0 and would
+    # overflow; where(mask, inf, 0) back-propagates 0·inf = NaN.
+    decay = jnp.where(causal[None, None, :, :, None], decay, -1e30)
+    gate = jnp.exp(decay)
+    y_intra = jnp.einsum("bmqk,bmqkh,bmkhp->bmqhp", scores, gate, dtxc)
+
+    # chunk summary states: S_m = Σ_k decay_to_end(k) B_k ⊗ dtx_k
+    to_end = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,k,h)
+    s_chunk = jnp.einsum("bmkn,bmkh,bmkhp->bmhnp", bc_, to_end, dtxc)
+
+    # inter-chunk recurrence over summaries
+    def step(s_prev, inp):
+        s_c, tot = inp  # (B,h,n,p), (B,h)
+        s_new = s_prev * jnp.exp(tot)[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, pd), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (B,nc,h,n,p) state entering chunk
+
+    # inter-chunk contribution: y_q += C_q · S_prev · decay_from_start(q)
+    y_inter = jnp.einsum("bmqn,bmqh,bmhnp->bmqhp", cc_, jnp.exp(cum), s_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, pd)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"],
+                 cfg.norm_eps)
+    y = constrain(y, rules, ("batch", None, "d_inner"))
+    return jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), p["out_proj"])
+
+
+def ssd_decode_step(
+    p,
+    x: jax.Array,  # (B, 1, D)
+    state: SsmState,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+) -> Tuple[jax.Array, SsmState]:
+    """O(1) recurrent decode step."""
+    bsz = x.shape[0]
+    h, pd, n = ssm_dims(cfg, rules)
+    di = h * pd
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])[:, 0]
+    z, xs, b, c, dt = _split_proj(zxbcdt, di, n, h)
+    xbc = jnp.concatenate([xs, b, c], -1)[:, None, :]  # (B,1,C)
+    conv_in = jnp.concatenate([state.conv, xbc], axis=1)  # (B,K,C)
+    k = p["conv_w"].shape[0]
+    out = sum(conv_in[:, i, :] * p["conv_w"][i] for i in range(k))
+    xbc = jax.nn.silu(out + p["conv_b"])
+    xs, b, c = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B,h)
+    xh = xs.reshape(bsz, h, pd).astype(jnp.float32)
+    s_new = state.s * da[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", b.astype(jnp.float32), xh * dt[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), s_new)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"],
+                 cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y.astype(x.dtype), p["out_proj"])[:, None]
+    return out, SsmState(s=s_new, conv=conv_in[:, 1:, :])
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, rules: ShardingRules,
+                   dtype=jnp.float32):
+    h, pd, n = ssm_dims(cfg, rules)
+    di = h * pd
+    return SsmState(
+        s=jnp.zeros((batch, h, n, pd), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+    )
+
+
+def ssm_state_structs(cfg: ModelConfig, batch: int, rules: ShardingRules,
+                      dtype=jnp.float32):
+    h, pd, n = ssm_dims(cfg, rules)
+    di = h * pd
+    return SsmState(
+        s=jax.ShapeDtypeStruct((batch, h, n, pd), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+    )
+
+
+def ssm_state_axes():
+    return SsmState(s=("batch", "d_inner", None, None),
+                    conv=("batch", None, "d_inner"))

@@ -1,0 +1,72 @@
+"""Abstract parameter definitions: one source of truth for shapes, init,
+logical sharding axes — instantiated three ways (real init for training,
+ShapeDtypeStruct for the dry-run, NamedSharding for pjit)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    """Abstract parameter: shape + logical axes + init recipe."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def init_params(defs, key: jax.Array, dtype=jnp.float32):
+    """Materialize real weights (host/CPU smoke tests and examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_pdef)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(d: PDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        fan_in = d.shape[0] if len(d.shape) > 1 else d.shape[-1]
+        scale = d.scale if d.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(d, k) for d, k in zip(leaves, keys)])
+
+
+def param_structs(defs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree for .lower() — no allocation."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_pdef)
+
+
+def param_shardings(defs, mesh, rules: ShardingRules):
+    """NamedSharding pytree matching the params structure."""
+    return jax.tree_util.tree_map(
+        lambda d: named_sharding(mesh, rules, d.axes), defs, is_leaf=_is_pdef)
+
+
+def param_specs(defs, rules: ShardingRules):
+    """PartitionSpec pytree (for in_shardings on lowered functions)."""
+    return jax.tree_util.tree_map(
+        lambda d: rules.spec_for(d.axes), defs, is_leaf=_is_pdef)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=_is_pdef)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))

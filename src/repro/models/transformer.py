@@ -1,0 +1,334 @@
+"""Generic decoder-only LM covering the dense / MoE / hybrid / VLM / SSM
+families through one period-structured stack.
+
+Layers are grouped into *periods* — the smallest repeating pattern of the
+architecture (gemma2: [local, global]; jamba: [attn, 7×mamba] with MoE on
+odd positions; homogeneous archs: period 1). Each period position owns
+its stacked parameters with a leading `n_periods` axis, and the whole
+stack is a single `lax.scan` over periods with the period body lowered
+once — compile time is O(period), not O(layers), which is what makes the
+512-device dry-runs tractable (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain, padded_vocab
+from repro.models.attention import (
+    KVCache,
+    attention_block,
+    attn_param_defs,
+    decode_attention,
+)
+from repro.models.layers import (
+    cross_entropy_loss,
+    embed,
+    rms_norm,
+    softcap,
+    swiglu,
+    unembed,
+)
+from repro.models.mamba2 import (
+    init_ssm_state,
+    ssd_decode_step,
+    ssd_mixer,
+    ssm_param_defs,
+    ssm_state_axes,
+    ssm_state_structs,
+)
+from repro.models.moe import moe_ffn, moe_param_defs
+from repro.models.params import PDef
+
+
+def period_structure(cfg: ModelConfig) -> Tuple[int, List[Tuple[str, str, Optional[str]]]]:
+    """(period length P, [(mixer, attn_flavor, ffn_kind)] × P)."""
+    p = max(cfg.local_global_period, cfg.attn_period, cfg.moe_period, 1)
+    layers = []
+    for i in range(p):
+        if cfg.family == "ssm":
+            mixer = "ssm"
+        elif cfg.attn_period:
+            mixer = "attn" if i == 0 else "ssm"
+        else:
+            mixer = "attn"
+        if cfg.local_global_period:
+            flavor = "local" if i % cfg.local_global_period == 0 else "global"
+        elif cfg.sliding_window:
+            flavor = "local"
+        else:
+            flavor = "global"
+        if cfg.n_experts and i % cfg.moe_period == cfg.moe_period - 1:
+            ffn = "moe"
+        elif cfg.d_ff == 0:
+            ffn = None
+        else:
+            ffn = "ff"
+        layers.append((mixer, flavor, ffn))
+    return p, layers
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    p, _ = period_structure(cfg)
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    return cfg.n_layers // p
+
+
+def ffn_param_defs(cfg: ModelConfig, n_stack: int):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": PDef((n_stack, d, f), ("layers", "embed", "ff")),
+        "w_up": PDef((n_stack, d, f), ("layers", "embed", "ff")),
+        "w_down": PDef((n_stack, f, d), ("layers", "ff", "embed")),
+    }
+
+
+def param_defs(cfg: ModelConfig, rules: ShardingRules) -> Dict:
+    """Abstract parameter tree for the full model."""
+    p, layers = period_structure(cfg)
+    np_ = n_periods(cfg)
+    d = cfg.d_model
+    blocks: Dict[str, Dict] = {}
+    for i, (mixer, _flavor, ffn) in enumerate(layers):
+        grp: Dict = {"ln1": PDef((np_, d), ("layers", "embed"), init="zeros")}
+        if mixer == "attn":
+            grp["attn"] = attn_param_defs(cfg, rules, np_)
+            if cfg.local_global_period:  # gemma2 post-norms
+                grp["post_ln1"] = PDef((np_, d), ("layers", "embed"), init="zeros")
+        else:
+            grp["ssm"] = ssm_param_defs(cfg, np_, rules)
+        if ffn is not None:
+            grp["ln2"] = PDef((np_, d), ("layers", "embed"), init="zeros")
+            if ffn == "moe":
+                grp["moe"] = moe_param_defs(cfg, np_, rules)
+            else:
+                grp["ffn"] = ffn_param_defs(cfg, np_)
+            if cfg.local_global_period:
+                grp["post_ln2"] = PDef((np_, d), ("layers", "embed"), init="zeros")
+        blocks[f"L{i}"] = grp
+    vp = padded_vocab(cfg.vocab_size, rules)
+    defs: Dict = {
+        "embed": PDef((vp, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": PDef((d,), ("embed",), init="zeros"),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = PDef((vp, d), ("vocab", "embed"))
+    return defs
+
+
+def _remat_groups(n_p: int) -> int:
+    """Largest divisor of n_p not exceeding sqrt(n_p) (balanced 2-level
+    remat: saved stack and recompute span are both ~sqrt(n_p))."""
+    best = 1
+    g = 1
+    while g * g <= n_p:
+        if n_p % g == 0:
+            best = g
+        g += 1
+    return best
+
+
+def _mlp_act(cfg: ModelConfig) -> str:
+    return "gelu" if cfg.local_global_period else "silu"  # gemma2: GeGLU
+
+
+def _period_body(cfg: ModelConfig, rules: ShardingRules, layers, positions):
+    """Returns the scan body over one period (prefill/train path)."""
+
+    def body(carry, period_params):
+        x, aux = carry
+        for i, (mixer, flavor, ffn) in enumerate(layers):
+            pp = period_params[f"L{i}"]
+            h = rms_norm(x, pp["ln1"], cfg.norm_eps, cfg.norm_f32)
+            if mixer == "attn":
+                window = cfg.sliding_window if flavor == "local" else None
+                h = attention_block(pp["attn"], h, positions, cfg, rules,
+                                    causal=True, window=window)
+                if "post_ln1" in pp:
+                    h = rms_norm(h, pp["post_ln1"], cfg.norm_eps, cfg.norm_f32)
+            else:
+                h = ssd_mixer(pp["ssm"], h, cfg, rules)
+            x = x + h
+            x = constrain(x, rules, ("batch", None, None))
+            if ffn is not None:
+                h2 = rms_norm(x, pp["ln2"], cfg.norm_eps, cfg.norm_f32)
+                if ffn == "moe":
+                    h2, a = moe_ffn(pp["moe"], h2, cfg, rules)
+                    aux = aux + a
+                else:
+                    h2 = swiglu(h2, pp["ffn"]["w_gate"], pp["ffn"]["w_up"],
+                                pp["ffn"]["w_down"], act=_mlp_act(cfg))
+                if "post_ln2" in pp:
+                    h2 = rms_norm(h2, pp["post_ln2"], cfg.norm_eps, cfg.norm_f32)
+                x = x + h2
+                x = constrain(x, rules, ("batch", None, None))
+        return (x, aux), None
+
+    return body
+
+
+def forward(
+    params,
+    tokens: jax.Array,  # (B, S) int32
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    extra_embeds: Optional[jax.Array] = None,  # (B, S_front, D) modality stub
+    remat: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S_total, V), aux_loss)."""
+    x = embed(tokens, params["embed"],
+              scale_by_dim=bool(cfg.local_global_period))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, rules, ("batch", None, None))
+    s_total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_total)[None, :],
+                                 (x.shape[0], s_total))
+    _, layers = period_structure(cfg)
+    body = _period_body(cfg, rules, layers, positions)
+    remat = remat and cfg.remat_policy != "none"
+    if remat:
+        policy = None
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        body = jax.checkpoint(body, policy=policy)
+    n_p = n_periods(cfg)
+    groups = _remat_groups(n_p) if remat else 1
+    if groups > 1:
+        # Hierarchical remat: only every group boundary's activation is
+        # saved across the outer scan; the inner scan recomputes within a
+        # group. Cuts the O(n_periods · B · S · D) saved-carry stack ~g×.
+        def group_body(carry, group_params):
+            return jax.lax.scan(body, carry, group_params)
+
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(groups, n_p // groups, *a.shape[1:]),
+            params["blocks"])
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(group_body),
+                                   (x, jnp.zeros((), jnp.float32)), grouped)
+    else:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    logits = _logits(params, x, cfg, rules)
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig, rules: ShardingRules,
+            aux_weight: float = 0.01, remat: bool = True) -> jax.Array:
+    """Next-token CE (+ MoE aux). batch: {tokens, labels[, extra_embeds]}."""
+    logits, aux = forward(params, batch["tokens"], cfg, rules,
+                          extra_embeds=batch.get("extra_embeds"), remat=remat)
+    n_front = logits.shape[1] - batch["labels"].shape[1]
+    if n_front:
+        logits = logits[:, n_front:]
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss + aux_weight * aux
+
+
+def _logits(params, x, cfg: ModelConfig, rules: ShardingRules):
+    """Unembed + softcap + padded-vocab -inf mask."""
+    table = params.get("lm_head", params["embed"])
+    logits = unembed(x, table)
+    logits = softcap(logits, cfg.logit_softcap)
+    vp = table.shape[0]
+    if vp != cfg.vocab_size:  # mask padded rows (numerically invisible)
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logits = constrain(logits, rules, ("batch", None, "vocab"))
+    return logits
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int,
+               rules: ShardingRules):
+    """(structs, logical_axes) pytrees for the decode cache dict."""
+    _, layers = period_structure(cfg)
+    np_ = n_periods(cfg)
+    structs, axes = {}, {}
+
+    def stack(sds):
+        return jax.ShapeDtypeStruct((np_,) + tuple(sds.shape), sds.dtype)
+
+    for i, (mixer, flavor, _ffn) in enumerate(layers):
+        if mixer == "attn":
+            length = seq_len
+            if flavor == "local" and cfg.sliding_window:
+                length = min(cfg.sliding_window, seq_len)
+            sd = KVCache.shape(cfg, batch, length, rules)
+            structs[f"L{i}"] = KVCache(k=stack(sd), v=stack(sd))
+            la = KVCache.logical_axes(cfg, rules)
+            axes[f"L{i}"] = KVCache(k=("layers",) + la, v=("layers",) + la)
+        else:
+            ss = ssm_state_structs(cfg, batch, rules)
+            structs[f"L{i}"] = type(ss)(s=stack(ss.s), conv=stack(ss.conv))
+            sa = ssm_state_axes()
+            axes[f"L{i}"] = type(sa)(s=("layers",) + sa.s,
+                                     conv=("layers",) + sa.conv)
+    return structs, axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               rules: ShardingRules):
+    structs, _ = cache_spec(cfg, batch, seq_len, rules)
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  structs)
+
+
+def decode_step(
+    params,
+    tokens: jax.Array,  # (B, 1)
+    cache,
+    pos: jax.Array,  # () int32 current position
+    cfg: ModelConfig,
+    rules: ShardingRules,
+) -> Tuple[jax.Array, Dict]:
+    """One serve step: logits for the next token + updated caches."""
+    x = embed(tokens, params["embed"],
+              scale_by_dim=bool(cfg.local_global_period))
+    x = constrain(x, rules, ("batch", None, None))
+    _, layers = period_structure(cfg)
+
+    def body(x_carry, scan_in):
+        x_, = (x_carry,)
+        period_params, cache_in = scan_in
+        cache_out = {}
+        for i, (mixer, flavor, ffn) in enumerate(layers):
+            pp = period_params[f"L{i}"]
+            h = rms_norm(x_, pp["ln1"], cfg.norm_eps, cfg.norm_f32)
+            if mixer == "attn":
+                window = cfg.sliding_window if flavor == "local" else None
+                h, new_c = decode_attention(
+                    pp["attn"], h, cache_in[f"L{i}"], pos, cfg, rules,
+                    window=window, attn_softcap_val=cfg.attn_softcap)
+                if "post_ln1" in pp:
+                    h = rms_norm(h, pp["post_ln1"], cfg.norm_eps, cfg.norm_f32)
+            else:
+                h, new_c = ssd_decode_step(pp["ssm"], h, cache_in[f"L{i}"],
+                                           cfg, rules)
+            cache_out[f"L{i}"] = new_c
+            x_ = x_ + h
+            if ffn is not None:
+                h2 = rms_norm(x_, pp["ln2"], cfg.norm_eps, cfg.norm_f32)
+                if ffn == "moe":
+                    h2, _ = moe_ffn(pp["moe"], h2, cfg, rules)
+                else:
+                    h2 = swiglu(h2, pp["ffn"]["w_gate"], pp["ffn"]["w_up"],
+                                pp["ffn"]["w_down"], act=_mlp_act(cfg))
+                if "post_ln2" in pp:
+                    h2 = rms_norm(h2, pp["post_ln2"], cfg.norm_eps, cfg.norm_f32)
+                x_ = x_ + h2
+        return x_, cache_out
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    logits = _logits(params, x, cfg, rules)
+    return logits, new_cache

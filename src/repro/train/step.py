@@ -1,0 +1,89 @@
+"""train_step / serve_step builders — the functions the launcher jits
+(and the dry-run lowers) with explicit in/out shardings.
+
+Memory discipline (DESIGN.md §6): the global batch is split into
+`n_microbatches` processed by a `lax.scan` with f32 (or bf16 for ≥100B
+models) gradient accumulation — live activation memory scales with the
+microbatch, which is what fits 27B–400B training on a 256-chip pod. The
+accumulation scan also naturally overlaps each microbatch's gradient
+all-reduce with the next microbatch's compute under XLA's async
+collectives.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import compress_with_feedback
+from repro.distributed.sharding import ShardingRules
+from repro.models.api import build_decode_fn, build_loss_fn
+from repro.optim.adamw import AdamWConfig, apply_update
+
+
+def build_train_step(cfg: ModelConfig, rules: ShardingRules,
+                     opt_cfg: AdamWConfig, compress_grads: bool = False,
+                     remat: bool = True, n_microbatches: int = 1,
+                     acc_dtype=jnp.float32):
+    loss_fn = build_loss_fn(cfg, rules, remat=remat)
+
+    def grads_of(params, batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, jax.tree_util.tree_map(
+                lambda g: g.astype(acc_dtype), grads)
+
+        def mb_step(acc, mb):
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), acc, g)
+            return acc, loss
+
+        def split(x):
+            m = n_microbatches
+            assert x.shape[0] % m == 0, (x.shape, m)
+            return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(split, batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        grads, losses = jax.lax.scan(mb_step, zeros, mbs)
+        inv = 1.0 / n_microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        return jnp.mean(losses), grads
+
+    if compress_grads:
+        def train_step(params, opt_state, residuals, batch):
+            loss, grads = grads_of(params, batch)
+            grads, residuals = compress_with_feedback(grads, residuals)
+            params, opt_state, metrics = apply_update(
+                params, grads, opt_state, opt_cfg)
+            metrics["loss"] = loss
+            return params, opt_state, residuals, metrics
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, metrics = apply_update(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: ModelConfig, rules: ShardingRules,
+                     greedy: bool = True):
+    decode = build_decode_fn(cfg, rules)
+
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = decode(params, tokens, cache, pos)
+        if greedy:
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        else:
+            next_tok = tokens
+        return next_tok.astype(jnp.int32), logits, cache
+
+    return serve_step

@@ -1,0 +1,145 @@
+"""FINGER telemetry probes — the paper's technique as a first-class
+training/serving feature (DESIGN.md §5).
+
+The paper's object is a *graph sequence*; during training the model
+itself emits two natural graph sequences:
+
+1. **Attention graphs**: each head's softmax matrix is a weighted
+   directed graph over tokens. `attention_entropy_probe` recomputes the
+   first block's attention logits on a probe slice and feeds the fused
+   Pallas `entropy_probe` kernel — per-head VNGE (H̃) without
+   materializing attention in HBM. Drift of this entropy across steps =
+   the paper's anomaly signal, applied to training dynamics.
+
+2. **MoE routing graphs**: top-k expert assignments induce an
+   expert-coactivation graph per step; `RoutingGraphTracker` maintains
+   FINGER-JS distances between consecutive steps' routing graphs
+   (Algorithm 1 with H̃ entropies) and flags anomalies — a routing
+   collapse shows up as a JS-distance spike exactly like the paper's DoS
+   events.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.jsdist import _js_from_entropies
+from repro.distributed.sharding import ShardingRules
+from repro.graphs.types import DenseGraph
+from repro.kernels.entropy_probe.ops import attention_graph_entropy
+from repro.kernels.vnge_q.ops import vnge_q_stats
+from repro.models.attention import qkv_project
+from repro.models.layers import embed, rms_norm
+from repro.models.transformer import period_structure
+
+
+def attention_entropy_probe(
+    params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    probe_len: int = 256,
+    use_pallas: bool = True,
+) -> Optional[jax.Array]:
+    """Per-head VNGE of the first attention layer's graph, (B·H,) f32.
+
+    Returns None for attention-free architectures (DESIGN.md
+    §Arch-applicability: mamba2 has no attention graph).
+    """
+    _, layers = period_structure(cfg)
+    attn_idx = next((i for i, (m, _, _) in enumerate(layers) if m == "attn"),
+                    None)
+    if attn_idx is None:
+        return None
+    toks = tokens[:, :probe_len]
+    x = embed(toks, params["embed"],
+              scale_by_dim=bool(cfg.local_global_period))
+    pp = jax.tree_util.tree_map(lambda a: a[0],
+                                params["blocks"][f"L{attn_idx}"])
+    h = rms_norm(x, pp["ln1"], cfg.norm_eps)
+    positions = jnp.broadcast_to(jnp.arange(toks.shape[1])[None],
+                                 toks.shape)
+    q, k, v = qkv_project(pp["attn"], h, positions, cfg, rules)
+    kmap_n = q.shape[2] // max(k.shape[2], 1)
+    k = jnp.repeat(k, kmap_n, axis=2)[:, :, : q.shape[2]]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    # causal mask (the probe analyses the graph the model actually uses)
+    s = toks.shape[1]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    bh = logits.shape[0] * logits.shape[1]
+    return attention_graph_entropy(
+        logits.reshape(bh, s, s), use_pallas=use_pallas)
+
+
+def routing_graph(params, batch, cfg: ModelConfig, rules: ShardingRules,
+                  probe_tokens: int = 4096) -> Optional[DenseGraph]:
+    """Expert-coactivation graph of the first MoE layer on this batch."""
+    if not cfg.n_experts:
+        return None
+    _, layers = period_structure(cfg)
+    moe_idx = next((i for i, (_, _, f) in enumerate(layers) if f == "moe"),
+                   None)
+    if moe_idx is None:
+        return None
+    x = embed(batch["tokens"], params["embed"],
+              scale_by_dim=bool(cfg.local_global_period))
+    pp = jax.tree_util.tree_map(lambda a: a[0],
+                                params["blocks"][f"L{moe_idx}"])
+    xt = x.reshape(-1, x.shape[-1])[:probe_tokens]
+    logits = jnp.einsum("td,de->te", xt, pp["moe"]["router"])
+    k = max(cfg.top_k, 2)  # need pairs; top-1 archs use top-2 co-candidates
+    _, top_e = jax.lax.top_k(logits, k)
+    e = cfg.n_experts
+    w = jnp.zeros((e, e), jnp.float32)
+    for a in range(k):
+        for b in range(a + 1, k):
+            w = w.at[top_e[:, a], top_e[:, b]].add(1.0)
+    w = w + w.T
+    w = w * (1.0 - jnp.eye(e))
+    return DenseGraph(weights=w, n_nodes=e)
+
+
+def _h_tilde_dense(g: DenseGraph) -> jax.Array:
+    stats = vnge_q_stats(g.weights)
+    s_total, sum_s2, sum_w2, s_max = stats[0], stats[1], stats[2], stats[3]
+    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+    q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+    return -q * jnp.log(jnp.clip(2.0 * c * s_max, 1e-30, None))
+
+
+@dataclasses.dataclass
+class RoutingGraphTracker:
+    """JS-distance stream over routing graphs + z-score anomaly flags."""
+
+    z_threshold: float = 3.0
+    prev: Optional[DenseGraph] = None
+    distances: List[float] = dataclasses.field(default_factory=list)
+    anomalies: List[int] = dataclasses.field(default_factory=list)
+
+    def update(self, g: Optional[DenseGraph], step: int) -> Optional[float]:
+        if g is None:
+            return None
+        if self.prev is None:
+            self.prev = g
+            return None
+        avg = DenseGraph(weights=0.5 * (g.weights + self.prev.weights),
+                         n_nodes=g.n_nodes)
+        d = float(_js_from_entropies(
+            _h_tilde_dense(avg), _h_tilde_dense(self.prev), _h_tilde_dense(g)))
+        self.prev = g
+        hist = self.distances
+        if len(hist) >= 8:
+            mu = float(np.mean(hist))
+            sd = float(np.std(hist)) + 1e-9
+            if (d - mu) / sd > self.z_threshold:
+                self.anomalies.append(step)
+        self.distances.append(d)
+        return d

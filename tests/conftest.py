@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 device; only the dry-run subprocesses get 512."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _f32_default():
+    # keep tests deterministic across jax versions
+    yield

@@ -1,0 +1,107 @@
+"""Beyond-paper extensions: cubic proxy Q₃ and the directed-graph VNGE
+(the paper's declared future work)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import exact_vnge, quadratic_q, vnge_hat
+from repro.core.directed import (
+    directed_quadratic_q,
+    directed_vnge,
+    directed_vnge_hat,
+    generalized_laplacian,
+)
+from repro.core.higher_order import cubic_q, spectral_moments_3, vnge_hat3
+from repro.graphs import DenseGraph
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.spectral import exact_eigvals_ln
+
+
+class TestCubicProxy:
+    def test_moments_match_eigenspectrum(self):
+        g = erdos_renyi(60, 0.15, seed=0, weighted=True)
+        ev = np.asarray(exact_eigvals_ln(g))
+        _, m2, m3 = spectral_moments_3(g)
+        np.testing.assert_allclose(float(m2), float((ev ** 2).sum()),
+                                   rtol=1e-4)
+        np.testing.assert_allclose(float(m3), float((ev ** 3).sum()),
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_cubic_worse_on_balanced_spectra(self, seed):
+        """NEGATIVE RESULT (documents the paper's design choice): for
+        balanced spectra (λ ~ 1/n) the z=2 series term adds ≈ +½ and the
+        cubic proxy is farther from H/ln n than the quadratic."""
+        g = erdos_renyi(120, 0.3, seed=seed)
+        h = float(exact_vnge(g)) / np.log(120)
+        q2 = float(quadratic_q(g))
+        q3 = float(cubic_q(g))
+        assert abs(q2 - h) < abs(q3 - h)
+        assert 1.3 < q3 < 1.7  # the ≈ +1/2 inflation, as derived
+
+    def test_cubic_helps_near_one_eigenvalues(self):
+        """The cubic term helps only where the expansion point is close
+        to the eigenvalue mass (tiny graphs, λ = 1/(n−1) not << 1)."""
+        n = 3  # complete K3: λ = 1/2, 1/2 — near the x=1 expansion point
+        w = jnp.ones((n, n)) - jnp.eye(n)
+        g = DenseGraph.from_weights(w)
+        h = float(exact_vnge(g))  # = ln 2
+        q2 = float(quadratic_q(g))
+        q3 = float(cubic_q(g))
+        assert abs(q3 - h) < abs(q2 - h)
+
+    def test_hhat3_finite(self):
+        g = erdos_renyi(80, 0.2, seed=1)
+        assert np.isfinite(float(vnge_hat3(g)))
+
+
+class TestDirectedVnge:
+    def _directed(self, n=50, seed=0):
+        rng = np.random.default_rng(seed)
+        w = (rng.random((n, n)) < 0.1).astype(np.float32)
+        np.fill_diagonal(w, 0.0)
+        return jnp.asarray(w)
+
+    def test_entropy_bounded(self):
+        w = self._directed()
+        h = float(directed_vnge(w))
+        assert 0.0 <= h <= np.log(50)
+
+    def test_quadratic_proxy_matches_spectrum(self):
+        w = self._directed(seed=2)
+        from repro.core.directed import generalized_laplacian
+
+        l = generalized_laplacian(w)
+        ln = np.asarray(l / jnp.trace(l))
+        ev = np.linalg.eigvalsh(ln)
+        q_spec = 1.0 - float((ev ** 2).sum())
+        q = float(directed_quadratic_q(w))
+        np.testing.assert_allclose(q, q_spec, rtol=1e-4)
+
+    def test_hat_lower_bounds_exact(self):
+        w = self._directed(seed=3)
+        assert float(directed_vnge_hat(w)) <= float(directed_vnge(w)) + 1e-2
+
+    def test_reduces_to_undirected(self):
+        """On a symmetric W the directed machinery stays consistent:
+        same entropy whether W is fed as directed or symmetrized."""
+        g = erdos_renyi(40, 0.2, seed=4)
+        w = g.weights
+        h1 = float(directed_vnge(w))
+        h2 = float(directed_vnge(jnp.asarray(np.asarray(w))))
+        np.testing.assert_allclose(h1, h2, rtol=1e-6)
+        assert 0.0 <= h1 <= np.log(40)
+
+    def test_distinguishes_structure(self):
+        """Directed structure is visible: a cycle and a funnel (all edges
+        into one node) get materially different entropies."""
+        n = 30
+        w_cycle = np.zeros((n, n), np.float32)
+        for i in range(n):
+            w_cycle[i, (i + 1) % n] = 1.0
+        w_funnel = np.zeros((n, n), np.float32)
+        w_funnel[1:, 0] = 1.0
+        h_cycle = float(directed_vnge(jnp.asarray(w_cycle)))
+        h_funnel = float(directed_vnge(jnp.asarray(w_funnel)))
+        assert abs(h_cycle - h_funnel) > 0.1

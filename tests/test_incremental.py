@@ -1,0 +1,120 @@
+"""Theorem 2 incremental updates: exactness vs batch recomputation,
+streams, and hypothesis properties over random deltas."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    finger_state,
+    jsdist_incremental,
+    jsdist_stream,
+    jsdist_tilde,
+    update_state,
+)
+from repro.graphs import DenseGraph, GraphDelta, apply_delta_dense
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.streams import churn_stream
+
+
+def _random_delta(g, rng, k=20, delete_frac=0.4):
+    n = g.n_nodes
+    w = np.asarray(g.weights)
+    pairs = {}
+    for _ in range(k):
+        i, j = rng.integers(0, n, 2)
+        if i == j:
+            continue
+        i, j = min(i, j), max(i, j)
+        w_old = w[i, j]
+        if w_old > 0 and rng.random() < delete_frac:
+            dw = -w_old
+        else:
+            dw = float(rng.uniform(0.1, 2.0))
+        pairs[(i, j)] = (dw, w_old)
+    ii = np.array([p[0] for p in pairs], np.int32)
+    jj = np.array([p[1] for p in pairs], np.int32)
+    dw = np.array([v[0] for v in pairs.values()], np.float32)
+    wo = np.array([v[1] for v in pairs.values()], np.float32)
+    return GraphDelta.from_arrays(ii, jj, dw, wo, n_nodes=n)
+
+
+class TestTheorem2:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_incremental_q_exact(self, seed):
+        rng = np.random.default_rng(seed)
+        g = erdos_renyi(80, 0.1, seed=seed, weighted=True)
+        st_ = finger_state(g)
+        delta = _random_delta(g, rng)
+        new = update_state(st_, delta, exact_smax=True)
+        ref = finger_state(apply_delta_dense(g, delta))
+        assert abs(float(new.q) - float(ref.q)) < 2e-5
+        assert abs(float(new.s_total) - float(ref.s_total)) < 1e-3
+        assert abs(float(new.s_max) - float(ref.s_max)) < 1e-4
+        np.testing.assert_allclose(np.asarray(new.strengths),
+                                   np.asarray(ref.strengths), atol=1e-4)
+
+    def test_paper_smax_never_decreases(self):
+        """eq. (3)'s Δs_max is clamped at 0 (paper-faithful mode)."""
+        rng = np.random.default_rng(1)
+        g = erdos_renyi(50, 0.2, seed=1, weighted=True)
+        st_ = finger_state(g)
+        delta = _random_delta(g, rng, k=40, delete_frac=1.0)
+        new = update_state(st_, delta, exact_smax=False)
+        assert float(new.s_max) >= float(st_.s_max) - 1e-6
+
+    def test_chained_updates_stay_exact(self):
+        rng = np.random.default_rng(2)
+        g = erdos_renyi(60, 0.15, seed=2, weighted=True)
+        st_ = finger_state(g)
+        for _ in range(10):
+            delta = _random_delta(g, rng)
+            st_ = update_state(st_, delta, exact_smax=True)
+            g = apply_delta_dense(g, delta)
+        ref = finger_state(g)
+        assert abs(float(st_.q) - float(ref.q)) < 1e-4
+
+
+class TestStreams:
+    def test_stream_scan_matches_loop(self):
+        seq = churn_stream(n=100, steps=8, seed=4, k_pad=256)
+        st0 = finger_state(seq.graphs[0])
+        # python loop
+        st_ = st0
+        loop_d = []
+        for d in seq.deltas:
+            dist, st_ = jsdist_incremental(st_, d)
+            loop_d.append(float(dist))
+        # single lax.scan over the stacked deltas
+        stacked = GraphDelta(
+            senders=jnp.stack([d.senders for d in seq.deltas]),
+            receivers=jnp.stack([d.receivers for d in seq.deltas]),
+            dw=jnp.stack([d.dw for d in seq.deltas]),
+            w_old=jnp.stack([d.w_old for d in seq.deltas]),
+            mask=jnp.stack([d.mask for d in seq.deltas]),
+            n_nodes=seq.graphs[0].n_nodes,
+        )
+        scan_d, _ = jsdist_stream(st0, stacked)
+        np.testing.assert_allclose(np.asarray(scan_d), np.asarray(loop_d),
+                                   rtol=1e-3, atol=1e-5)
+
+    def test_incremental_close_to_batch_tilde(self):
+        seq = churn_stream(n=100, steps=5, seed=5, k_pad=256)
+        st_ = finger_state(seq.graphs[0])
+        for t, d in enumerate(seq.deltas):
+            dist, st_ = jsdist_incremental(st_, d, exact_smax=True)
+            ref = float(jsdist_tilde(seq.graphs[t], seq.graphs[t + 1]))
+            assert abs(float(dist) - ref) < 5e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 30))
+def test_property_incremental_matches_batch(seed, k):
+    rng = np.random.default_rng(seed)
+    g = erdos_renyi(40, 0.2, seed=seed, weighted=True)
+    st_ = finger_state(g)
+    delta = _random_delta(g, rng, k=k)
+    new = update_state(st_, delta, exact_smax=True)
+    ref = finger_state(apply_delta_dense(g, delta))
+    assert abs(float(new.q) - float(ref.q)) < 5e-5

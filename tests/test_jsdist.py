@@ -1,0 +1,90 @@
+"""Jensen–Shannon graph distance: Algorithms 1 & 2 and metric properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    average_graph,
+    finger_state,
+    jsdist_exact,
+    jsdist_fast,
+    jsdist_incremental,
+    jsdist_tilde,
+)
+from repro.graphs import DenseGraph
+from repro.graphs.generators import erdos_renyi
+
+
+class TestMetricProperties:
+    def test_identity(self):
+        g = erdos_renyi(60, 0.1, seed=0)
+        assert float(jsdist_fast(g, g)) < 1e-4
+        assert float(jsdist_exact(g, g)) < 1e-3
+
+    def test_symmetry(self):
+        g1 = erdos_renyi(60, 0.1, seed=1)
+        g2 = erdos_renyi(60, 0.1, seed=2)
+        for fn in (jsdist_fast, jsdist_exact, jsdist_tilde):
+            assert abs(float(fn(g1, g2)) - float(fn(g2, g1))) < 1e-5
+
+    def test_nonnegative(self):
+        for s in range(4):
+            g1 = erdos_renyi(40, 0.15, seed=s, weighted=True)
+            g2 = erdos_renyi(40, 0.15, seed=s + 100, weighted=True)
+            assert float(jsdist_fast(g1, g2)) >= 0.0
+
+    def test_triangle_inequality_exact(self):
+        """JSdist (exact) is a metric (Endres & Schindelin 2003)."""
+        gs = [erdos_renyi(30, 0.2, seed=s, weighted=True) for s in range(3)]
+        d01 = float(jsdist_exact(gs[0], gs[1]))
+        d12 = float(jsdist_exact(gs[1], gs[2]))
+        d02 = float(jsdist_exact(gs[0], gs[2]))
+        assert d02 <= d01 + d12 + 1e-5
+
+
+class TestAlgorithms:
+    def test_average_graph(self):
+        g1 = erdos_renyi(40, 0.2, seed=0, weighted=True)
+        g2 = erdos_renyi(40, 0.2, seed=1, weighted=True)
+        gbar = average_graph(g1, g2)
+        np.testing.assert_allclose(
+            np.asarray(gbar.weights),
+            0.5 * (np.asarray(g1.weights) + np.asarray(g2.weights)),
+            rtol=1e-6)
+
+    def test_fast_approximates_exact(self):
+        """Algorithm 1 tracks the exact JS distance (same ordering of
+        near/far pairs)."""
+        base = erdos_renyi(100, 0.1, seed=5)
+        near = erdos_renyi(100, 0.1, seed=5)  # identical
+        w = np.asarray(base.weights).copy()
+        w[:30, :30] = 0  # large perturbation
+        far = DenseGraph.from_weights(jnp.asarray(w))
+        d_near = float(jsdist_fast(base, near))
+        d_far = float(jsdist_fast(base, far))
+        assert d_near < d_far
+
+    def test_incremental_matches_batch_tilde(self):
+        from repro.graphs.streams import churn_stream
+
+        seq = churn_stream(n=80, steps=4, seed=6, k_pad=128)
+        st_ = finger_state(seq.graphs[0])
+        for t, d in enumerate(seq.deltas):
+            dist, st_ = jsdist_incremental(st_, d, exact_smax=True)
+            ref = float(jsdist_tilde(seq.graphs[t], seq.graphs[t + 1]))
+            assert abs(float(dist) - ref) < 5e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(s1=st.integers(0, 1000), s2=st.integers(0, 1000))
+def test_property_symmetry_nonneg(s1, s2):
+    g1 = erdos_renyi(30, 0.2, seed=s1)
+    g2 = erdos_renyi(30, 0.2, seed=s2)
+    if float(jnp.sum(g1.weights)) == 0 or float(jnp.sum(g2.weights)) == 0:
+        return
+    d12 = float(jsdist_fast(g1, g2, power_iters=50))
+    d21 = float(jsdist_fast(g2, g1, power_iters=50))
+    assert d12 >= 0
+    assert abs(d12 - d21) < 1e-4

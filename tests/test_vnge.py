@@ -1,0 +1,121 @@
+"""Core FINGER invariants: Lemma 1, eq. (1), eq. (2), Theorem 1,
+Corollaries (asymptotic decay) — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    exact_vnge,
+    quadratic_q,
+    scaled_approximation_error,
+    theorem1_bounds,
+    vnge_hat,
+    vnge_tilde,
+)
+from repro.graphs import DenseGraph, EdgeList
+from repro.graphs.generators import barabasi_albert, erdos_renyi, watts_strogatz
+from repro.graphs.spectral import exact_eigvals_ln, power_iteration_lmax
+
+
+def _random_graph(n, p, seed, weighted=False):
+    return erdos_renyi(n, p, seed=seed, weighted=weighted)
+
+
+class TestLemma1:
+    def test_q_equals_one_minus_sum_sq_eigs(self):
+        g = _random_graph(80, 0.1, 0)
+        ev = exact_eigvals_ln(g)
+        q_spec = 1.0 - float(jnp.sum(ev * ev))
+        q = float(quadratic_q(g))
+        assert abs(q - q_spec) < 1e-5
+
+    def test_q_edge_list_matches_dense(self):
+        g = _random_graph(60, 0.12, 1, weighted=True)
+        el = EdgeList.from_dense(g)
+        assert abs(float(quadratic_q(g)) - float(quadratic_q(el))) < 1e-5
+
+
+class TestOrdering:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_htilde_le_hhat_le_h(self, seed):
+        g = _random_graph(100, 0.08, seed, weighted=seed % 2 == 0)
+        h = float(exact_vnge(g))
+        hh = float(vnge_hat(g))
+        ht = float(vnge_tilde(g))
+        assert ht <= hh + 1e-4, (ht, hh)
+        assert hh <= h + 1e-3, (hh, h)
+
+    def test_h_le_ln_n_minus_1(self):
+        for seed in range(3):
+            g = _random_graph(64, 0.2, seed)
+            assert float(exact_vnge(g)) <= np.log(63) + 1e-5
+
+
+class TestTheorem1:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_bounds_sandwich(self, seed):
+        g = _random_graph(90, 0.1, seed)
+        lo, hi = theorem1_bounds(g)
+        h = float(exact_vnge(g))
+        assert float(lo) - 1e-4 <= h <= float(hi) + 1e-4
+
+    def test_complete_graph_exact(self):
+        n = 40
+        w = jnp.ones((n, n)) - jnp.eye(n)
+        g = DenseGraph.from_weights(w)
+        h = float(exact_vnge(g))
+        assert abs(h - np.log(n - 1)) < 1e-4
+        lo, hi = theorem1_bounds(g)
+        assert abs(float(lo) - h) < 1e-3 and abs(float(hi) - h) < 1e-3
+
+
+class TestPowerIteration:
+    @pytest.mark.parametrize("gen", ["er", "ba", "ws"])
+    def test_lambda_max_matches_eigvalsh(self, gen):
+        g = {"er": erdos_renyi(120, 0.08, seed=3),
+             "ba": barabasi_albert(120, 4, seed=3),
+             "ws": watts_strogatz(120, 6, 0.2, seed=3)}[gen]
+        lam_pi = float(power_iteration_lmax(g, num_iters=300, tol=1e-10))
+        lam_ex = float(exact_eigvals_ln(g)[-1])
+        assert abs(lam_pi - lam_ex) / lam_ex < 1e-3
+
+
+class TestAsymptotics:
+    def test_sae_decays_for_er(self):
+        """Corollary 2: SAE of Ĥ decays with n for balanced spectra."""
+        saes = []
+        for n in (200, 400, 800):
+            g = erdos_renyi(n, 20.0 / n, seed=7)
+            h = exact_vnge(g)
+            hh = vnge_hat(g)
+            saes.append(float(scaled_approximation_error(h, hh, n)))
+        assert saes[-1] < saes[0]
+
+    def test_sae_decays_for_htilde(self):
+        """Corollary 3: same decay for H̃."""
+        saes = []
+        for n in (200, 400, 800):
+            g = erdos_renyi(n, 20.0 / n, seed=9)
+            saes.append(float(scaled_approximation_error(
+                exact_vnge(g), vnge_tilde(g), n)))
+        assert saes[-1] < saes[0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 40), seed=st.integers(0, 10_000),
+       p=st.floats(0.05, 0.6))
+def test_property_invariants(n, seed, p):
+    """Property: for any random graph, 0 ≤ H̃ ≤ Ĥ ≤ H ≤ ln(n-1), Q ∈ [0, 1)."""
+    g = erdos_renyi(n, p, seed=seed)
+    if float(jnp.sum(g.weights)) == 0.0:
+        return  # empty graph: trivial
+    q = float(quadratic_q(g))
+    h = float(exact_vnge(g))
+    hh = float(vnge_hat(g, power_iters=200))
+    ht = float(vnge_tilde(g))
+    assert 0.0 <= q < 1.0
+    assert ht <= hh + 1e-3 <= h + 2e-3
+    assert h <= np.log(max(n - 1, 2)) + 1e-4
+    assert ht >= -1e-5
