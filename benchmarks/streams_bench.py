@@ -1,0 +1,102 @@
+"""Batched multi-stream engine vs per-stream Python loop: ticks/sec.
+
+One "tick" advances every stream by one GraphDelta and emits one JSdist
+score per stream. The per-stream loop dispatches B jitted Algorithm-2
+steps from Python; the engine runs one vmapped step for all B streams.
+
+    PYTHONPATH=src python benchmarks/streams_bench.py
+"""
+import argparse
+import sys
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import emit, time_fn  # noqa: E402
+
+from repro.core import finger_state, jsdist_incremental  # noqa: E402
+from repro.engine import StreamEngine, stack_deltas  # noqa: E402
+from repro.graphs.generators import erdos_renyi  # noqa: E402
+from repro.graphs.types import GraphDelta  # noqa: E402
+
+
+def _random_deltas(graphs, rng, k, k_pad):
+    out = []
+    for g in graphs:
+        n = g.n_nodes
+        w = np.asarray(g.weights)
+        iu, ju = np.triu_indices(n, k=1)
+        pick = rng.choice(len(iu), size=k, replace=False)
+        ii, jj = iu[pick], ju[pick]
+        w_old = w[ii, jj]
+        dw = np.where(w_old > 0, -w_old, 1.0).astype(np.float32)
+        out.append(GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n,
+                                          k_pad=k_pad))
+    return out
+
+
+def bench_batch(b: int, n: int, k: int, method: str):
+    rng = np.random.default_rng(b)
+    graphs = [erdos_renyi(n, 0.08, seed=s, weighted=True)
+              for s in range(b)]
+    deltas = _random_deltas(graphs, rng, k, k_pad=k)
+    stacked = stack_deltas(deltas)
+
+    # --- per-stream Python loop (one jitted step, B dispatches/tick) ---
+    step = jax.jit(lambda s, d: jsdist_incremental(s, d, method=method))
+    loop_states = [finger_state(g) for g in graphs]
+
+    def loop_tick():
+        return [step(s, d)[0] for s, d in zip(loop_states, deltas)]
+
+    t_loop = time_fn(lambda: jax.block_until_ready(loop_tick()))
+
+    # --- batched engine (one vmapped dispatch/tick) --------------------
+    engine = StreamEngine(method=method)
+    states = StreamEngine.init_states(graphs)
+    # tick() donates the state; re-feed the returned one so the timed
+    # closure is steady-state serving, not repeated donation errors.
+    holder = {"st": states}
+
+    def engine_tick():
+        dists, holder["st"] = engine.tick(holder["st"], stacked)
+        return dists
+
+    t_engine = time_fn(lambda: jax.block_until_ready(engine_tick()))
+
+    emit(f"streams_loop_b{b}_{method}", t_loop,
+         f"{b / t_loop:.0f} stream-ticks/s")
+    emit(f"streams_engine_b{b}_{method}", t_engine,
+         f"{b / t_engine:.0f} stream-ticks/s")
+    return t_loop, t_engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=128)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--batches", type=int, nargs="*",
+                    default=[8, 64, 256])
+    ap.add_argument("--method", default="dense",
+                    choices=["dense", "compact"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    wins = {}
+    for b in args.batches:
+        t_loop, t_engine = bench_batch(b, args.nodes, args.k, args.method)
+        wins[b] = t_engine < t_loop
+        print(f"# B={b}: engine speedup {t_loop / t_engine:.1f}x")
+    big = [b for b in args.batches if b >= 64]
+    if big and all(wins[b] for b in big):
+        print("# PASS: vmapped engine wins at every B >= 64")
+    elif big:
+        print("# FAIL: per-stream loop won somewhere at B >= 64")
+
+
+if __name__ == "__main__":
+    main()

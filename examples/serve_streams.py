@@ -1,0 +1,109 @@
+"""Multi-stream serving example: B concurrent graph streams, one
+JSdist anomaly score per stream per tick, from the batched engine.
+
+One stream gets a planted DoS-style fan-in burst halfway through; the
+engine's per-stream scores single it out while serving every other
+stream in the same vmapped tick.
+
+    PYTHONPATH=src python examples/serve_streams.py --streams 256 --ticks 20
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.engine import StreamEngine, stack_deltas
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.types import GraphDelta
+
+
+def churn_delta(w: np.ndarray, rng, k: int, k_pad: int,
+                iu: np.ndarray, ju: np.ndarray) -> GraphDelta:
+    """Toggle k random node pairs (background churn for one stream).
+
+    Mutates `w` in place — the host mirror stays current without a
+    device round-trip per stream per tick. `iu`/`ju` are the shared
+    upper-triangle indices (hoisted out of the per-stream loop).
+    """
+    n = w.shape[0]
+    pick = rng.choice(len(iu), size=k, replace=False)
+    ii, jj = iu[pick], ju[pick]
+    w_old = w[ii, jj]
+    dw = np.where(w_old > 0, -w_old, 1.0).astype(np.float32)
+    d = GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n, k_pad=k_pad)
+    w[ii, jj] += dw
+    w[jj, ii] += dw
+    return d
+
+
+def dos_delta(w: np.ndarray, rng, frac: float, k_pad: int) -> GraphDelta:
+    """Fan-in burst: frac·n nodes all connect to one target (in place)."""
+    n = w.shape[0]
+    target = int(rng.integers(0, n))
+    botnet = rng.choice(np.setdiff1d(np.arange(n), [target]),
+                        size=max(1, int(frac * n)), replace=False)
+    w_old = w[botnet, target]
+    dw = (1.0 - w_old).astype(np.float32)
+    keep = np.abs(dw) > 1e-12
+    ii, jj = botnet[keep], np.full(int(keep.sum()), target)
+    d = GraphDelta.from_arrays(ii, jj, dw[keep], w_old[keep], n_nodes=n,
+                               k_pad=k_pad)
+    w[ii, jj] += dw[keep]
+    w[jj, ii] += dw[keep]
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=256)
+    ap.add_argument("--nodes", type=int, default=128)
+    ap.add_argument("--ticks", type=int, default=20)
+    ap.add_argument("--churn", type=int, default=16, help="edges/tick")
+    ap.add_argument("--dos-frac", type=float, default=0.25)
+    ap.add_argument("--method", default="dense",
+                    choices=["dense", "compact"])
+    args = ap.parse_args()
+
+    b, n = args.streams, args.nodes
+    rng = np.random.default_rng(0)
+    k_pad = max(args.churn, int(args.dos_frac * n)) + 1
+    attack_stream = int(rng.integers(0, b))
+    attack_tick = args.ticks // 2
+
+    graphs = [erdos_renyi(n, 0.08, seed=s, weighted=False)
+              for s in range(b)]
+    ws = [np.asarray(g.weights).copy() for g in graphs]
+    iu, ju = np.triu_indices(n, k=1)
+
+    engine = StreamEngine(method=args.method)
+    states = StreamEngine.init_states(graphs)
+
+    scores = np.zeros((args.ticks, b), np.float32)
+    t0 = time.time()
+    for t in range(args.ticks):
+        deltas = []
+        for s in range(b):
+            if s == attack_stream and t == attack_tick:
+                deltas.append(dos_delta(ws[s], rng, args.dos_frac, k_pad))
+            else:
+                deltas.append(churn_delta(ws[s], rng, args.churn, k_pad,
+                                          iu, ju))
+        dists, states = engine.tick(states, stack_deltas(deltas))
+        scores[t] = np.asarray(dists)
+    dt = time.time() - t0
+
+    flagged_tick, flagged_stream = np.unravel_index(scores.argmax(),
+                                                    scores.shape)
+    rate = args.ticks * b / dt
+    print(f"served {b} streams x {args.ticks} ticks in {dt:.2f}s "
+          f"({rate:.0f} stream-ticks/s incl. host delta synthesis)")
+    print(f"planted DoS: stream {attack_stream} at tick {attack_tick}")
+    print(f"top score  : stream {flagged_stream} at tick {flagged_tick} "
+          f"(JSdist {scores[flagged_tick, flagged_stream]:.4f}; "
+          f"background median {np.median(scores):.4f})")
+    hit = (flagged_stream == attack_stream and flagged_tick == attack_tick)
+    print("DETECTED" if hit else "MISSED")
+
+
+if __name__ == "__main__":
+    main()

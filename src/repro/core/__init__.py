@@ -5,7 +5,12 @@ Exact VNGE, the Lemma-1 quadratic proxy Q, FINGER-Ĥ (eq. 1), FINGER-H̃
 distance Algorithms 1 & 2.
 """
 from repro.core.bounds import scaled_approximation_error, theorem1_bounds
-from repro.core.incremental import delta_stats, h_tilde_after, update_state
+from repro.core.incremental import (
+    delta_stats,
+    delta_stats_compact,
+    h_tilde_after,
+    update_state,
+)
 from repro.core.jsdist import (
     average_graph,
     js_distance,
@@ -27,7 +32,8 @@ from repro.core.vnge import (
 __all__ = [
     "exact_vnge", "quadratic_q", "vnge_hat", "vnge_tilde", "strength_stats",
     "FingerState", "finger_state", "update_state", "h_tilde_after",
-    "delta_stats", "average_graph", "js_distance", "jsdist_fast",
+    "delta_stats", "delta_stats_compact",
+    "average_graph", "js_distance", "jsdist_fast",
     "jsdist_exact", "jsdist_tilde", "jsdist_incremental", "jsdist_stream",
     "theorem1_bounds", "scaled_approximation_error",
 ]

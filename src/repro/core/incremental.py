@@ -12,17 +12,33 @@ pre-change weights ``w_old``), computes the state of G' = G ⊕ ΔG:
 and eq. (3): H̃(G ⊕ ΔG) = -Q' ln[2 (c + Δc)(s_max + Δs_max)], with
 Δs_max = max(0, max_{i∈ΔV}(s_i + Δs_i) - s_max).
 
+Beyond-paper edge handling (the paper assumes S, S' > 0): the c/(1+cΔS)
+factor is computed as c' = 1/(S + ΔS) directly, which is identical for
+S > 0 but stays exact when a delta *revives* an empty graph (c = 0); and
+when a delta *empties* the graph (S' numerically ≈ 0 after float
+cancellation) the state snaps to the canonical empty state (Q = 1,
+S = s_max = 0, strengths = 0) instead of dividing by the ≈0 denominator
+— without this, deleting every edge poisons Q with nan/±1e6 residue for
+the rest of the stream.
+
 Complexity notes. The edge sums are O(Δm). Δs_i on the affected node set
 ΔV is a segment reduction over the 2Δm delta endpoints; we expose two
-paths:
+paths (``method=`` on every update entry point):
 
-- ``compact``  — true O(Δn + Δm): reduce into per-delta local slots via a
-  sorted-endpoint segment sum (production streaming path);
-- ``dense``    — scatter-add into the carried (n,) strength vector; O(n)
-  per step but branch-free and fastest under jit for the moderate n of
-  the paper's pipelines (the strength vector must be maintained anyway).
+- ``compact``  — true O(Δn + Δm) work (modulo the O(Δm log Δm) endpoint
+  sort): sort the 2Δm delta endpoints, segment-sum Δs per touched node,
+  gather the O(Δn) affected strengths, and reduce ΔQ's node term and
+  Δs_max over the segments — the (n,) strength vector is only touched by
+  an O(Δm) scatter when carrying the state forward. This is the
+  production streaming path; `repro.kernels.delta_stats` provides the
+  fused single-pass Pallas TPU kernel for it (sharing
+  `sorted_delta_endpoints` / `delta_stats_from_sorted` below).
+- ``dense``    — scatter-add into a dense (n,) Δs vector; O(n) per step
+  but branch-free and fastest under jit for the moderate n of the
+  paper's pipelines.
 
-Both produce identical statistics (tested).
+Both produce identical statistics (tested to 1e-5 over randomized
+add/delete/re-weight streams, including deletions at the argmax node).
 """
 from __future__ import annotations
 
@@ -32,9 +48,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.state import FingerState
+from repro.core.vnge import c_from_s_total
 from repro.graphs.types import GraphDelta
 
-__all__ = ["delta_stats", "update_state", "h_tilde_after"]
+__all__ = [
+    "delta_stats",
+    "delta_stats_compact",
+    "delta_stats_from_sorted",
+    "sorted_delta_endpoints",
+    "update_state",
+    "h_tilde_after",
+]
+
+# A post-delta total strength below this fraction of the delta's own
+# moved mass (2 Σ|Δw|) is float-cancellation residue of a
+# delete-everything delta, not a real graph: f32 summation error is
+# ~eps·Σ|Δw| (eps ≈ 1.2e-7), so 1e-6 gives ~8× headroom while a graph
+# legitimately shrunk to any weight ≳ 1e-6 of the deleted mass survives.
+_EMPTY_RESIDUE_TOL = 1e-6
 
 
 def delta_stats(state: FingerState, delta: GraphDelta):
@@ -65,10 +96,95 @@ def delta_stats(state: FingerState, delta: GraphDelta):
     return delta_s_total, delta_q_term, ds, max_new_s
 
 
+def sorted_delta_endpoints(strengths: jax.Array, delta: GraphDelta):
+    """GraphDelta → sorted-endpoint arrays for the compact reduction.
+
+    Concatenates the 2Δm edge endpoints, maps masked slots to the
+    sentinel node id n (sorts last), argsorts, and gathers the O(Δn)
+    touched strengths (zeroed on sentinel slots). Shared by
+    `delta_stats_compact` and the `kernels.delta_stats` fused kernel.
+    """
+    n = strengths.shape[0]
+    m = delta.mask
+    dw = delta.dw * m
+    valid = m > 0
+
+    nodes = jnp.concatenate([delta.senders, delta.receivers]).astype(jnp.int32)
+    nodes = jnp.where(jnp.concatenate([valid, valid]), nodes, n)
+    vals = jnp.concatenate([dw, dw])
+
+    order = jnp.argsort(nodes)
+    sorted_nodes = nodes[order]
+    sorted_vals = vals[order]
+    in_graph = sorted_nodes < n
+    sorted_strengths = jnp.where(
+        in_graph, strengths[jnp.minimum(sorted_nodes, n - 1)], 0.0)
+    return sorted_nodes, sorted_vals, sorted_strengths, \
+        in_graph.astype(jnp.float32)
+
+
+def delta_stats_from_sorted(
+    sorted_nodes: jax.Array,      # (2k,) int32, ascending, sentinel last
+    sorted_vals: jax.Array,       # (2k,) f32 masked Δw per endpoint
+    sorted_strengths: jax.Array,  # (2k,) f32 s_i gathered at sorted_nodes
+    endpoint_valid: jax.Array,    # (2k,) f32 0/1 (0 on sentinel slots)
+    dw: jax.Array,                # (k,) f32 Δw per edge
+    w_old: jax.Array,             # (k,) f32 pre-change weights
+    mask: jax.Array,              # (k,) f32 0/1 edge validity
+) -> jax.Array:
+    """Sorted-endpoint segment reduction → (4,) [ΔS, ΔQ, max s', |ΔV|].
+
+    The single jnp home of the compact reduction; the Pallas kernel in
+    `kernels.delta_stats` must match it up to float accumulation order.
+    The max is -inf for an all-masked delta (dense-path convention).
+    """
+    two_k = sorted_nodes.shape[0]
+    head = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_nodes[1:] != sorted_nodes[:-1]])
+    head = jnp.logical_and(head, endpoint_valid > 0)
+    seg_id = jnp.cumsum(head) - 1
+    seg_ds = jax.ops.segment_sum(sorted_vals, seg_id, num_segments=two_k)
+    # Δs of the segment each endpoint belongs to, broadcast back per slot.
+    ds_here = seg_ds[seg_id]
+
+    node_term = jnp.sum(jnp.where(
+        head,
+        2.0 * sorted_strengths * ds_here + ds_here * ds_here,
+        0.0))
+    dwm = dw * mask
+    edge_term = jnp.sum(4.0 * w_old * dwm + 2.0 * dwm * dwm)
+    delta_s = 2.0 * jnp.sum(dwm)
+    max_new = jnp.max(jnp.where(head, sorted_strengths + ds_here, -jnp.inf))
+    n_touched = jnp.sum(head.astype(jnp.float32))
+    return jnp.stack([delta_s, node_term + edge_term, max_new, n_touched])
+
+
+def delta_stats_compact(state: FingerState, delta: GraphDelta):
+    """(ΔS, ΔQ, max_{ΔV}(s_i + Δs_i)) without materializing a dense Δs.
+
+    Sorted-endpoint segment sum over the 2Δm delta endpoints — work is
+    O(Δm log Δm) for the sort plus O(Δn + Δm) for everything else,
+    independent of n.
+    """
+    prep = sorted_delta_endpoints(state.strengths, delta)
+    stats = delta_stats_from_sorted(*prep, delta.dw, delta.w_old,
+                                    delta.mask)
+    return stats[0], stats[1], stats[2]
+
+
+def _apply_delta_strengths(strengths: jax.Array,
+                           delta: GraphDelta) -> jax.Array:
+    """strengths + Δs via an O(Δm) endpoint scatter (no dense Δs temp)."""
+    dwm = delta.dw * delta.mask
+    out = strengths.at[delta.senders].add(dwm, mode="drop")
+    return out.at[delta.receivers].add(dwm, mode="drop")
+
+
 def update_state(
     state: FingerState,
     delta: GraphDelta,
     exact_smax: bool = False,
+    method: str = "dense",
 ) -> FingerState:
     """Theorem 2 update: state(G) ⊕ ΔG → state(G').
 
@@ -76,25 +192,46 @@ def update_state(
     decreases s_max (deletions at the argmax node are upper-bounded).
     ``exact_smax=True`` recomputes max over the carried strength vector —
     an O(n) beyond-paper fix that keeps H̃ exact under deletions.
+
+    ``method`` selects the Δ-statistics path: ``"dense"`` (O(n) scatter)
+    or ``"compact"`` (sorted-endpoint segment sum, O(Δn + Δm)).
     """
-    delta_s_total, delta_q_term, ds, max_new_s = delta_stats(state, delta)
+    if method == "dense":
+        delta_s_total, delta_q_term, ds, max_new_s = delta_stats(state, delta)
+        strengths_new = state.strengths + ds
+    elif method == "compact":
+        delta_s_total, delta_q_term, max_new_s = \
+            delta_stats_compact(state, delta)
+        strengths_new = _apply_delta_strengths(state.strengths, delta)
+    else:
+        raise ValueError(f"unknown delta-stats method {method!r}")
+
+    s_total_raw = state.s_total + delta_s_total
+    # Deleting (numerically) all edges leaves cancellation residue that
+    # must not reach 1/S'; snap to the canonical empty state instead.
+    abs_moved = 2.0 * jnp.sum(jnp.abs(delta.dw) * delta.mask)
+    empty = s_total_raw <= _EMPTY_RESIDUE_TOL * abs_moved
 
     c = state.c
     denom = 1.0 + c * delta_s_total
     denom = jnp.where(jnp.abs(denom) > 1e-30, denom, 1e-30)
+    # c' = 1/(S + ΔS): equals c/denom for S > 0 and stays exact when the
+    # delta revives an empty graph (c = 0 but S' = ΔS > 0).
+    c_new = c_from_s_total(s_total_raw)
     q_new = (state.q - 1.0) / (denom * denom) \
-        - (c / denom) ** 2 * delta_q_term + 1.0
+        - c_new * c_new * delta_q_term + 1.0
+    q_new = jnp.where(empty, 1.0, q_new)  # Q of the empty graph (Lemma 1)
 
-    strengths_new = state.strengths + ds
+    strengths_new = jnp.where(empty, 0.0, strengths_new)
     if exact_smax:
         s_max_new = jnp.max(strengths_new)
     else:
         d_s_max = jnp.maximum(0.0, max_new_s - state.s_max)
-        s_max_new = state.s_max + d_s_max
+        s_max_new = jnp.where(empty, 0.0, state.s_max + d_s_max)
 
     return FingerState(
         q=q_new,
-        s_total=state.s_total + delta_s_total,
+        s_total=jnp.where(empty, 0.0, s_total_raw),
         s_max=s_max_new,
         strengths=strengths_new,
     )
@@ -102,7 +239,9 @@ def update_state(
 
 def h_tilde_after(
     state: FingerState, delta: GraphDelta, exact_smax: bool = False,
+    method: str = "dense",
 ) -> Tuple[jax.Array, FingerState]:
     """eq. (3): H̃(G ⊕ ΔG) and the updated state, in O(Δn + Δm)."""
-    new_state = update_state(state, delta, exact_smax=exact_smax)
+    new_state = update_state(state, delta, exact_smax=exact_smax,
+                             method=method)
     return new_state.h_tilde(), new_state

@@ -75,14 +75,18 @@ def jsdist_incremental(
     state: FingerState,
     delta: GraphDelta,
     exact_smax: bool = False,
+    method: str = "dense",
 ) -> Tuple[jax.Array, FingerState]:
     """Algorithm 2: FINGER-JSdist (Incremental).
 
     Given state(G) and ΔG, returns (JSdist(G, G ⊕ ΔG), state(G ⊕ ΔG)).
     Uses two Theorem-2 updates (ΔG/2 and ΔG) — O(Δn + Δm) total.
+    ``method`` selects the Δ-statistics path (see `core.incremental`).
     """
-    half_state = update_state(state, delta.scaled(0.5), exact_smax=exact_smax)
-    full_state = update_state(state, delta, exact_smax=exact_smax)
+    half_state = update_state(state, delta.scaled(0.5),
+                              exact_smax=exact_smax, method=method)
+    full_state = update_state(state, delta, exact_smax=exact_smax,
+                              method=method)
     dist = _js_from_entropies(
         half_state.h_tilde(), state.h_tilde(), full_state.h_tilde()
     )
@@ -93,6 +97,7 @@ def jsdist_stream(
     init_state: FingerState,
     deltas: GraphDelta,
     exact_smax: bool = False,
+    method: str = "dense",
 ) -> Tuple[jax.Array, FingerState]:
     """Scan Algorithm 2 over a batched stream of T deltas (leading axis).
 
@@ -102,7 +107,9 @@ def jsdist_stream(
     """
 
     def step(state, delta):
-        dist, new_state = jsdist_incremental(state, delta, exact_smax=exact_smax)
+        dist, new_state = jsdist_incremental(state, delta,
+                                             exact_smax=exact_smax,
+                                             method=method)
         return new_state, dist
 
     final_state, dists = jax.lax.scan(step, init_state, deltas)

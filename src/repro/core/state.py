@@ -13,7 +13,7 @@ from typing import Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.vnge import strength_stats
+from repro.core.vnge import c_from_s_total, strength_stats
 from repro.graphs.types import DenseGraph, EdgeList, _pytree_dataclass
 
 Graph = Union[DenseGraph, EdgeList]
@@ -30,17 +30,21 @@ class FingerState:
 
     @property
     def c(self) -> jax.Array:
-        return jnp.where(self.s_total > 0, 1.0 / self.s_total, 0.0)
+        return c_from_s_total(self.s_total)
 
     def h_tilde(self) -> jax.Array:
-        """H̃(G) = -Q ln(2 c s_max) from the carried statistics (eq. 2)."""
+        """H̃(G) = -Q ln(2 c s_max) from the carried statistics (eq. 2).
+
+        An empty graph (trace L = 0) has H̃ = 0 by convention — the
+        clipped log would otherwise report ≈69 nats.
+        """
         arg = jnp.clip(2.0 * self.c * self.s_max, 1e-30, None)
-        return -self.q * jnp.log(arg)
+        return jnp.where(self.s_total > 0, -self.q * jnp.log(arg), 0.0)
 
 
 def finger_state(g: Graph) -> FingerState:
     """Build the state from a full graph (one O(n + m) pass)."""
     s_total, sum_s2, sum_w2, s_max = strength_stats(g)
-    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+    c = c_from_s_total(s_total)
     q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
     return FingerState(q=q, s_total=s_total, s_max=s_max, strengths=g.strengths())

@@ -22,12 +22,22 @@ from repro.graphs.types import DenseGraph, EdgeList
 Graph = Union[DenseGraph, EdgeList]
 
 __all__ = [
+    "c_from_s_total",
     "exact_vnge",
     "quadratic_q",
     "vnge_hat",
     "vnge_tilde",
     "strength_stats",
 ]
+
+
+def c_from_s_total(s_total: jax.Array) -> jax.Array:
+    """c = 1/trace(L) with the empty-graph convention c(0) = 0.
+
+    The one home of this convention — FingerState.c, Lemma-1 Q, the
+    incremental c', and the kernel wrappers all route through it.
+    """
+    return jnp.where(s_total > 0, 1.0 / s_total, 0.0)
 
 
 def _xlogx(x: jax.Array) -> jax.Array:
@@ -58,11 +68,16 @@ def strength_stats(g: Graph):
     return jnp.sum(s), jnp.sum(s * s), jnp.sum(w * w), jnp.max(s)
 
 
+def _lemma1_cq(s_total, sum_s2, sum_w2):
+    """(c, Q) from the strength statistics — the one home of Lemma 1."""
+    c = c_from_s_total(s_total)
+    return c, 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+
+
 def quadratic_q(g: Graph) -> jax.Array:
     """Lemma 1: Q = 1 - c² (Σ s_i² + 2 Σ_E w_ij²), linear complexity."""
     s_total, sum_s2, sum_w2, _ = strength_stats(g)
-    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
-    return 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+    return _lemma1_cq(s_total, sum_s2, sum_w2)[1]
 
 
 def vnge_hat(
@@ -75,11 +90,14 @@ def vnge_hat(
 
     O(n + m): Q is a single pass, λ_max costs `power_iters` matvecs.
     """
-    q = quadratic_q(g)
+    s_total, sum_s2, sum_w2, _ = strength_stats(g)
+    _, q = _lemma1_cq(s_total, sum_s2, sum_w2)
     if lambda_max is None:
         lambda_max = power_iteration_lmax(g, num_iters=power_iters, tol=tol)
     lam = jnp.clip(lambda_max, 1e-30, 1.0)
-    return -q * jnp.log(lam)
+    # Empty graph (trace L = 0): L_N is undefined and H = 0 by convention;
+    # without the guard the clipped log yields ≈69 nats.
+    return jnp.where(s_total > 0, -q * jnp.log(lam), 0.0)
 
 
 def vnge_tilde(g: Graph) -> jax.Array:
@@ -88,7 +106,7 @@ def vnge_tilde(g: Graph) -> jax.Array:
     2 c s_max ≥ λ_max (Anderson & Morley 1985), hence H̃ ≤ Ĥ ≤ H.
     """
     s_total, sum_s2, sum_w2, s_max = strength_stats(g)
-    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
-    q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+    c, q = _lemma1_cq(s_total, sum_s2, sum_w2)
     arg = jnp.clip(2.0 * c * s_max, 1e-30, None)
-    return -q * jnp.log(arg)
+    # Empty graph: H̃ = 0, not -ln(1e-30) (jit-safe select, no host branch).
+    return jnp.where(s_total > 0, -q * jnp.log(arg), 0.0)

@@ -19,6 +19,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.state import FingerState
+from repro.core.vnge import c_from_s_total
+from repro.distributed.sharding import shard_map
 from repro.graphs.types import EdgeList
 
 
@@ -44,12 +46,12 @@ def distributed_finger_state(g: EdgeList, mesh: Mesh,
         s = jax.lax.psum(s_part, axis)  # (n,) full strengths
         sum_w2 = jax.lax.psum(w2_part, axis)
         s_total = jnp.sum(s)
-        c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+        c = c_from_s_total(s_total)
         q = 1.0 - c * c * (jnp.sum(s * s) + 2.0 * sum_w2)
         return q, s_total, jnp.max(s), s
 
     shard = P(axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(shard, shard, shard, shard),
         out_specs=(P(), P(), P(), P()),
@@ -74,7 +76,7 @@ def distributed_power_iteration(
         s_part = s_part.at[receivers].add(w, mode="drop")
         s = jax.lax.psum(s_part, axis)
         s_total = jnp.sum(s)
-        c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
+        c = c_from_s_total(s_total)
 
         def ln_mv(x):
             wx_part = jnp.zeros_like(x)
@@ -105,9 +107,9 @@ def distributed_power_iteration(
         return jnp.maximum(lam, 0.0)
 
     shard = P(axis)
-    fn = jax.shard_map(run, mesh=mesh,
-                       in_specs=(shard, shard, shard, shard),
-                       out_specs=P())
+    fn = shard_map(run, mesh=mesh,
+                   in_specs=(shard, shard, shard, shard),
+                   out_specs=P(), check_rep=False)
     return fn(g.senders, g.receivers, g.weights, g.mask)
 
 

@@ -18,6 +18,25 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.5 re-exports shard_map at the top level
+    _shard_map_impl = jax.shard_map
+except AttributeError:  # jax 0.4.x keeps it in experimental
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = True):
+    """Version-portable `shard_map` (the `check_rep` kwarg moved around).
+
+    0.4.x needs `check_rep=False` for bodies containing `while_loop` (no
+    replication rule); newer jax dropped the kwarg entirely.
+    """
+    try:
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=check_rep)
+    except TypeError:
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:

@@ -1,0 +1,20 @@
+"""Batched multi-stream FINGER serving engine.
+
+One FingerState per user/session stream, stacked along a leading batch
+axis and advanced in lockstep by vmapped Theorem-2 updates — the batched
+form of the paper's Algorithm 2, sized for serving many concurrent graph
+streams from one program.
+"""
+from repro.engine.stream import (
+    StreamEngine,
+    stack_deltas,
+    stack_states,
+    unstack_states,
+)
+
+__all__ = [
+    "StreamEngine",
+    "stack_deltas",
+    "stack_states",
+    "unstack_states",
+]

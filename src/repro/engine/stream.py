@@ -1,0 +1,142 @@
+"""StreamEngine: B independent FINGER streams advanced in lockstep.
+
+The ROADMAP serving target is millions of users, each with their own
+evolving graph (session interaction graph, per-tenant topology, …). The
+per-stream state of Algorithm 2 is tiny — (Q, S, s_max) plus the (n,)
+strengths — so thousands of streams fit on one device as a stacked
+`FingerState` with a leading batch axis. Each serving tick applies one
+`GraphDelta` per stream:
+
+  tick      : vmapped `jsdist_incremental` over the B axis — one fused
+              XLA computation instead of B Python-loop dispatches;
+  run       : `lax.scan` of the vmapped tick over a (T, B, …) delta
+              sequence — the whole online loop in one XLA program;
+  tick_sharded : the same tick under `shard_map`, streams sharded over
+              the mesh "data" axis. Streams are independent, so the body
+              needs zero collectives — scaling to a pod is embarrassing.
+
+All entry points are jit-compiled once per (B, n, k_pad) shape; the
+stream synthesizers' common `k_pad` keeps that a single compilation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.jsdist import jsdist_incremental
+from repro.core.state import FingerState, finger_state
+from repro.distributed.sharding import shard_map
+from repro.graphs.types import GraphDelta
+
+
+def stack_states(states: Sequence[FingerState]) -> FingerState:
+    """[state_b] → stacked FingerState with a leading (B,) batch axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(states: FingerState) -> List[FingerState]:
+    """Stacked (B, …) FingerState → list of B per-stream states."""
+    b = states.q.shape[0]
+    return [jax.tree_util.tree_map(lambda x: x[i], states)
+            for i in range(b)]
+
+
+def stack_deltas(deltas: Sequence[GraphDelta]) -> GraphDelta:
+    """[delta_b] (common k_pad and n) → stacked (B, k_pad) GraphDelta."""
+    k_pads = {d.dw.shape[-1] for d in deltas}
+    if len(k_pads) != 1:
+        raise ValueError(
+            f"stack_deltas needs a common k_pad, got {sorted(k_pads)}; "
+            "thread k_pad through the delta constructors")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *deltas)
+
+
+class StreamEngine:
+    """Batched Algorithm-2 engine for B concurrent graph streams.
+
+    Parameters
+    ----------
+    exact_smax : recompute s_max exactly after deletions (O(n) per
+        stream; the paper's eq. (3) never decreases s_max).
+    method : Δ-statistics path, ``"dense"`` or ``"compact"`` (see
+        `core.incremental`).
+    """
+
+    def __init__(self, exact_smax: bool = False, method: str = "dense"):
+        self.exact_smax = exact_smax
+        self.method = method
+
+        def step(state: FingerState, delta: GraphDelta):
+            return jsdist_incremental(state, delta,
+                                      exact_smax=exact_smax,
+                                      method=method)
+
+        self._step = step
+        self._vstep = jax.vmap(step)
+        # Donate the stacked state: the engine owns it and a serving tick
+        # should update the (B, n) strengths in place, not copy them.
+        self._tick = jax.jit(self._vstep, donate_argnums=(0,))
+        self._run = jax.jit(self._scan_run, donate_argnums=(0,))
+
+    # -- construction ----------------------------------------------------
+    @staticmethod
+    def init_states(graphs) -> FingerState:
+        """Initial stacked state from B host graphs (one O(n + m) pass
+        per stream, host-side; the online loop never does this again)."""
+        return stack_states([finger_state(g) for g in graphs])
+
+    # -- serving ---------------------------------------------------------
+    def tick(self, states: FingerState,
+             deltas: GraphDelta) -> Tuple[jax.Array, FingerState]:
+        """One serving tick: (B,) JSdist scores + updated stacked state.
+
+        `states` is donated — pass the engine-owned state and rebind it
+        to the returned one.
+        """
+        dists, new_states = self._tick(states, deltas)
+        return dists, new_states
+
+    def _scan_run(self, states: FingerState, delta_seq: GraphDelta):
+        def body(carry, delta_t):
+            dists, new_carry = self._vstep(carry, delta_t)
+            return new_carry, dists
+
+        final, dists = jax.lax.scan(body, states, delta_seq)
+        return dists, final
+
+    def run(self, states: FingerState,
+            delta_seq: GraphDelta) -> Tuple[jax.Array, FingerState]:
+        """Scan T ticks over a stacked (T, B, k_pad) delta sequence.
+
+        Returns the (T, B) distance matrix and the final stacked state —
+        the whole T×B online loop is one XLA while-scan.
+        """
+        return self._run(states, delta_seq)
+
+    # -- multi-device ----------------------------------------------------
+    def make_sharded_tick(self, mesh: Mesh, axis: str = "data"):
+        """Compile a tick with streams sharded over `mesh[axis]`.
+
+        Each device owns B/p streams; the body is the plain vmapped step
+        (independent streams ⇒ no collectives). Returns a jitted
+        callable with the same (states, deltas) → (dists, states)
+        contract as `tick`.
+        """
+        spec = P(axis)
+        sharded = shard_map(
+            self._vstep, mesh=mesh,
+            in_specs=(spec, spec), out_specs=(spec, spec),
+        )
+        return jax.jit(sharded, donate_argnums=(0,))
+
+    def shard_states(self, states: FingerState, mesh: Mesh,
+                     axis: str = "data") -> FingerState:
+        """device_put the stacked state sharded over its stream axis."""
+        sharding = NamedSharding(mesh, P(axis))
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sharding), states)

@@ -61,7 +61,12 @@ def churn_stream(
     w = np.asarray(g.weights).copy()
     iu, ju = np.triu_indices(n, k=1)
     m_possible = len(iu)
-    graphs = [DenseGraph.from_weights(jnp.asarray(w, jnp.float32))]
+    # Snapshot with a host-side copy: w is mutated in place every step,
+    # and handing the live buffer to jax (whose CPU transfers may alias
+    # and read it asynchronously) lets later writes leak into earlier
+    # snapshots.
+    graphs = [DenseGraph.from_weights(
+        jnp.asarray(w.astype(np.float32, copy=True)))]
     deltas, truth = [], []
     if k_pad is None:
         k_pad = int(max(64, m_possible * churn_frac * burst_multiplier * 4))
@@ -76,7 +81,8 @@ def churn_stream(
         d = GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n, k_pad=k_pad)
         w[ii, jj] += dw
         w[jj, ii] += dw
-        graphs.append(DenseGraph.from_weights(jnp.asarray(w, jnp.float32)))
+        graphs.append(DenseGraph.from_weights(
+            jnp.asarray(w.astype(np.float32, copy=True))))
         deltas.append(d)
         truth.append(k / max(w[w > 0].size / 2.0, 1.0))
     return GraphSequence(graphs, deltas, np.asarray(truth))
@@ -87,6 +93,7 @@ def dos_attack_sequence(
     n_graphs: int = 9,
     attack_frac: float = 0.05,
     seed: int = 0,
+    k_pad: Optional[int] = None,
 ) -> Tuple[GraphSequence, int]:
     """Oregon-AS-like peering sequence with one planted DoS event.
 
@@ -103,6 +110,12 @@ def dos_attack_sequence(
     graphs = [DenseGraph.from_weights(jnp.asarray(w, jnp.float32))]
     deltas = []
     iu, ju = np.triu_indices(n, k=1)
+    if k_pad is None:
+        # one common padded shape for the whole sequence: churn toggles
+        # plus the worst-case attack fan-in, so every delta keeps the same
+        # (k_pad,) shape and a jitted incremental step compiles once.
+        churn_k = max(1, int(0.001 * len(iu)))
+        k_pad = int(churn_k + max(1, int(attack_frac * n)) + 1)
     for t in range(n_graphs - 1):
         w_new = w.copy()
         # natural churn: ~0.1% of node pairs toggle (AS peering snapshots
@@ -120,7 +133,7 @@ def dos_attack_sequence(
             w_new[botnet, target] = 1.0
             w_new[target, botnet] = 1.0
         g_new = DenseGraph.from_weights(jnp.asarray(w_new, jnp.float32))
-        deltas.append(_delta_between(graphs[-1], g_new))
+        deltas.append(_delta_between(graphs[-1], g_new, k_pad=k_pad))
         graphs.append(g_new)
         w = w_new
     return GraphSequence(graphs, deltas), attack_at
@@ -131,6 +144,7 @@ def hic_bifurcation_sequence(
     n_samples: int = 12,
     bifurcation_at: int = 5,  # 0-based; paper's "6th measurement"
     seed: int = 0,
+    k_pad: Optional[int] = None,
 ) -> GraphSequence:
     """Hi-C-like weighted contact-map sequence with a planted bifurcation.
 
@@ -161,6 +175,11 @@ def hic_bifurcation_sequence(
         return w
 
     graphs, deltas = [], []
+    if k_pad is None:
+        # contact maps are dense: the noise perturbs every upper-triangle
+        # entry, so pad all deltas to the full n(n-1)/2 — one shape, one
+        # compilation of the jitted incremental step.
+        k_pad = n * (n - 1) // 2
     # smooth AR(1) measurement noise: consecutive samples drift, so the
     # bifurcation (compartment flip) dominates consecutive JS distances
     rho = 0.9
@@ -170,7 +189,7 @@ def hic_bifurcation_sequence(
         w = contact_map(labels, log_noise)
         g = DenseGraph.from_weights(jnp.asarray(w, jnp.float32))
         if graphs:
-            deltas.append(_delta_between(graphs[-1], g))
+            deltas.append(_delta_between(graphs[-1], g, k_pad=k_pad))
         graphs.append(g)
         log_noise = rho * log_noise + np.sqrt(1 - rho * rho) * \
             rng.normal(0.0, 0.25, (n, n))

@@ -17,12 +17,34 @@ All graphs are undirected with nonnegative weights; every undirected edge
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _drop_self_loops(senders: np.ndarray, receivers: np.ndarray,
+                     *payloads: np.ndarray, kind: str):
+    """Drop i == j slots host-side (Lemma 1 assumes a zero diagonal).
+
+    A self-loop slot would double-count into the node strength while
+    never appearing as an off-diagonal Laplacian entry, silently skewing
+    Q, s_max, and every incremental statistic downstream.
+    """
+    loops = senders == receivers
+    if not loops.any():
+        return (senders, receivers, *payloads)
+    warnings.warn(
+        f"{kind}: dropping {int(loops.sum())} self-loop slot(s) "
+        "(i == j); Lemma 1 assumes a zero diagonal",
+        stacklevel=3,
+    )
+    keep = ~loops
+    return (senders[keep], receivers[keep],
+            *(p[keep] for p in payloads))
 
 
 def _pytree_dataclass(cls=None, *, static_fields=()):
@@ -143,6 +165,8 @@ class EdgeList:
         senders = np.asarray(senders, np.int32)
         receivers = np.asarray(receivers, np.int32)
         weights = np.asarray(weights, np.float32)
+        senders, receivers, weights = _drop_self_loops(
+            senders, receivers, weights, kind="EdgeList.from_arrays")
         lo = np.minimum(senders, receivers)
         hi = np.maximum(senders, receivers)
         senders, receivers = lo, hi
@@ -207,13 +231,17 @@ class GraphDelta:
                     k_pad: Optional[int] = None) -> "GraphDelta":
         senders = np.asarray(senders, np.int32)
         receivers = np.asarray(receivers, np.int32)
-        lo = np.minimum(senders, receivers)
-        hi = np.maximum(senders, receivers)
         dw = np.asarray(dw, np.float32)
         w_old = np.asarray(w_old, np.float32)
+        senders, receivers, dw, w_old = _drop_self_loops(
+            senders, receivers, dw, w_old, kind="GraphDelta.from_arrays")
+        lo = np.minimum(senders, receivers)
+        hi = np.maximum(senders, receivers)
         k = len(senders)
         if k_pad is None:
             k_pad = max(k, 1)
+        if k > k_pad:
+            raise ValueError(f"k={k} delta edges exceed k_pad={k_pad}")
         pad = k_pad - k
         z = np.zeros(pad, np.float32)
         return GraphDelta(

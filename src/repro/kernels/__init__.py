@@ -3,6 +3,7 @@
 - ``vnge_q``        : fused one-HBM-pass Lemma-1 statistics over dense W
 - ``bsr_spmv``      : block-sparse Laplacian matvec (λ_max power iteration)
 - ``entropy_probe`` : attention-graph VNGE stats from logits, A never in HBM
+- ``delta_stats``   : fused Theorem-2 ΔS/ΔQ/Δs_max over sorted endpoints
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with CPU interpret fallback) and ref.py (pure-jnp oracle).
@@ -16,6 +17,10 @@ from repro.kernels.bsr_spmv.ops import (
 from repro.kernels.entropy_probe.ops import (
     attention_graph_entropy,
     attention_graph_stats,
+)
+from repro.kernels.delta_stats.ops import (
+    delta_stats_fused,
+    prepare_sorted_delta,
 )
 from repro.kernels.vnge_q.ops import (
     quadratic_q_dense,

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused Theorem-2 delta-statistics reduction.
+
+The reduction has one home — `core.incremental.delta_stats_from_sorted`
+(shared with the XLA compact path) — re-exported here under the kernel
+suite's ref naming so the Pallas kernel is tested against exactly the
+math the production path runs. Operates on the *sorted endpoint* form of
+a GraphDelta (see ops.py) and returns the (4,) stats vector
+
+    [ΔS, ΔQ, max_{ΔV}(s_i + Δs_i), |ΔV|]
+
+with the max -inf for an all-masked delta, matching the dense path.
+"""
+from __future__ import annotations
+
+from repro.core.incremental import delta_stats_from_sorted
+
+delta_stats_sorted_ref = delta_stats_from_sorted
+
+__all__ = ["delta_stats_sorted_ref"]

@@ -44,8 +44,10 @@ def quadratic_q_dense(w: jax.Array, use_pallas: bool = True) -> jax.Array:
 
 def vnge_tilde_dense(w: jax.Array, use_pallas: bool = True) -> jax.Array:
     """FINGER-H̃ (eq. 2) of a dense graph in one fused HBM pass."""
+    from repro.core.vnge import _lemma1_cq
+
     stats = vnge_q_stats(w, use_pallas=use_pallas)
-    s_total, sum_s2, sum_w2, s_max = stats[0], stats[1], stats[2], stats[3]
-    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
-    q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
-    return -q * jnp.log(jnp.clip(2.0 * c * s_max, 1e-30, None))
+    s_total, s_max = stats[0], stats[3]
+    c, q = _lemma1_cq(s_total, stats[1], stats[2])
+    h = -q * jnp.log(jnp.clip(2.0 * c * s_max, 1e-30, None))
+    return jnp.where(s_total > 0, h, 0.0)  # empty graph: H̃ = 0

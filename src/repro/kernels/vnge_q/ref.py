@@ -23,6 +23,6 @@ def vnge_q_stats_ref(w: jax.Array) -> jax.Array:
 
 
 def q_from_stats(stats: jax.Array) -> jax.Array:
-    s_total, sum_s2, sum_w2 = stats[0], stats[1], stats[2]
-    c = jnp.where(s_total > 0, 1.0 / s_total, 0.0)
-    return 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+    from repro.core.vnge import _lemma1_cq  # deferred: kernels ← core only
+
+    return _lemma1_cq(stats[0], stats[1], stats[2])[1]

@@ -1,0 +1,115 @@
+"""Offline-safe property-testing shim.
+
+The container has no network access, so `hypothesis` may be absent. This
+module exports `given` / `settings` / `strategies` with the subset of the
+hypothesis API the suite uses. When the real library is importable we
+re-export it unchanged (shrinking, the database, etc. all work); when it
+is not, the shim degrades to *seeded deterministic sampling*: `given`
+draws `max_examples` pseudo-random examples per test (seeded from the
+test's qualified name, so failures reproduce run-to-run) and executes the
+test body once per example — the same spirit as a
+`pytest.mark.parametrize` over sampled inputs.
+
+Usage (drop-in for the suite's import):
+
+    from _propcheck import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A value generator: `draw(rng)` returns one sample."""
+
+        def __init__(self, draw_fn, label):
+            self._draw = draw_fn
+            self._label = label
+
+        def draw(self, rng) -> object:
+            return self._draw(rng)
+
+        def __repr__(self):
+            return f"<strategy {self._label}>"
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        """Subset of `hypothesis.strategies` used by this suite."""
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                f"integers({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                f"floats({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                             "booleans()")
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(0, len(options)))],
+                f"sampled_from({options!r})",
+            )
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def given(**strategy_kwargs):
+        """Run the test once per drawn example (seeded, deterministic)."""
+
+        def decorate(fn):
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_pc_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = np.random.default_rng(seed)
+                for example in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategy_kwargs.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:  # surface the failing example
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on example "
+                            f"{example + 1}/{n}: {drawn!r}") from e
+
+            # Deliberately NOT functools.wraps: pytest must see the
+            # zero-argument signature, or it would treat the strategy
+            # parameters as missing fixtures.
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.__qualname__ = fn.__qualname__
+            runner._pc_inner = fn
+            return runner
+
+        return decorate
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        """Attach the example budget to a `given`-wrapped test."""
+
+        def decorate(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+
+        return decorate

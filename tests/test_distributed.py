@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# the whole module drives an 8-placeholder-device jax in a subprocess
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,5 +1,6 @@
 """The loop-aware HLO cost model: exactness on known-FLOP programs."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,7 @@ def test_traffic_nonzero_and_scales_with_loop():
     assert b2 > 2.5 * b1
 
 
+@pytest.mark.slow
 def test_collectives_counted():
     import subprocess, sys, os, json
     script = r"""

@@ -2,8 +2,9 @@
 streams, and hypothesis properties over random deltas."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import (
@@ -106,6 +107,129 @@ class TestStreams:
             dist, st_ = jsdist_incremental(st_, d, exact_smax=True)
             ref = float(jsdist_tilde(seq.graphs[t], seq.graphs[t + 1]))
             assert abs(float(dist) - ref) < 5e-3
+
+
+class TestRegressions:
+    def test_self_loops_dropped_with_warning(self):
+        """i == j slots would double-count strengths and violate
+        Lemma 1's zero-diagonal assumption — they must be dropped."""
+        import warnings
+
+        from repro.graphs import EdgeList
+
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            el = EdgeList.from_arrays([0, 1, 2], [0, 2, 2],
+                                      [1.0, 2.0, 3.0], n_nodes=4)
+            d = GraphDelta.from_arrays([3, 0], [3, 1], [1.0, 1.0],
+                                       [0.0, 0.0], n_nodes=4)
+        assert any("self-loop" in str(w.message) for w in rec)
+        assert float(jnp.sum(el.mask)) == 1.0  # only (1, 2) survives
+        assert float(jnp.sum(d.mask)) == 1.0   # only (0, 1) survives
+        np.testing.assert_allclose(np.asarray(el.strengths()),
+                                   [0.0, 2.0, 2.0, 0.0])
+
+    def test_empty_graph_entropy_is_zero(self):
+        """trace(L) = 0 used to yield H̃ = -ln(1e-30) ≈ 69 nats."""
+        from repro.core import vnge_hat, vnge_tilde
+
+        g = DenseGraph.from_weights(jnp.zeros((12, 12)))
+        assert float(vnge_tilde(g)) == 0.0
+        assert float(vnge_hat(g)) == 0.0
+        assert float(finger_state(g).h_tilde()) == 0.0
+        # jit-safe: no host branch on traced values
+        assert float(jax.jit(vnge_tilde)(g)) == 0.0
+
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("method", ["dense", "compact"])
+    def test_delta_to_empty_graph(self, seed, method):
+        """Deleting every edge snaps to the canonical empty state (Q=1,
+        H̃=0) instead of nan-poisoning Q or exploding H̃ on float
+        cancellation residue (seed-dependent before the fix)."""
+        g = erdos_renyi(30, 0.3, seed=seed, weighted=True)
+        w = np.asarray(g.weights)
+        iu, ju = np.triu_indices(30, k=1)
+        nz = w[iu, ju] > 0
+        d = GraphDelta.from_arrays(iu[nz], ju[nz], -w[iu, ju][nz],
+                                   w[iu, ju][nz], n_nodes=30)
+        st_ = update_state(finger_state(g), d, exact_smax=True,
+                           method=method)
+        assert float(st_.s_total) == 0.0
+        assert float(st_.q) == 1.0
+        assert float(st_.s_max) == 0.0
+        assert float(st_.h_tilde()) == 0.0
+
+    def test_shrink_to_one_edge_is_not_empty(self):
+        """A delta deleting all but one small edge must NOT snap to the
+        empty state — the survivor graph's statistics stay exact."""
+        n = 40
+        w = np.zeros((n, n), np.float32)
+        iu, ju = np.triu_indices(n, k=1)
+        w[iu, ju] = 100.0  # heavy graph: S ≈ 1.56e5
+        w = w + w.T
+        g = DenseGraph.from_weights(jnp.asarray(w))
+        keep = (0, 1)
+        dw = np.full(len(iu), -100.0, np.float32)
+        wo = np.full(len(iu), 100.0, np.float32)
+        ki = np.where((iu == keep[0]) & (ju == keep[1]))[0][0]
+        dw[ki] = -99.5  # survivor edge keeps weight 0.5
+        for method in ("dense", "compact"):
+            d = GraphDelta.from_arrays(iu, ju, dw, wo, n_nodes=n)
+            st_ = update_state(finger_state(g), d, exact_smax=True,
+                               method=method)
+            ref = finger_state(apply_delta_dense(g, d))
+            assert float(st_.s_total) > 0.5  # not snapped to empty
+            assert abs(float(st_.s_total) - float(ref.s_total)) < 0.5
+            assert abs(float(st_.h_tilde()) - float(ref.h_tilde())) < 1e-3
+
+    def test_revive_from_empty_graph(self):
+        """Adding edges to an empty state reproduces the from-scratch
+        state exactly (c' = 1/ΔS path, beyond the paper's S > 0)."""
+        empty = finger_state(DenseGraph.from_weights(jnp.zeros((12, 12))))
+        d = GraphDelta.from_arrays([0, 1, 5], [1, 2, 9],
+                                   [1.5, 0.5, 2.0], [0.0, 0.0, 0.0],
+                                   n_nodes=12)
+        for method in ("dense", "compact"):
+            st_ = update_state(empty, d, exact_smax=True, method=method)
+            ref = finger_state(apply_delta_dense(
+                DenseGraph.from_weights(jnp.zeros((12, 12))), d))
+            assert abs(float(st_.q) - float(ref.q)) < 1e-6
+            assert abs(float(st_.h_tilde()) - float(ref.h_tilde())) < 1e-6
+
+    def test_empty_then_continue_stream_stays_finite(self):
+        """A stream that empties and refills keeps emitting finite
+        scores (was nan-forever)."""
+        g = erdos_renyi(25, 0.3, seed=2, weighted=True)
+        st_ = finger_state(g)
+        w = np.asarray(g.weights)
+        iu, ju = np.triu_indices(25, k=1)
+        nz = w[iu, ju] > 0
+        kill = GraphDelta.from_arrays(iu[nz], ju[nz], -w[iu, ju][nz],
+                                      w[iu, ju][nz], n_nodes=25)
+        refill = GraphDelta.from_arrays([0, 3], [1, 4], [1.0, 2.0],
+                                        [0.0, 0.0], n_nodes=25)
+        d1, st_ = jsdist_incremental(st_, kill, exact_smax=True)
+        d2, st_ = jsdist_incremental(st_, refill, exact_smax=True)
+        assert np.isfinite(float(d1)) and np.isfinite(float(d2))
+        assert np.isfinite(float(st_.q))
+
+    def test_stream_synthesizers_shape_stable(self):
+        """dos/hic sequences emit one common padded delta shape, so a
+        jitted incremental step compiles exactly once."""
+        from repro.graphs.streams import (
+            dos_attack_sequence,
+            hic_bifurcation_sequence,
+        )
+
+        seq, _ = dos_attack_sequence(n=100, n_graphs=5, seed=0)
+        assert len({d.dw.shape for d in seq.deltas}) == 1
+        seq2 = hic_bifurcation_sequence(n=50, n_samples=5,
+                                        bifurcation_at=2, seed=0)
+        assert len({d.dw.shape for d in seq2.deltas}) == 1
+        # and the common shape survives an explicit k_pad
+        seq3, _ = dos_attack_sequence(n=100, n_graphs=4, seed=1,
+                                      k_pad=64)
+        assert {d.dw.shape for d in seq3.deltas} == {(64,)}
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,7 +1,7 @@
 """Jensen–Shannon graph distance: Algorithms 1 & 2 and metric properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 import jax.numpy as jnp
 

@@ -85,6 +85,7 @@ class TestChurnAnomaly:
         assert len({8, 17} & top3) >= 1
 
 
+@pytest.mark.slow
 class TestTrainingIntegration:
     def test_loss_decreases_and_probes_run(self):
         from repro.configs.base import get_config

@@ -2,7 +2,7 @@
 Corollaries (asymptotic decay) — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 import jax.numpy as jnp
 
