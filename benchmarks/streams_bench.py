@@ -4,7 +4,13 @@ One "tick" advances every stream by one GraphDelta and emits one JSdist
 score per stream. The per-stream loop dispatches B jitted Algorithm-2
 steps from Python; the engine runs one vmapped step for all B streams.
 
+``--mixed-n`` instead compares a heterogeneous batch (per-stream node
+counts spread over [n_pad/4, n_pad], mask-aware layout) against a
+uniform batch at equal n_pad: one compiled tick, ratio ≤ ~1.1×.
+``--quick`` shrinks batches/iters for CI smoke use.
+
     PYTHONPATH=src python benchmarks/streams_bench.py
+    PYTHONPATH=src python benchmarks/streams_bench.py --mixed-n --quick
 """
 import argparse
 import sys
@@ -24,18 +30,18 @@ from repro.graphs.generators import erdos_renyi  # noqa: E402
 from repro.graphs.types import GraphDelta  # noqa: E402
 
 
-def _random_deltas(graphs, rng, k, k_pad):
+def _random_deltas(graphs, rng, k, k_pad, n_pad=None):
     out = []
     for g in graphs:
         n = g.n_nodes
         w = np.asarray(g.weights)
         iu, ju = np.triu_indices(n, k=1)
-        pick = rng.choice(len(iu), size=k, replace=False)
+        pick = rng.choice(len(iu), size=min(k, len(iu)), replace=False)
         ii, jj = iu[pick], ju[pick]
         w_old = w[ii, jj]
         dw = np.where(w_old > 0, -w_old, 1.0).astype(np.float32)
         out.append(GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n,
-                                          k_pad=k_pad))
+                                          k_pad=k_pad, n_pad=n_pad))
     return out
 
 
@@ -75,6 +81,50 @@ def bench_batch(b: int, n: int, k: int, method: str):
     return t_loop, t_engine
 
 
+def bench_mixed(b: int, n_pad: int, k: int, method: str,
+                iters: int = 10):
+    """Mixed-n batch vs uniform batch at equal n_pad: the mask-aware
+    layout claim is that a heterogeneous tick reuses the uniform tick's
+    compiled program and costs about the same (≤ ~1.1×)."""
+    rng = np.random.default_rng(b)
+    uniform = [erdos_renyi(n_pad, 0.08, seed=s, weighted=True)
+               for s in range(b)]
+    mixed_ns = [int(n) for n in np.linspace(max(8, n_pad // 4), n_pad,
+                                            b).astype(int)]
+    mixed = [erdos_renyi(n, 0.08, seed=s, weighted=True)
+             for s, n in enumerate(mixed_ns)]
+    engine = StreamEngine(method=method)
+
+    def make(graphs):
+        states = StreamEngine.init_states(graphs, n_pad=n_pad)
+        stacked = stack_deltas(_random_deltas(graphs, rng, k, k_pad=k,
+                                              n_pad=n_pad))
+        holder = {"st": states}
+
+        def tick():
+            dists, holder["st"] = engine.tick(holder["st"], stacked)
+            return dists
+
+        return tick
+
+    tick_u, tick_m = make(uniform), make(mixed)
+    t_u = time_fn(lambda: jax.block_until_ready(tick_u()), iters=iters)
+    t_m = time_fn(lambda: jax.block_until_ready(tick_m()), iters=iters)
+    emit(f"streams_uniform_b{b}_n{n_pad}_{method}", t_u,
+         f"{b / t_u:.0f} stream-ticks/s")
+    emit(f"streams_mixed_b{b}_n{n_pad}_{method}", t_m,
+         f"{b / t_m:.0f} stream-ticks/s")
+    cache = engine._tick._cache_size()
+    ratio = t_m / t_u
+    print(f"# mixed-n/uniform tick ratio {ratio:.2f}x "
+          f"(jit cache entries: {cache})")
+    ok = ratio <= 1.1 and cache == 1
+    print("# PASS: mixed-n tick compiles once and costs <= 1.1x uniform"
+          if ok else
+          f"# FAIL: {'recompiled' if cache != 1 else f'{ratio:.2f}x > 1.1x'}")
+    return t_u, t_m
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=128)
@@ -83,15 +133,29 @@ def main():
                     default=[8, 64, 256])
     ap.add_argument("--method", default="dense",
                     choices=["dense", "compact"])
+    ap.add_argument("--mixed-n", action="store_true",
+                    help="benchmark heterogeneous-n batches vs uniform "
+                         "at equal n_pad instead of engine-vs-loop")
+    ap.add_argument("--quick", action="store_true",
+                    help="small batches / few timing iters (CI smoke)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    if args.mixed_n:
+        batches = [32] if args.quick else [b for b in args.batches
+                                           if b >= 32] or [256]
+        for b in batches:
+            bench_mixed(b, args.nodes if not args.quick else 64,
+                        args.k, args.method,
+                        iters=3 if args.quick else 10)
+        return
     wins = {}
-    for b in args.batches:
+    batches = [8, 32] if args.quick else args.batches
+    for b in batches:
         t_loop, t_engine = bench_batch(b, args.nodes, args.k, args.method)
         wins[b] = t_engine < t_loop
         print(f"# B={b}: engine speedup {t_loop / t_engine:.1f}x")
-    big = [b for b in args.batches if b >= 64]
+    big = [b for b in batches if b >= 64]
     if big and all(wins[b] for b in big):
         print("# PASS: vmapped engine wins at every B >= 64")
     elif big:

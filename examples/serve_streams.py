@@ -5,7 +5,17 @@ One stream gets a planted DoS-style fan-in burst halfway through; the
 engine's per-stream scores single it out while serving every other
 stream in the same vmapped tick.
 
+With ``--mixed-n`` the tenants are heterogeneous: per-stream node counts
+cycle through {n/4, n/2, 3n/4, n} and every graph is embedded into one
+shared n_pad layout with a per-stream node mask — same single compiled
+tick, per-stream scores identical to unpadded serving. With
+``--ckpt-dir`` the demo saves the stacked state mid-run, simulates a
+serving restart (fresh engine + restore), and resumes scoring without
+replaying a single tick.
+
     PYTHONPATH=src python examples/serve_streams.py --streams 256 --ticks 20
+    PYTHONPATH=src python examples/serve_streams.py --mixed-n \
+        --ckpt-dir /tmp/streams_ckpt
 """
 import argparse
 import time
@@ -18,25 +28,28 @@ from repro.graphs.types import GraphDelta
 
 
 def churn_delta(w: np.ndarray, rng, k: int, k_pad: int,
-                iu: np.ndarray, ju: np.ndarray) -> GraphDelta:
+                iu: np.ndarray, ju: np.ndarray,
+                n_pad: int) -> GraphDelta:
     """Toggle k random node pairs (background churn for one stream).
 
     Mutates `w` in place — the host mirror stays current without a
-    device round-trip per stream per tick. `iu`/`ju` are the shared
-    upper-triangle indices (hoisted out of the per-stream loop).
+    device round-trip per stream per tick. `iu`/`ju` are the stream's
+    upper-triangle indices (hoisted out of the tick loop).
     """
     n = w.shape[0]
-    pick = rng.choice(len(iu), size=k, replace=False)
+    pick = rng.choice(len(iu), size=min(k, len(iu)), replace=False)
     ii, jj = iu[pick], ju[pick]
     w_old = w[ii, jj]
     dw = np.where(w_old > 0, -w_old, 1.0).astype(np.float32)
-    d = GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n, k_pad=k_pad)
+    d = GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n, k_pad=k_pad,
+                               n_pad=n_pad)
     w[ii, jj] += dw
     w[jj, ii] += dw
     return d
 
 
-def dos_delta(w: np.ndarray, rng, frac: float, k_pad: int) -> GraphDelta:
+def dos_delta(w: np.ndarray, rng, frac: float, k_pad: int,
+              n_pad: int) -> GraphDelta:
     """Fan-in burst: frac·n nodes all connect to one target (in place)."""
     n = w.shape[0]
     target = int(rng.integers(0, n))
@@ -47,7 +60,7 @@ def dos_delta(w: np.ndarray, rng, frac: float, k_pad: int) -> GraphDelta:
     keep = np.abs(dw) > 1e-12
     ii, jj = botnet[keep], np.full(int(keep.sum()), target)
     d = GraphDelta.from_arrays(ii, jj, dw[keep], w_old[keep], n_nodes=n,
-                               k_pad=k_pad)
+                               k_pad=k_pad, n_pad=n_pad)
     w[ii, jj] += dw[keep]
     w[jj, ii] += dw[keep]
     return d
@@ -56,39 +69,76 @@ def dos_delta(w: np.ndarray, rng, frac: float, k_pad: int) -> GraphDelta:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, default=256)
-    ap.add_argument("--nodes", type=int, default=128)
+    ap.add_argument("--nodes", type=int, default=128,
+                    help="n_pad, the shared node layout size")
     ap.add_argument("--ticks", type=int, default=20)
     ap.add_argument("--churn", type=int, default=16, help="edges/tick")
     ap.add_argument("--dos-frac", type=float, default=0.25)
     ap.add_argument("--method", default="dense",
                     choices=["dense", "compact"])
+    ap.add_argument("--mixed-n", action="store_true",
+                    help="heterogeneous tenants: per-stream node counts "
+                         "cycle through {n/4, n/2, 3n/4, n}")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="save mid-run and resume from a simulated "
+                         "serving restart")
     args = ap.parse_args()
 
-    b, n = args.streams, args.nodes
+    b, n_pad = args.streams, args.nodes
     rng = np.random.default_rng(0)
-    k_pad = max(args.churn, int(args.dos_frac * n)) + 1
+    k_pad = max(args.churn, int(args.dos_frac * n_pad)) + 1
     attack_stream = int(rng.integers(0, b))
     attack_tick = args.ticks // 2
 
+    if args.mixed_n:
+        sizes = [max(8, n_pad // 4), max(8, n_pad // 2),
+                 max(8, 3 * n_pad // 4), n_pad]
+        ns = [sizes[s % len(sizes)] for s in range(b)]
+    else:
+        ns = [n_pad] * b
     graphs = [erdos_renyi(n, 0.08, seed=s, weighted=False)
-              for s in range(b)]
+              for s, n in enumerate(ns)]
     ws = [np.asarray(g.weights).copy() for g in graphs]
-    iu, ju = np.triu_indices(n, k=1)
+    triu = {n: np.triu_indices(n, k=1) for n in set(ns)}
 
     engine = StreamEngine(method=args.method)
-    states = StreamEngine.init_states(graphs)
+    states = StreamEngine.init_states(graphs, n_pad=n_pad)
+    if args.mixed_n:
+        print(f"mixed-n tenants: n in {sorted(set(ns))}, "
+              f"served at n_pad={n_pad} in one compiled tick")
+
+    restart_tick = args.ticks // 2 if args.ckpt_dir else None
+
+    def synthesize(t):
+        deltas = []
+        for s in range(b):
+            iu, ju = triu[ns[s]]
+            if s == attack_stream and t == attack_tick:
+                deltas.append(dos_delta(ws[s], rng, args.dos_frac, k_pad,
+                                        n_pad=n_pad))
+            else:
+                # churn proportional to the tenant's node-pair space, so
+                # a small tenant's background churn is not an anomaly in
+                # itself (edges live in O(n²) pair space)
+                n_s = ns[s]
+                churn_k = max(1, args.churn * (n_s * (n_s - 1))
+                              // (n_pad * (n_pad - 1)))
+                deltas.append(churn_delta(ws[s], rng, churn_k, k_pad,
+                                          iu, ju, n_pad=n_pad))
+        return stack_deltas(deltas)
 
     scores = np.zeros((args.ticks, b), np.float32)
     t0 = time.time()
     for t in range(args.ticks):
-        deltas = []
-        for s in range(b):
-            if s == attack_stream and t == attack_tick:
-                deltas.append(dos_delta(ws[s], rng, args.dos_frac, k_pad))
-            else:
-                deltas.append(churn_delta(ws[s], rng, args.churn, k_pad,
-                                          iu, ju))
-        dists, states = engine.tick(states, stack_deltas(deltas))
+        if restart_tick is not None and t == restart_tick:
+            engine.save(args.ckpt_dir, states, step=t)
+            print(f"tick {t}: state checkpointed to {args.ckpt_dir}; "
+                  "simulating serving restart...")
+            engine = StreamEngine(method=args.method)  # fresh process
+            states, step = engine.restore(args.ckpt_dir)
+            print(f"tick {t}: restored step={step}, resuming without "
+                  "replaying any stream")
+        dists, states = engine.tick(states, synthesize(t))
         scores[t] = np.asarray(dists)
     dt = time.time() - t0
 

@@ -49,12 +49,18 @@ import jax.numpy as jnp
 
 from repro.core.state import FingerState
 from repro.core.vnge import c_from_s_total
-from repro.graphs.types import GraphDelta
+from repro.graphs.types import (
+    GraphDelta,
+    gate_delta_by_nodes,
+    node_mask_after_joins,
+    node_mask_after_leaves,
+)
 
 __all__ = [
     "delta_stats",
     "delta_stats_compact",
     "delta_stats_from_sorted",
+    "gate_delta_for_update",
     "sorted_delta_endpoints",
     "update_state",
     "h_tilde_after",
@@ -180,6 +186,36 @@ def _apply_delta_strengths(strengths: jax.Array,
     return out.at[delta.receivers].add(dwm, mode="drop")
 
 
+def gate_delta_for_update(state_node_mask, delta: GraphDelta):
+    """Resolve the node dimension of one Theorem-2 step.
+
+    Returns ``(gated_delta, mask_after_joins)``: joins from the delta's
+    node slots are applied to the state's node mask first (a joining
+    node's first edges ride in the same delta), then edge slots touching
+    any node inactive under that post-join mask are gated to zero — a
+    padded slot can never contribute to ΔS/ΔQ/Δs_max. ``mask`` is None
+    (and the delta untouched) in the legacy unmasked, slot-free case.
+    Shared by `update_state` and the fused `kernels.delta_stats` op.
+    """
+    mask = state_node_mask
+    if mask is None and delta.node_ids is None:
+        return delta, None
+    if mask is None:
+        # Materializing a mask here would flip the FingerState pytree
+        # structure (node_mask None -> array) mid-update, which blows up
+        # a lax.scan carry with an opaque structure error — fail with a
+        # named cause instead.
+        raise ValueError(
+            "node join/leave delta applied to a state without a "
+            "node_mask; build the state from a mask-aware graph "
+            "(g.pad_to(n) / DenseGraph.from_weights(..., n_pad=...) / "
+            "StreamEngine.init_states) so the mask is part of the "
+            "carried state")
+    if delta.node_ids is not None:
+        mask = node_mask_after_joins(mask, delta)
+    return gate_delta_by_nodes(delta, mask), mask
+
+
 def update_state(
     state: FingerState,
     delta: GraphDelta,
@@ -195,7 +231,17 @@ def update_state(
 
     ``method`` selects the Δ-statistics path: ``"dense"`` (O(n) scatter)
     or ``"compact"`` (sorted-endpoint segment sum, O(Δn + Δm)).
+
+    Mask-aware layout: when the state carries a ``node_mask``, joins
+    from the delta's node slots activate before the edge changes, edge
+    slots touching inactive nodes are gated to exactly zero, and leaves
+    deactivate after them (zeroing any float residue in the left nodes'
+    strength slots). A node-slot delta against a mask-less state raises
+    (the mask must be part of the scan carry from the start). See
+    `graphs.types` for the join/leave ordering and the isolated-leave
+    contract.
     """
+    delta, mask_joined = gate_delta_for_update(state.node_mask, delta)
     if method == "dense":
         delta_s_total, delta_q_term, ds, max_new_s = delta_stats(state, delta)
         strengths_new = state.strengths + ds
@@ -223,6 +269,12 @@ def update_state(
     q_new = jnp.where(empty, 1.0, q_new)  # Q of the empty graph (Lemma 1)
 
     strengths_new = jnp.where(empty, 0.0, strengths_new)
+    mask_new = mask_joined
+    if mask_new is not None:
+        if delta.node_ids is not None:
+            mask_new = node_mask_after_leaves(mask_new, delta)
+        # Inactive slots hold exactly zero strength (kills leave residue).
+        strengths_new = strengths_new * mask_new
     if exact_smax:
         s_max_new = jnp.max(strengths_new)
     else:
@@ -234,6 +286,7 @@ def update_state(
         s_total=jnp.where(empty, 0.0, s_total_raw),
         s_max=s_max_new,
         strengths=strengths_new,
+        node_mask=mask_new,
     )
 
 

@@ -31,10 +31,22 @@ __all__ = [
 
 
 def average_graph(g: Graph, g2: Graph) -> Graph:
-    """Ḡ = (G ⊕ G')/2 with W̄ = (W + W')/2 on a common node set."""
+    """Ḡ = (G ⊕ G')/2 with W̄ = (W + W')/2 on a common node set.
+
+    For mask-aware layouts the common node set is the *union* of the two
+    active sets: a node present in either endpoint graph is present in Ḡ
+    (possibly with only half-weight edges).
+    """
     if isinstance(g, DenseGraph) and isinstance(g2, DenseGraph):
+        m1, m2 = g.node_mask, g2.node_mask
+        if m1 is None and m2 is None:
+            mask = None
+        else:
+            ones = jnp.ones((g.n_nodes,), g.weights.dtype)
+            mask = jnp.maximum(ones if m1 is None else m1,
+                               ones if m2 is None else m2)
         return DenseGraph(weights=0.5 * (g.weights + g2.weights),
-                          n_nodes=g.n_nodes)
+                          n_nodes=g.n_nodes, node_mask=mask)
     if isinstance(g, EdgeList) and isinstance(g2, EdgeList):
         # Concatenate the two halved edge lists; duplicate (i, j) slots sum
         # in every downstream strength/weight reduction, except Σ w² which
@@ -82,6 +94,11 @@ def jsdist_incremental(
     Given state(G) and ΔG, returns (JSdist(G, G ⊕ ΔG), state(G ⊕ ΔG)).
     Uses two Theorem-2 updates (ΔG/2 and ΔG) — O(Δn + Δm) total.
     ``method`` selects the Δ-statistics path (see `core.incremental`).
+
+    Node joins/leaves in ΔG follow the union-node-set semantics of the
+    JS divergence: `GraphDelta.scaled(0.5)` keeps joins but drops leaves
+    for the Ḡ update (a leaving node is still in Ḡ with its half-weight
+    edges), while the full ΔG update applies both.
     """
     half_state = update_state(state, delta.scaled(0.5),
                               exact_smax=exact_smax, method=method)

@@ -4,11 +4,18 @@ Theorem 2 updates Q' from (Q, c, ΔG); eq. (3) additionally needs s_max
 and (for exact Δs_max on the affected nodes) the current strength vector.
 Carrying the (n,) strengths keeps the state linear in nodes and makes the
 whole online loop a pure `lax.scan` over deltas.
+
+The (n,) node dimension is a *layout* size: when the state was built
+from a mask-aware graph it also carries the (n,) ``node_mask`` marking
+which slots are live, so states of streams with different true node
+counts share one pytree structure (and one compiled program) at a
+common ``n_pad``. Every statistic is computed over active nodes only —
+inactive slots have exactly zero strength.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +34,17 @@ class FingerState:
     s_total: jax.Array  # S = trace(L) = 1/c
     s_max: jax.Array  # largest nodal strength
     strengths: jax.Array  # (n,) nodal strengths of G
+    node_mask: Optional[jax.Array] = None  # (n,) 0/1; None = all active
 
     @property
     def c(self) -> jax.Array:
         return c_from_s_total(self.s_total)
+
+    def n_active(self) -> jax.Array:
+        """Number of live node slots (layout size when unmasked)."""
+        if self.node_mask is None:
+            return jnp.asarray(self.strengths.shape[-1], jnp.int32)
+        return jnp.sum(self.node_mask).astype(jnp.int32)
 
     def h_tilde(self) -> jax.Array:
         """H̃(G) = -Q ln(2 c s_max) from the carried statistics (eq. 2).
@@ -47,4 +61,5 @@ def finger_state(g: Graph) -> FingerState:
     s_total, sum_s2, sum_w2, s_max = strength_stats(g)
     c = c_from_s_total(s_total)
     q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
-    return FingerState(q=q, s_total=s_total, s_max=s_max, strengths=g.strengths())
+    return FingerState(q=q, s_total=s_total, s_max=s_max,
+                       strengths=g.strengths(), node_mask=g.node_mask)

@@ -54,13 +54,22 @@ def exact_vnge(g: Graph) -> jax.Array:
 
 
 def strength_stats(g: Graph):
-    """(S = trace L, Σ s_i², Σ_E w_ij², s_max) in one pass — Lemma 1 inputs."""
+    """(S = trace L, Σ s_i², Σ_E w_ij², s_max) in one pass — Lemma 1 inputs.
+
+    All four statistics run over active nodes only: ``strengths()`` /
+    ``masked_weights()`` zero inactive slots, which contribute exactly
+    nothing to the sums, and s_max over a nonnegative graph is untouched
+    by zero-strength padding (an all-inactive graph hits the empty-graph
+    convention S = 0 → H̃ = 0).
+    """
     if isinstance(g, DenseGraph):
-        s = g.strengths()
+        # one masked-weights materialization serves both s and Σw²
+        w = g.masked_weights()
+        s = jnp.sum(w, axis=1)
         s_total = jnp.sum(s)
         sum_s2 = jnp.sum(s * s)
         # each undirected edge appears twice in W: Σ_E w² = ½ Σ_ij W_ij².
-        sum_w2 = 0.5 * jnp.sum(g.weights * g.weights)
+        sum_w2 = 0.5 * jnp.sum(w * w)
         s_max = jnp.max(s)
         return s_total, sum_s2, sum_w2, s_max
     s = g.strengths()

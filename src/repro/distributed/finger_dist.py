@@ -37,13 +37,19 @@ def distributed_finger_state(g: EdgeList, mesh: Mesh,
     """FingerState of an edge-sharded graph (one pass + one all-reduce).
 
     The padded edge arrays are sharded along the edge axis over `axis`;
-    node-indexed outputs are replicated.
+    node-indexed inputs/outputs (the optional node mask, the strengths)
+    are replicated. Edges touching a masked-inactive node slot are gated
+    to zero, matching the single-device mask-aware layout.
     """
     n = g.n_nodes
 
-    def local(senders, receivers, weights, mask):
+    def local(senders, receivers, weights, mask, node_mask):
+        if node_mask is not None:
+            mask = mask * node_mask[senders] * node_mask[receivers]
         s_part, w2_part = _partials(senders, receivers, weights, mask, n)
         s = jax.lax.psum(s_part, axis)  # (n,) full strengths
+        if node_mask is not None:
+            s = s * node_mask
         sum_w2 = jax.lax.psum(w2_part, axis)
         s_total = jnp.sum(s)
         c = c_from_s_total(s_total)
@@ -51,15 +57,17 @@ def distributed_finger_state(g: EdgeList, mesh: Mesh,
         return q, s_total, jnp.max(s), s
 
     shard = P(axis)
+    # P() for the node-mask slot is correct whether it is an (n,)
+    # replicated array or None (an empty pytree matches any leaf spec).
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(shard, shard, shard, shard),
+        in_specs=(shard, shard, shard, shard, P()),
         out_specs=(P(), P(), P(), P()),
     )
     q, s_total, s_max, strengths = fn(g.senders, g.receivers, g.weights,
-                                      g.mask)
+                                      g.mask, g.node_mask)
     return FingerState(q=q, s_total=s_total, s_max=s_max,
-                       strengths=strengths)
+                       strengths=strengths, node_mask=g.node_mask)
 
 
 def distributed_power_iteration(

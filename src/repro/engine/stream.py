@@ -3,9 +3,9 @@
 The ROADMAP serving target is millions of users, each with their own
 evolving graph (session interaction graph, per-tenant topology, …). The
 per-stream state of Algorithm 2 is tiny — (Q, S, s_max) plus the (n,)
-strengths — so thousands of streams fit on one device as a stacked
-`FingerState` with a leading batch axis. Each serving tick applies one
-`GraphDelta` per stream:
+strengths and node mask — so thousands of streams fit on one device as a
+stacked `FingerState` with a leading batch axis. Each serving tick
+applies one `GraphDelta` per stream:
 
   tick      : vmapped `jsdist_incremental` over the B axis — one fused
               XLA computation instead of B Python-loop dispatches;
@@ -15,7 +15,21 @@ strengths — so thousands of streams fit on one device as a stacked
               the mesh "data" axis. Streams are independent, so the body
               needs zero collectives — scaling to a pod is embarrassing.
 
-All entry points are jit-compiled once per (B, n, k_pad) shape; the
+Variable-topology batches: streams do NOT need to share a true node
+count. `init_states` embeds every host graph into one shared static
+layout size `n_pad` and gives each stream a dynamic (n_pad,) node mask;
+inactive slots contribute exactly zero to every statistic, so each
+stream's H̃/JSdist equals its own unpadded FINGER value while the whole
+heterogeneous batch runs one compiled (B, n_pad, k_pad) program. Node
+joins/leaves are per-stream `GraphDelta` node slots, so tenants can grow
+and shrink mid-stream without recompilation.
+
+Restartable serving: `save`/`restore` persist the stacked state through
+`train.checkpoint` (atomic tmp-dir + rename writes; restore gathers to
+host and re-shards onto whatever mesh the new job runs), so a serving
+restart resumes scores exactly instead of replaying every stream.
+
+All entry points are jit-compiled once per (B, n_pad, k_pad) shape; the
 stream synthesizers' common `k_pad` keeps that a single compilation.
 """
 from __future__ import annotations
@@ -32,10 +46,45 @@ from repro.core.jsdist import jsdist_incremental
 from repro.core.state import FingerState, finger_state
 from repro.distributed.sharding import shard_map
 from repro.graphs.types import GraphDelta
+from repro.train.checkpoint import (
+    latest_checkpoint,
+    load_manifest,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _check_consistent(label: str, kind: str, values) -> None:
+    """Raise naming the offending streams when a static field disagrees.
+
+    Without this, `jnp.stack`/`tree_map` dies with an opaque pytree
+    structure error that names no stream at all.
+    """
+    values = list(values)
+    if not values:
+        raise ValueError(f"{label}: empty stream list")
+    majority = max(set(values), key=values.count)
+    bad = [i for i, v in enumerate(values) if v != majority]
+    if bad:
+        raise ValueError(
+            f"{label} needs a common {kind}, got {majority!r} for most "
+            f"streams but {[values[i] for i in bad]!r} for stream(s) "
+            f"{bad}; pad every stream to one shared layout "
+            f"(thread n_pad/k_pad through the constructors)")
 
 
 def stack_states(states: Sequence[FingerState]) -> FingerState:
-    """[state_b] → stacked FingerState with a leading (B,) batch axis."""
+    """[state_b] → stacked FingerState with a leading (B,) batch axis.
+
+    Every stream must share one node layout: equal strengths shape
+    (n_pad) and agreeing node-mask presence. Validated up front so the
+    error names the offending streams instead of an opaque pytree
+    mismatch.
+    """
+    _check_consistent("stack_states", "n_pad (strengths shape)",
+                      (tuple(s.strengths.shape) for s in states))
+    _check_consistent("stack_states", "node_mask presence",
+                      (s.node_mask is not None for s in states))
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
 
@@ -47,12 +96,21 @@ def unstack_states(states: FingerState) -> List[FingerState]:
 
 
 def stack_deltas(deltas: Sequence[GraphDelta]) -> GraphDelta:
-    """[delta_b] (common k_pad and n) → stacked (B, k_pad) GraphDelta."""
-    k_pads = {d.dw.shape[-1] for d in deltas}
-    if len(k_pads) != 1:
-        raise ValueError(
-            f"stack_deltas needs a common k_pad, got {sorted(k_pads)}; "
-            "thread k_pad through the delta constructors")
+    """[delta_b] → stacked (B, k_pad) GraphDelta.
+
+    Streams must share every static/layout dimension — k_pad, n_pad
+    (the static `n_nodes`), node-slot presence and j_pad. Each is
+    validated up front with an error naming the offending streams.
+    """
+    _check_consistent("stack_deltas", "k_pad",
+                      (d.dw.shape[-1] for d in deltas))
+    _check_consistent("stack_deltas", "n_pad (static n_nodes)",
+                      (d.n_nodes for d in deltas))
+    _check_consistent("stack_deltas", "node-slot presence",
+                      (d.node_ids is not None for d in deltas))
+    if deltas[0].node_ids is not None:
+        _check_consistent("stack_deltas", "j_pad",
+                          (d.node_ids.shape[-1] for d in deltas))
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *deltas)
 
 
@@ -85,10 +143,92 @@ class StreamEngine:
 
     # -- construction ----------------------------------------------------
     @staticmethod
-    def init_states(graphs) -> FingerState:
+    def init_states(graphs, n_pad: Optional[int] = None) -> FingerState:
         """Initial stacked state from B host graphs (one O(n + m) pass
-        per stream, host-side; the online loop never does this again)."""
-        return stack_states([finger_state(g) for g in graphs])
+        per stream, host-side; the online loop never does this again).
+
+        Heterogeneous node counts are welcome: every graph is embedded
+        into a shared `n_pad` layout (default: the largest layout in the
+        batch) with a per-stream node mask, so a batch of tenants with
+        n ∈ {32, 57, 96, 128} runs as one (B, n_pad) program. Uniform
+        batches get an all-ones mask — the compiled tick is identical
+        either way, so mixed-`n` serving costs nothing extra.
+        """
+        graphs = list(graphs)
+        if n_pad is None:
+            n_pad = max(g.n_nodes for g in graphs)
+        too_big = [i for i, g in enumerate(graphs) if g.n_nodes > n_pad]
+        if too_big:
+            raise ValueError(
+                f"init_states: stream(s) {too_big} have n_nodes > "
+                f"n_pad={n_pad}")
+        return stack_states([finger_state(g.pad_to(n_pad))
+                             for g in graphs])
+
+    # -- persistence -----------------------------------------------------
+    def save(self, ckpt_dir: str, states: FingerState, step: int = 0,
+             metadata: Optional[dict] = None, keep_last: int = 3) -> str:
+        """Persist the stacked serving state (atomic write).
+
+        Goes through `train.checkpoint`: arrays are gathered to host and
+        published with a tmp-dir + rename, so a crash mid-save can never
+        corrupt the latest checkpoint. The manifest records the stacked
+        layout so `restore` can rebuild the pytree without a template.
+        """
+        # Reserved keys win over caller metadata: restore() depends on
+        # them to rebuild the pytree and validate the engine config.
+        meta = dict(metadata or {})
+        meta.update({
+            "kind": "stream_engine_state",
+            "b": int(states.q.shape[0]),
+            "n_pad": int(states.strengths.shape[-1]),
+            "has_node_mask": states.node_mask is not None,
+            "exact_smax": self.exact_smax,
+            "method": self.method,
+        })
+        return save_checkpoint(ckpt_dir, step, states, metadata=meta,
+                               keep_last=keep_last)
+
+    def restore(self, ckpt_dir: str, mesh: Optional[Mesh] = None,
+                axis: str = "data") -> Tuple[FingerState, int]:
+        """Resume the stacked state from the latest checkpoint.
+
+        Returns ``(states, step)``. Mesh-agnostic: arrays come back on
+        host and are re-sharded onto `mesh[axis]` when a mesh is given —
+        the saving job's device layout is irrelevant, so an elastic
+        restart can change pod shape and keep serving.
+        """
+        path = latest_checkpoint(ckpt_dir)
+        if path is None:
+            raise FileNotFoundError(
+                f"restore: no checkpoint under {ckpt_dir!r}")
+        manifest = load_manifest(path)
+        meta = manifest["metadata"]
+        if meta.get("kind") != "stream_engine_state":
+            raise ValueError(
+                f"restore: {path!r} is not a StreamEngine checkpoint "
+                f"(kind={meta.get('kind')!r})")
+        for key, want in (("exact_smax", self.exact_smax),
+                          ("method", self.method)):
+            if key in meta and meta[key] != want:
+                raise ValueError(
+                    f"restore: checkpoint was saved with {key}="
+                    f"{meta[key]!r} but this engine uses {want!r}; "
+                    "resuming across configs breaks the identical-"
+                    "scores guarantee — construct the engine with the "
+                    "saved config")
+        b, n_pad = int(meta["b"]), int(meta["n_pad"])
+        zb = jnp.zeros((b,), jnp.float32)
+        zbn = jnp.zeros((b, n_pad), jnp.float32)
+        template = FingerState(
+            q=zb, s_total=zb, s_max=zb, strengths=zbn,
+            node_mask=zbn if meta.get("has_node_mask") else None)
+        states, manifest = restore_checkpoint(path, template,
+                                              manifest=manifest)
+        states = jax.tree_util.tree_map(jnp.asarray, states)
+        if mesh is not None:
+            states = self.shard_states(states, mesh, axis)
+        return states, int(manifest["step"])
 
     # -- serving ---------------------------------------------------------
     def tick(self, states: FingerState,

@@ -15,4 +15,7 @@ from repro.graphs.types import (
     EdgeList,
     GraphDelta,
     apply_delta_dense,
+    gate_delta_by_nodes,
+    node_mask_after_joins,
+    node_mask_after_leaves,
 )

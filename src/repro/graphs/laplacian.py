@@ -12,15 +12,15 @@ Graph = Union[DenseGraph, EdgeList]
 
 
 def laplacian_dense(g: DenseGraph) -> jax.Array:
-    """L = S - W."""
+    """L = S - W (inactive node slots contribute zero rows/columns)."""
     s = g.strengths()
-    return jnp.diag(s) - g.weights
+    return jnp.diag(s) - g.masked_weights()
 
 
 def trace_l(g: Graph) -> jax.Array:
     """trace(L) = Σ_i s_i = 2 Σ_E w_ij."""
     if isinstance(g, DenseGraph):
-        return jnp.sum(g.weights)
+        return jnp.sum(g.masked_weights())
     return 2.0 * jnp.sum(g.masked_weights())
 
 
@@ -34,9 +34,10 @@ def laplacian_matvec(g: Graph) -> Callable[[jax.Array], jax.Array]:
     """Matrix-free x ↦ L x, O(n + m) for edge lists, O(n²) dense."""
     if isinstance(g, DenseGraph):
         s = g.strengths()
+        w_dense = g.masked_weights()
 
         def mv_dense(x):
-            return s * x - g.weights @ x
+            return s * x - w_dense @ x
 
         return mv_dense
 

@@ -13,6 +13,28 @@ they can flow through jit / scan / shard_map:
 
 All graphs are undirected with nonnegative weights; every undirected edge
 (i, j), i < j, is stored exactly once in EdgeList/GraphDelta.
+
+Mask-aware node layout
+----------------------
+The node dimension is a *layout* size (``n_nodes``, aliased ``n_pad``):
+a static pytree field shared by every stream stacked into one batch.
+Which of those slots are real is the per-stream dynamic ``node_mask``
+((n,) 0/1, ``None`` meaning "all active"). Padding with inactive nodes
+is exact for every FINGER statistic: an isolated node has zero strength,
+contributes zero to S, Σs², Σ_E w² and s_max, and adds only a zero
+eigenvalue to L_N (0 ln 0 = 0), so H, Ĥ and H̃ are all invariant — the
+robustness-to-isolated-nodes property that quadratic-approximation work
+(Choi et al., arXiv:1811.11087) leans on. That is what lets streams with
+distinct true node counts share one compiled (B, n_pad) program.
+
+Node joins/leaves are first-class deltas: ``GraphDelta`` carries optional
+``node_ids``/``node_flag`` slots (+1 join, -1 leave, 0 padding). Joins
+activate a node *before* the delta's edge changes (so a join + its first
+edges fit in one delta); leaves deactivate *after* them (so edge
+deletions + the leave fit in one delta). A leave requires the node to be
+isolated once the delta's edge changes have applied — deactivating a
+node that still has incident weight leaves its stale contribution in the
+scalar statistics (same contract class as ``w_old`` correctness).
 """
 from __future__ import annotations
 
@@ -73,26 +95,109 @@ def _pytree_dataclass(cls=None, *, static_fields=()):
     return wrap(cls)
 
 
+def _default_node_mask(n_logical: int, n_pad: int, dtype=jnp.float32):
+    """[1]*n_logical + [0]*(n_pad - n_logical) — contiguous active prefix."""
+    return jnp.concatenate([
+        jnp.ones((n_logical,), dtype),
+        jnp.zeros((n_pad - n_logical,), dtype),
+    ])
+
+
+def _resolve_node_layout(n_nodes: int, n_pad, node_mask, kind: str):
+    """(logical n, n_pad, mask) constructor args → (layout n, mask).
+
+    ``n_pad=None, node_mask=None`` keeps the legacy unmasked layout
+    (layout size = n_nodes, mask None). Supplying either produces a
+    masked layout of size n_pad (default n_nodes) whose first n_nodes
+    slots are active unless an explicit mask says otherwise.
+    """
+    if n_pad is None and node_mask is None:
+        return int(n_nodes), None
+    n_layout = int(n_nodes) if n_pad is None else int(n_pad)
+    if n_layout < n_nodes:
+        raise ValueError(f"{kind}: n_pad={n_layout} < n_nodes={n_nodes}")
+    if node_mask is None:
+        node_mask = _default_node_mask(int(n_nodes), n_layout)
+    else:
+        node_mask = jnp.asarray(node_mask, jnp.float32)
+        if node_mask.shape[0] == n_nodes and n_layout > n_nodes:
+            node_mask = jnp.pad(node_mask, (0, n_layout - int(n_nodes)))
+        if node_mask.shape[0] != n_layout:
+            raise ValueError(
+                f"{kind}: node_mask length {node_mask.shape[0]} != "
+                f"n_pad {n_layout}")
+    return n_layout, node_mask
+
+
 @_pytree_dataclass(static_fields=("n_nodes",))
 class DenseGraph:
-    """Symmetric dense weighted adjacency. ``weights[i, j] == weights[j, i]``."""
+    """Symmetric dense weighted adjacency. ``weights[i, j] == weights[j, i]``.
+
+    ``n_nodes`` is the layout size (``n_pad``); ``node_mask`` (optional,
+    (n,) 0/1) marks which slots hold real nodes. Inactive rows/columns of
+    ``weights`` are zero by construction.
+    """
 
     weights: jax.Array  # (n, n), nonnegative, zero diagonal
     n_nodes: int
+    node_mask: Optional[jax.Array] = None  # (n,) 0/1; None = all active
 
     @property
     def n(self) -> int:
         return self.n_nodes
 
+    @property
+    def n_pad(self) -> int:
+        return self.n_nodes
+
+    def n_active(self) -> jax.Array:
+        if self.node_mask is None:
+            return jnp.asarray(self.n_nodes, jnp.int32)
+        return jnp.sum(self.node_mask).astype(jnp.int32)
+
+    def masked_weights(self) -> jax.Array:
+        """W with inactive rows/columns forced to exactly zero."""
+        if self.node_mask is None:
+            return self.weights
+        m = self.node_mask.astype(self.weights.dtype)
+        return self.weights * m[:, None] * m[None, :]
+
     def strengths(self) -> jax.Array:
-        return jnp.sum(self.weights, axis=1)
+        return jnp.sum(self.masked_weights(), axis=1)
+
+    def pad_to(self, n_pad: int) -> "DenseGraph":
+        """Embed into an n_pad layout; new slots are inactive (mask 0).
+
+        Always returns a graph *with* a node mask (all-ones when nothing
+        was padded) so heterogeneous batches share one pytree structure.
+        """
+        n = self.n_nodes
+        if n_pad < n:
+            raise ValueError(f"pad_to: n_pad={n_pad} < n_nodes={n}")
+        mask = self.node_mask
+        if mask is None:
+            mask = jnp.ones((n,), self.weights.dtype)
+        w = self.weights
+        if n_pad > n:
+            w = jnp.pad(w, ((0, n_pad - n), (0, n_pad - n)))
+            mask = jnp.pad(mask, (0, n_pad - n))
+        return DenseGraph(weights=w, n_nodes=n_pad, node_mask=mask)
 
     @staticmethod
-    def from_weights(w: jax.Array) -> "DenseGraph":
+    def from_weights(w: jax.Array, n_pad: Optional[int] = None,
+                     node_mask: Optional[jax.Array] = None) -> "DenseGraph":
         n = w.shape[0]
         w = 0.5 * (w + w.T)
         w = w * (1.0 - jnp.eye(n, dtype=w.dtype))
-        return DenseGraph(weights=w, n_nodes=n)
+        if n_pad is None and node_mask is None:
+            return DenseGraph(weights=w, n_nodes=n)
+        n_layout, node_mask = _resolve_node_layout(
+            n, n_pad, node_mask, kind="DenseGraph.from_weights")
+        node_mask = node_mask.astype(w.dtype)
+        if n_layout > n:
+            w = jnp.pad(w, ((0, n_layout - n), (0, n_layout - n)))
+        w = w * node_mask[:, None] * node_mask[None, :]
+        return DenseGraph(weights=w, n_nodes=n_layout, node_mask=node_mask)
 
 
 @_pytree_dataclass(static_fields=("n_nodes",))
@@ -100,7 +205,9 @@ class EdgeList:
     """Padded undirected edge list. Invalid (padding) slots have mask 0.
 
     ``senders[k] < receivers[k]`` for valid slots; each undirected edge
-    appears exactly once.
+    appears exactly once. ``n_nodes`` is the layout size; ``node_mask``
+    (optional) marks active node slots, and edges touching an inactive
+    node contribute exactly zero to every statistic.
     """
 
     senders: jax.Array  # (m_pad,) int32
@@ -108,39 +215,70 @@ class EdgeList:
     weights: jax.Array  # (m_pad,) float
     mask: jax.Array  # (m_pad,) float 0/1
     n_nodes: int
+    node_mask: Optional[jax.Array] = None  # (n,) 0/1; None = all active
 
     @property
     def n(self) -> int:
         return self.n_nodes
 
     @property
+    def n_pad(self) -> int:
+        return self.n_nodes
+
+    @property
     def m_pad(self) -> int:
         return self.senders.shape[0]
+
+    def n_active(self) -> jax.Array:
+        if self.node_mask is None:
+            return jnp.asarray(self.n_nodes, jnp.int32)
+        return jnp.sum(self.node_mask).astype(jnp.int32)
 
     def n_edges(self) -> jax.Array:
         return jnp.sum(self.mask).astype(jnp.int32)
 
     def masked_weights(self) -> jax.Array:
-        return self.weights * self.mask
+        w = self.weights * self.mask
+        if self.node_mask is not None:
+            nm = self.node_mask
+            w = w * nm[self.senders] * nm[self.receivers]
+        return w
 
     def strengths(self) -> jax.Array:
         w = self.masked_weights()
         s = jnp.zeros((self.n_nodes,), dtype=self.weights.dtype)
         s = s.at[self.senders].add(w, mode="drop")
         s = s.at[self.receivers].add(w, mode="drop")
+        if self.node_mask is not None:
+            s = s * self.node_mask
         return s
+
+    def pad_to(self, n_pad: int) -> "EdgeList":
+        """Embed into an n_pad node layout (edge arrays unchanged)."""
+        n = self.n_nodes
+        if n_pad < n:
+            raise ValueError(f"pad_to: n_pad={n_pad} < n_nodes={n}")
+        mask = self.node_mask
+        if mask is None:
+            mask = jnp.ones((n,), self.weights.dtype)
+        if n_pad > n:
+            mask = jnp.pad(mask, (0, n_pad - n))
+        return EdgeList(senders=self.senders, receivers=self.receivers,
+                        weights=self.weights, mask=self.mask,
+                        n_nodes=n_pad, node_mask=mask)
 
     def to_dense(self) -> DenseGraph:
         w = self.masked_weights()
         a = jnp.zeros((self.n_nodes, self.n_nodes), dtype=self.weights.dtype)
         a = a.at[self.senders, self.receivers].add(w, mode="drop")
         a = a.at[self.receivers, self.senders].add(w, mode="drop")
-        return DenseGraph(weights=a, n_nodes=self.n_nodes)
+        return DenseGraph(weights=a, n_nodes=self.n_nodes,
+                          node_mask=self.node_mask)
 
     @staticmethod
     def from_dense(g: DenseGraph, m_pad: Optional[int] = None) -> "EdgeList":
         """Host-side conversion (uses numpy; not jit-able)."""
-        w = np.asarray(g.weights)
+        w = np.asarray(g.masked_weights())
         iu, ju = np.triu_indices(g.n_nodes, k=1)
         vals = w[iu, ju]
         nz = vals != 0.0
@@ -157,11 +295,14 @@ class EdgeList:
             weights=jnp.asarray(np.concatenate([vals, np.zeros(pad)]), jnp.float32),
             mask=jnp.asarray(np.concatenate([np.ones(m), np.zeros(pad)]), jnp.float32),
             n_nodes=g.n_nodes,
+            node_mask=g.node_mask,
         )
 
     @staticmethod
     def from_arrays(senders, receivers, weights, n_nodes: int,
-                    m_pad: Optional[int] = None) -> "EdgeList":
+                    m_pad: Optional[int] = None,
+                    n_pad: Optional[int] = None,
+                    node_mask: Optional[jax.Array] = None) -> "EdgeList":
         senders = np.asarray(senders, np.int32)
         receivers = np.asarray(receivers, np.int32)
         weights = np.asarray(weights, np.float32)
@@ -174,13 +315,16 @@ class EdgeList:
         if m_pad is None:
             m_pad = max(m, 1)
         pad = m_pad - m
+        n_layout, node_mask = _resolve_node_layout(
+            n_nodes, n_pad, node_mask, kind="EdgeList.from_arrays")
         return EdgeList(
             senders=jnp.asarray(np.concatenate([senders, np.zeros(pad, np.int32)])),
             receivers=jnp.asarray(np.concatenate([receivers, np.zeros(pad, np.int32)])),
             weights=jnp.asarray(np.concatenate([weights, np.zeros(pad, np.float32)])),
             mask=jnp.asarray(np.concatenate([np.ones(m, np.float32),
                                              np.zeros(pad, np.float32)])),
-            n_nodes=n_nodes,
+            n_nodes=n_layout,
+            node_mask=node_mask,
         )
 
 
@@ -192,6 +336,12 @@ class GraphDelta:
     Edge addition: dw = +w; deletion: dw = -w_old; re-weight: dw = w_new - w_old.
     ``w_old[k]`` is the edge's weight in G *before* the delta (0 for additions);
     carrying it makes the Theorem-2 ΔQ computable in O(Δm) without touching W.
+
+    Node joins/leaves ride along in the optional ``node_ids``/``node_flag``
+    slots (+1 join, -1 leave, 0 padding; see the module docstring for the
+    join-before-edges / leave-after-edges ordering and the isolated-leave
+    contract). Joins of isolated nodes change no FINGER statistic, so a
+    node-only delta is a zero-cost mask update.
     """
 
     senders: jax.Array  # (k_pad,) int32
@@ -200,22 +350,42 @@ class GraphDelta:
     w_old: jax.Array  # (k_pad,) float
     mask: jax.Array  # (k_pad,) float 0/1
     n_nodes: int
+    node_ids: Optional[jax.Array] = None  # (j_pad,) int32
+    node_flag: Optional[jax.Array] = None  # (j_pad,) float +1/-1/0
 
     @property
     def n(self) -> int:
         return self.n_nodes
 
+    @property
+    def n_pad(self) -> int:
+        return self.n_nodes
+
+    @property
+    def has_node_slots(self) -> bool:
+        return self.node_ids is not None
+
     def scaled(self, factor: float) -> "GraphDelta":
-        """ΔG/2 for Algorithm 2 (the averaged graph G ⊕ ΔG/2)."""
+        """ΔG/2 for Algorithm 2 (the averaged graph G ⊕ ΔG/2).
+
+        Joins are kept (a joining node exists in Ḡ, isolated or with its
+        half-weight first edges) but leaves are dropped: a node leaving
+        G' is still present in Ḡ with its half-weight edges, so Ḡ must
+        not deactivate it.
+        """
+        flag = self.node_flag
+        if flag is not None:
+            flag = jnp.maximum(flag, 0.0)
         return GraphDelta(
             senders=self.senders, receivers=self.receivers,
             dw=self.dw * factor, w_old=self.w_old, mask=self.mask,
-            n_nodes=self.n_nodes,
+            n_nodes=self.n_nodes, node_ids=self.node_ids, node_flag=flag,
         )
 
     def delta_strengths(self, n: Optional[int] = None) -> jax.Array:
         """Δs_i for all nodes (dense (n,) scatter; zero off ΔV)."""
-        n = n or self.n_nodes
+        if n is None:
+            n = self.n_nodes
         dwm = self.dw * self.mask
         ds = jnp.zeros((n,), dtype=self.dw.dtype)
         ds = ds.at[self.senders].add(dwm, mode="drop")
@@ -228,7 +398,10 @@ class GraphDelta:
 
     @staticmethod
     def from_arrays(senders, receivers, dw, w_old, n_nodes: int,
-                    k_pad: Optional[int] = None) -> "GraphDelta":
+                    k_pad: Optional[int] = None,
+                    n_pad: Optional[int] = None,
+                    join=(), leave=(),
+                    j_pad: Optional[int] = None) -> "GraphDelta":
         senders = np.asarray(senders, np.int32)
         receivers = np.asarray(receivers, np.int32)
         dw = np.asarray(dw, np.float32)
@@ -244,20 +417,103 @@ class GraphDelta:
             raise ValueError(f"k={k} delta edges exceed k_pad={k_pad}")
         pad = k_pad - k
         z = np.zeros(pad, np.float32)
+        n_layout = int(n_nodes) if n_pad is None else int(n_pad)
+        if n_layout < n_nodes:
+            raise ValueError(
+                f"GraphDelta.from_arrays: n_pad={n_layout} < "
+                f"n_nodes={n_nodes}")
+        node_ids = node_flag = None
+        join = np.asarray(join, np.int32).ravel()
+        leave = np.asarray(leave, np.int32).ravel()
+        for name, ids in (("join", join), ("leave", leave)):
+            if ids.size and (ids.min() < 0 or ids.max() >= n_layout):
+                # The jit-side scatters use mode="drop", which would
+                # silently ignore an out-of-layout node — a tenant
+                # outgrowing n_pad must be a hard error instead.
+                raise ValueError(
+                    f"GraphDelta.from_arrays: {name} node id(s) "
+                    f"{sorted(set(int(i) for i in ids if i < 0 or i >= n_layout))} "
+                    f"outside the n_pad={n_layout} layout; re-pad the "
+                    "stream to a larger n_pad to grow past it")
+        if join.size or leave.size or j_pad is not None:
+            j = int(join.size + leave.size)
+            if j_pad is None:
+                j_pad = max(j, 1)
+            if j > j_pad:
+                raise ValueError(
+                    f"{j} node join/leave slots exceed j_pad={j_pad}")
+            jpad = j_pad - j
+            node_ids = jnp.asarray(np.concatenate(
+                [join, leave, np.zeros(jpad, np.int32)]))
+            node_flag = jnp.asarray(np.concatenate(
+                [np.ones(join.size, np.float32),
+                 -np.ones(leave.size, np.float32),
+                 np.zeros(jpad, np.float32)]))
         return GraphDelta(
             senders=jnp.asarray(np.concatenate([lo, np.zeros(pad, np.int32)])),
             receivers=jnp.asarray(np.concatenate([hi, np.zeros(pad, np.int32)])),
             dw=jnp.asarray(np.concatenate([dw, z])),
             w_old=jnp.asarray(np.concatenate([w_old, z])),
             mask=jnp.asarray(np.concatenate([np.ones(k, np.float32), z])),
-            n_nodes=n_nodes,
+            n_nodes=n_layout,
+            node_ids=node_ids,
+            node_flag=node_flag,
         )
 
 
+def node_mask_after_joins(node_mask: jax.Array,
+                          delta: GraphDelta) -> jax.Array:
+    """Activate the delta's join slots (flag > 0); no-op on others."""
+    join = (delta.node_flag > 0).astype(node_mask.dtype)
+    return node_mask.at[delta.node_ids].max(join, mode="drop")
+
+
+def node_mask_after_leaves(node_mask: jax.Array,
+                           delta: GraphDelta) -> jax.Array:
+    """Deactivate the delta's leave slots (flag < 0); no-op on others."""
+    stay = 1.0 - (delta.node_flag < 0).astype(node_mask.dtype)
+    return node_mask.at[delta.node_ids].min(stay, mode="drop")
+
+
+def gate_delta_by_nodes(delta: GraphDelta,
+                        node_mask: jax.Array) -> GraphDelta:
+    """Zero the validity of delta edges touching an inactive node.
+
+    The gate uses the *post-join* mask so a join plus its first edges
+    can share one delta; it is what makes padded node slots contribute
+    exactly zero even if a stray delta edge points into the padding.
+    """
+    gate = node_mask[delta.senders] * node_mask[delta.receivers]
+    return GraphDelta(
+        senders=delta.senders, receivers=delta.receivers,
+        dw=delta.dw, w_old=delta.w_old,
+        mask=delta.mask * gate.astype(delta.mask.dtype),
+        n_nodes=delta.n_nodes,
+        node_ids=delta.node_ids, node_flag=delta.node_flag,
+    )
+
+
 def apply_delta_dense(g: DenseGraph, delta: GraphDelta) -> DenseGraph:
-    """G' = G ⊕ ΔG on the dense representation (oracle path)."""
+    """G' = G ⊕ ΔG on the dense representation (oracle path).
+
+    Mirrors the incremental semantics: joins activate before the edge
+    changes, edges are gated by the post-join mask, leaves deactivate
+    after them (zeroing the left nodes' rows/columns — a no-op under the
+    isolated-leave contract).
+    """
+    mask = g.node_mask
+    if delta.has_node_slots and mask is None:
+        mask = jnp.ones((g.n_nodes,), g.weights.dtype)
+    if delta.has_node_slots:
+        mask = node_mask_after_joins(mask, delta)
+    if mask is not None:
+        delta = gate_delta_by_nodes(delta, mask)
     dwm = delta.dw * delta.mask
     w = g.weights
     w = w.at[delta.senders, delta.receivers].add(dwm, mode="drop")
     w = w.at[delta.receivers, delta.senders].add(dwm, mode="drop")
-    return DenseGraph(weights=w, n_nodes=g.n_nodes)
+    if delta.has_node_slots:
+        mask = node_mask_after_leaves(mask, delta)
+    if mask is not None:
+        w = w * mask[:, None] * mask[None, :]
+    return DenseGraph(weights=w, n_nodes=g.n_nodes, node_mask=mask)

@@ -13,7 +13,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.incremental import sorted_delta_endpoints
+from repro.core.incremental import (
+    gate_delta_for_update,
+    sorted_delta_endpoints,
+)
 from repro.core.state import FingerState
 from repro.graphs.types import GraphDelta
 from repro.kernels.delta_stats.kernel import delta_stats_sorted_pallas
@@ -42,6 +45,8 @@ def prepare_sorted_delta(strengths: jax.Array, delta: GraphDelta):
     """
     k = delta.senders.shape[0]
     k_pad = ((k + _LANE - 1) // _LANE) * _LANE
+    # Node join/leave slots are dropped: they carry no edge statistics,
+    # and callers gate the edge mask by the post-join node mask first.
     padded = GraphDelta(
         senders=_pad_edges(delta.senders, k_pad),
         receivers=_pad_edges(delta.receivers, k_pad),
@@ -64,7 +69,14 @@ def delta_stats_fused(
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """(ΔS, ΔQ, max_{ΔV}(s_i + Δs_i)) via the fused one-pass kernel."""
+    """(ΔS, ΔQ, max_{ΔV}(s_i + Δs_i)) via the fused one-pass kernel.
+
+    Mask-aware: delta edges touching nodes inactive under the state's
+    post-join node mask are gated to zero before the reduction, so
+    padded node slots contribute exactly nothing (same gating as
+    `core.incremental.update_state`).
+    """
+    delta, _ = gate_delta_for_update(state.node_mask, delta)
     prep = prepare_sorted_delta(state.strengths, delta)
     if not use_pallas or prep[0].shape[0] > _MAX_FUSED_ENDPOINTS:
         stats = delta_stats_sorted_ref(*prep)

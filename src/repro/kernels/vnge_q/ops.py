@@ -26,27 +26,43 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _apply_node_mask(w: jax.Array, node_mask) -> jax.Array:
+    """Zero inactive rows/columns — the mask-aware layout's contract that
+    padded node slots contribute exactly nothing to any statistic."""
+    if node_mask is None:
+        return w
+    m = node_mask.astype(w.dtype)
+    return w * m[:, None] * m[None, :]
+
+
 def vnge_q_stats(w: jax.Array, bm: int = 128, bn: int = 128,
-                 use_pallas: bool = True) -> jax.Array:
+                 use_pallas: bool = True,
+                 node_mask=None) -> jax.Array:
     """(n, n) W → (4,) [S, Σs², Σ_E w², s_max]. Zero-padding is exact for
     every statistic (padded rows have zero strength; s_max over a
-    nonnegative graph is unaffected)."""
+    nonnegative graph is unaffected). ``node_mask`` zeroes inactive
+    rows/columns first — the lane padding and the mask-aware node layout
+    are the same mechanism."""
+    w = _apply_node_mask(w, node_mask)
     if not use_pallas:
         return vnge_q_stats_ref(w)
     wp = _pad_to_blocks(w.astype(jnp.float32), bm, bn)
     return vnge_q_stats_pallas(wp, bm=bm, bn=bn, interpret=not _on_tpu())
 
 
-def quadratic_q_dense(w: jax.Array, use_pallas: bool = True) -> jax.Array:
+def quadratic_q_dense(w: jax.Array, use_pallas: bool = True,
+                      node_mask=None) -> jax.Array:
     """Lemma-1 Q of a dense graph in one fused HBM pass."""
-    return q_from_stats(vnge_q_stats(w, use_pallas=use_pallas))
+    return q_from_stats(vnge_q_stats(w, use_pallas=use_pallas,
+                                     node_mask=node_mask))
 
 
-def vnge_tilde_dense(w: jax.Array, use_pallas: bool = True) -> jax.Array:
+def vnge_tilde_dense(w: jax.Array, use_pallas: bool = True,
+                     node_mask=None) -> jax.Array:
     """FINGER-H̃ (eq. 2) of a dense graph in one fused HBM pass."""
     from repro.core.vnge import _lemma1_cq
 
-    stats = vnge_q_stats(w, use_pallas=use_pallas)
+    stats = vnge_q_stats(w, use_pallas=use_pallas, node_mask=node_mask)
     s_total, s_max = stats[0], stats[3]
     c, q = _lemma1_cq(s_total, stats[1], stats[2])
     h = -q * jnp.log(jnp.clip(2.0 * c * s_max, 1e-30, None))

@@ -69,10 +69,21 @@ def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
     return os.path.join(ckpt_dir, steps[-1]) if steps else None
 
 
-def restore_checkpoint(path: str, template) -> Tuple[Any, dict]:
-    """Restore into the structure of `template` (arrays or structs)."""
+def load_manifest(path: str) -> dict:
+    """The checkpoint's manifest (step, time, metadata)."""
     with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+        return json.load(f)
+
+
+def restore_checkpoint(path: str, template,
+                       manifest: Optional[dict] = None) -> Tuple[Any, dict]:
+    """Restore into the structure of `template` (arrays or structs).
+
+    Callers that already loaded the manifest (e.g. to build the template
+    from its metadata) can pass it to avoid a second read.
+    """
+    if manifest is None:
+        manifest = load_manifest(path)
     data = np.load(os.path.join(path, "arrays.npz"))
     named = _flatten_with_names(template)
     flat, tdef = jax.tree_util.tree_flatten(template)

@@ -1,0 +1,486 @@
+"""Mask-aware node layout: mixed-n batches, node join/leave deltas,
+checkpointed serving state, and the compile-once guarantee.
+
+The acceptance property: a batch of streams with distinct true node
+counts served in one vmapped tick at a shared n_pad produces per-stream
+H̃/JSdist matching per-stream unpadded FINGER within 1e-5 — including
+across node joins/leaves — and `StreamEngine.restore` resumes identical
+scores after a simulated kill/restart.
+"""
+import time
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    exact_vnge,
+    finger_state,
+    jsdist_incremental,
+    update_state,
+    vnge_tilde,
+)
+from repro.engine import StreamEngine, stack_deltas, stack_states
+from repro.graphs import DenseGraph, GraphDelta, apply_delta_dense
+from repro.graphs.generators import erdos_renyi
+from repro.kernels.delta_stats.ops import delta_stats_fused
+from repro.kernels.vnge_q.ops import vnge_q_stats
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous stream batch synthesis (host-side).
+# ---------------------------------------------------------------------------
+
+class _Stream:
+    """One tenant: a host graph over its own node universe, tracked so
+    we can emit the same deltas to the padded engine and the unpadded
+    per-stream oracle."""
+
+    def __init__(self, n0, n_reserve, seed):
+        self.n_total = n0 + n_reserve  # its own (unpadded) layout
+        rng = np.random.default_rng(seed)
+        w = np.zeros((self.n_total, self.n_total), np.float32)
+        upper = np.triu(rng.random((n0, n0)) < 0.25, k=1)
+        w[:n0, :n0] = upper * rng.uniform(0.5, 1.5, (n0, n0))
+        w[:n0, :n0] += w[:n0, :n0].T
+        self.w = w
+        self.active = list(range(n0))
+        self.reserve = list(range(n0, self.n_total))
+        self.joined = []  # nodes we may later leave
+
+    def random_tick(self, rng, k, k_pad, j_pad, n_pad):
+        """One tick: k edge toggles among active nodes, occasionally a
+        join (+first edges) or a disconnect-then-leave. Returns the
+        (engine_delta, oracle_delta) pair."""
+        join, leave = [], []
+        ii, jj = [], []
+        if self.reserve and rng.random() < 0.5:
+            v = self.reserve.pop(0)
+            join.append(v)
+            self.joined.append(v)
+            self.active.append(v)
+            for u in rng.choice(
+                    [a for a in self.active if a != v],
+                    size=min(2, len(self.active) - 1), replace=False):
+                ii.append(min(v, int(u)))
+                jj.append(max(v, int(u)))
+        elif self.joined and rng.random() < 0.5:
+            v = self.joined.pop(0)
+            leave.append(v)
+            self.active.remove(v)
+            for u in np.flatnonzero(self.w[v]):
+                ii.append(min(v, int(u)))
+                jj.append(max(v, int(u)))
+        pairs = {(a, b) for a, b in zip(ii, jj)}
+        while len(pairs) < k and len(self.active) >= 2:
+            a, b = rng.choice(self.active, size=2, replace=False)
+            a, b = min(int(a), int(b)), max(int(a), int(b))
+            if a != b:
+                pairs.add((a, b))
+        ii = np.array([p[0] for p in pairs], np.int32)
+        jj = np.array([p[1] for p in pairs], np.int32)
+        w_old = self.w[ii, jj]
+        dw = np.where(
+            np.isin(ii, leave) | np.isin(jj, leave) | (w_old > 0),
+            -w_old, rng.uniform(0.2, 1.5, len(ii)).astype(np.float32))
+        dw = dw.astype(np.float32)
+        keep = np.abs(dw) > 1e-12
+        ii, jj, dw, w_old = ii[keep], jj[keep], dw[keep], w_old[keep]
+        self.w[ii, jj] += dw
+        self.w[jj, ii] += dw
+        engine_d = GraphDelta.from_arrays(
+            ii, jj, dw, w_old, n_nodes=self.n_total, n_pad=n_pad,
+            k_pad=k_pad, join=join, leave=leave, j_pad=j_pad)
+        oracle_d = GraphDelta.from_arrays(
+            ii, jj, dw, w_old, n_nodes=self.n_total, k_pad=k_pad)
+        return engine_d, oracle_d
+
+    def engine_graph(self, n_pad):
+        n0 = len(self.active)
+        return DenseGraph.from_weights(
+            jnp.asarray(self.w[:n0, :n0]), n_pad=n_pad)
+
+    def oracle_graph(self):
+        return DenseGraph.from_weights(jnp.asarray(self.w))
+
+
+class TestPaddingInvariance:
+    def test_tilde_and_exact_invariant_under_padding(self):
+        g = erdos_renyi(57, 0.1, seed=3, weighted=True)
+        gp = g.pad_to(96)
+        assert abs(float(vnge_tilde(g)) - float(vnge_tilde(gp))) < 1e-6
+        assert abs(float(exact_vnge(g)) - float(exact_vnge(gp))) < 1e-5
+        s, sp = finger_state(g), finger_state(gp)
+        assert abs(float(s.h_tilde()) - float(sp.h_tilde())) < 1e-6
+        assert int(sp.n_active()) == 57
+
+    def test_vnge_q_kernel_masks_inactive_rows(self):
+        """Garbage weights in inactive slots must contribute exactly
+        zero to the fused Lemma-1 statistics."""
+        g = erdos_renyi(40, 0.15, seed=1, weighted=True)
+        clean = np.asarray(vnge_q_stats(g.weights, use_pallas=False))
+        w_dirty = np.zeros((64, 64), np.float32)
+        w_dirty[:40, :40] = np.asarray(g.weights)
+        w_dirty[40:, 40:] = 7.7  # junk that the mask must erase
+        mask = np.concatenate([np.ones(40, np.float32),
+                               np.zeros(24, np.float32)])
+        for use_pallas in (False, True):
+            dirty = np.asarray(vnge_q_stats(
+                jnp.asarray(w_dirty), use_pallas=use_pallas,
+                node_mask=jnp.asarray(mask)))
+            np.testing.assert_allclose(dirty, clean, rtol=1e-6, atol=1e-6)
+
+    def test_fused_delta_stats_gate_padding_edges(self):
+        """A stray delta edge pointing into the padded node region must
+        contribute exactly zero (dense, compact, and fused paths)."""
+        g = erdos_renyi(30, 0.2, seed=2, weighted=True).pad_to(48)
+        state = finger_state(g)
+        d_clean = GraphDelta.from_arrays(
+            [0, 2], [5, 9], [0.5, -0.1], [0.0, 0.3], n_nodes=48, k_pad=4)
+        d_stray = GraphDelta.from_arrays(
+            [0, 2, 40], [5, 9, 45], [0.5, -0.1, 9.9], [0.0, 0.3, 0.0],
+            n_nodes=48, k_pad=4)
+        ref = update_state(state, d_clean, exact_smax=True)
+        for method in ("dense", "compact"):
+            got = update_state(state, d_stray, exact_smax=True,
+                               method=method)
+            assert abs(float(got.q) - float(ref.q)) < 1e-6
+            assert abs(float(got.s_total) - float(ref.s_total)) < 1e-6
+        for use_pallas in (False, True):
+            ds, dq, _ = delta_stats_fused(state, d_stray,
+                                          use_pallas=use_pallas)
+            ds_r, dq_r, _ = delta_stats_fused(state, d_clean,
+                                              use_pallas=use_pallas)
+            assert abs(float(ds) - float(ds_r)) < 1e-6
+            assert abs(float(dq) - float(dq_r)) < 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_mixed_n_batch_matches_unpadded_oracle(seed):
+    """Each stream of a heterogeneous batch — with joins/leaves — must
+    match the per-stream FINGER oracle run on its own unpadded graph."""
+    rng = np.random.default_rng(seed)
+    n_pad, k_pad, j_pad, ticks = 40, 8, 2, 4
+    streams = [_Stream(n0=int(rng.integers(5, 24)), n_reserve=3,
+                       seed=seed * 7 + i) for i in range(4)]
+    engine = StreamEngine(exact_smax=True)
+    states = StreamEngine.init_states(
+        [s.engine_graph(n_pad) for s in streams], n_pad=n_pad)
+    oracle_states = [finger_state(s.oracle_graph()) for s in streams]
+    expected_active = None
+    for _ in range(ticks):
+        pairs = [s.random_tick(rng, k=4, k_pad=k_pad, j_pad=j_pad,
+                               n_pad=n_pad) for s in streams]
+        dists, states = engine.tick(states,
+                                    stack_deltas([p[0] for p in pairs]))
+        for i, (_, oracle_d) in enumerate(pairs):
+            ref, oracle_states[i] = jsdist_incremental(
+                oracle_states[i], oracle_d, exact_smax=True)
+            assert abs(float(dists[i]) - float(ref)) < 1e-5, \
+                f"stream {i}: engine {float(dists[i])} != oracle {float(ref)}"
+        expected_active = [len(s.active) for s in streams]
+    got_active = [int(n) for n in np.asarray(
+        jnp.sum(states.node_mask, axis=-1))]
+    assert got_active == expected_active
+
+
+def test_acceptance_sizes_32_57_96_128_at_n_pad_128():
+    """The ISSUE acceptance config verbatim: n ∈ {32, 57, 96, 128} at
+    n_pad=128 in one vmapped tick, per-stream scores within 1e-5 of
+    per-stream unpadded FINGER."""
+    rng = np.random.default_rng(0)
+    graphs = [erdos_renyi(n, 0.1, seed=n, weighted=True)
+              for n in (32, 57, 96, 128)]
+    engine = StreamEngine(exact_smax=True)
+    states = StreamEngine.init_states(graphs, n_pad=128)
+    oracle = [finger_state(g) for g in graphs]
+    for _ in range(3):
+        eng_ds, ora_ds = [], []
+        for g in graphs:
+            n = g.n_nodes
+            iu, ju = np.triu_indices(n, k=1)
+            pick = rng.choice(len(iu), size=6, replace=False)
+            ii, jj = iu[pick], ju[pick]
+            w_old = np.asarray(g.weights)[ii, jj]
+            dw = np.where(w_old > 0, -w_old, 0.7).astype(np.float32)
+            eng_ds.append(GraphDelta.from_arrays(
+                ii, jj, dw, w_old, n_nodes=n, n_pad=128, k_pad=8))
+            ora_ds.append(GraphDelta.from_arrays(
+                ii, jj, dw, w_old, n_nodes=n, k_pad=8))
+        dists, states = engine.tick(states, stack_deltas(eng_ds))
+        for i, d in enumerate(ora_ds):
+            ref, oracle[i] = jsdist_incremental(oracle[i], d,
+                                                exact_smax=True)
+            assert abs(float(dists[i]) - float(ref)) < 1e-5
+        graphs = [apply_delta_dense(g, d)
+                  for g, d in zip(graphs, ora_ds)]
+
+
+class TestNodeDeltas:
+    def test_all_nodes_inactive_stream_serves_zero(self):
+        """The all-inactive edge case: an empty tenant slot keeps
+        emitting finite zero scores, then revives via a join delta."""
+        dead = DenseGraph.from_weights(jnp.zeros((4, 4)), n_pad=16,
+                                       node_mask=np.zeros(4, np.float32))
+        live = erdos_renyi(12, 0.3, seed=0, weighted=True)
+        engine = StreamEngine(exact_smax=True)
+        states = StreamEngine.init_states([dead, live], n_pad=16)
+        assert int(np.asarray(jnp.sum(states.node_mask, axis=-1))[0]) == 0
+        empty = GraphDelta.from_arrays([], [], [], [], n_nodes=16,
+                                       k_pad=4, j_pad=2)
+        churn = GraphDelta.from_arrays([0], [1], [0.5], [1.0], n_nodes=12,
+                                       n_pad=16, k_pad=4, j_pad=2)
+        dists, states = engine.tick(states, stack_deltas([empty, churn]))
+        assert float(dists[0]) == 0.0
+        assert np.isfinite(np.asarray(dists)).all()
+        # revive: join two nodes and connect them in one delta
+        revive = GraphDelta.from_arrays([0], [1], [2.0], [0.0], n_nodes=16,
+                                        k_pad=4, join=[0, 1], j_pad=2)
+        dists, states = engine.tick(states, stack_deltas([revive, empty]))
+        assert np.isfinite(float(dists[0]))
+        final = jax.tree_util.tree_map(lambda x: x[0], states)
+        ref = finger_state(DenseGraph.from_weights(
+            2.0 * jnp.eye(2)[::-1], n_pad=16))
+        assert abs(float(final.h_tilde()) - float(ref.h_tilde())) < 1e-6
+        assert int(final.n_active()) == 2
+
+    def test_join_then_leave_roundtrip_matches_dense_oracle(self):
+        g = erdos_renyi(20, 0.2, seed=5, weighted=True).pad_to(32)
+        st_ = finger_state(g)
+        d_join = GraphDelta.from_arrays(
+            [20, 20], [3, 7], [0.8, 0.6], [0.0, 0.0], n_nodes=32,
+            k_pad=4, join=[20], j_pad=2)
+        st_ = update_state(st_, d_join, exact_smax=True)
+        g = apply_delta_dense(g, d_join)
+        ref = finger_state(g)
+        assert abs(float(st_.q) - float(ref.q)) < 1e-5
+        assert int(st_.n_active()) == 21
+        d_leave = GraphDelta.from_arrays(
+            [20, 20], [3, 7], [-0.8, -0.6], [0.8, 0.6], n_nodes=32,
+            k_pad=4, leave=[20], j_pad=2)
+        st_ = update_state(st_, d_leave, exact_smax=True)
+        g = apply_delta_dense(g, d_leave)
+        ref = finger_state(g)
+        assert abs(float(st_.q) - float(ref.q)) < 1e-5
+        assert abs(float(st_.h_tilde()) - float(ref.h_tilde())) < 1e-5
+        assert int(st_.n_active()) == 20
+        assert float(st_.strengths[20]) == 0.0
+
+
+class TestReviewRegressions:
+    def test_node_slot_delta_on_maskless_state_raises_clearly(self):
+        """A join/leave delta against a state without a node mask must
+        fail with a named error, not flip the pytree structure and blow
+        up a downstream lax.scan carry."""
+        st_ = finger_state(erdos_renyi(10, 0.3, seed=0, weighted=True))
+        d = GraphDelta.from_arrays([0], [1], [0.2], [0.0], n_nodes=10,
+                                   k_pad=2, join=[3], j_pad=2)
+        with pytest.raises(ValueError, match="without a\\s+node_mask"):
+            update_state(st_, d)
+
+    def test_join_outside_n_pad_is_a_hard_error(self):
+        """A tenant outgrowing its n_pad layout must fail loudly at
+        delta construction — the jit-side scatters use mode="drop" and
+        would otherwise silently exclude the new node forever."""
+        with pytest.raises(ValueError, match="outside the n_pad=16"):
+            GraphDelta.from_arrays([0], [1], [0.2], [0.0], n_nodes=8,
+                                   n_pad=16, k_pad=2, join=[16], j_pad=2)
+        with pytest.raises(ValueError, match="outside the n_pad=8"):
+            GraphDelta.from_arrays([0], [1], [0.2], [0.0], n_nodes=8,
+                                   k_pad=2, leave=[9], j_pad=2)
+
+    def test_save_reserved_metadata_keys_win(self, tmp_path):
+        graphs = [erdos_renyi(8, 0.3, seed=s, weighted=True)
+                  for s in range(2)]
+        engine = StreamEngine()
+        st = StreamEngine.init_states(graphs, n_pad=8)
+        engine.save(str(tmp_path), st, step=1,
+                    metadata={"n_pad": 999, "kind": "bogus",
+                              "note": "kept"})
+        st2, step = engine.restore(str(tmp_path))
+        assert step == 1
+        assert st2.strengths.shape == (2, 8)
+
+    def test_restore_rejects_mismatched_engine_config(self, tmp_path):
+        graphs = [erdos_renyi(8, 0.3, seed=s, weighted=True)
+                  for s in range(2)]
+        saver = StreamEngine(exact_smax=False)
+        saver.save(str(tmp_path), StreamEngine.init_states(graphs),
+                   step=0)
+        with pytest.raises(ValueError, match="exact_smax"):
+            StreamEngine(exact_smax=True).restore(str(tmp_path))
+        with pytest.raises(ValueError, match="method"):
+            StreamEngine(method="compact").restore(str(tmp_path))
+
+    def test_stack_empty_list_raises_named_error(self):
+        with pytest.raises(ValueError, match="empty stream list"):
+            stack_deltas([])
+        with pytest.raises(ValueError, match="empty stream list"):
+            stack_states([])
+
+
+class TestStackValidation:
+    def test_stack_deltas_names_offending_stream_on_mixed_n(self):
+        d1 = GraphDelta.from_arrays([0], [1], [1.0], [0.0], n_nodes=8,
+                                    k_pad=4)
+        d2 = GraphDelta.from_arrays([0], [1], [1.0], [0.0], n_nodes=12,
+                                    k_pad=4)
+        with pytest.raises(ValueError, match=r"stream\(s\) \[2\]"):
+            stack_deltas([d1, d1, d2])
+
+    def test_stack_deltas_names_offending_stream_on_node_slots(self):
+        d1 = GraphDelta.from_arrays([0], [1], [1.0], [0.0], n_nodes=8,
+                                    k_pad=4)
+        d2 = GraphDelta.from_arrays([0], [1], [1.0], [0.0], n_nodes=8,
+                                    k_pad=4, join=[2], j_pad=2)
+        with pytest.raises(ValueError, match="node-slot presence"):
+            stack_deltas([d1, d1, d2])
+
+    def test_stack_states_names_offending_stream(self):
+        s1 = finger_state(erdos_renyi(10, 0.3, seed=0))
+        s2 = finger_state(erdos_renyi(14, 0.3, seed=0))
+        with pytest.raises(ValueError, match=r"stream\(s\) \[2\]"):
+            stack_states([s1, s1, s2])
+        s3 = finger_state(erdos_renyi(10, 0.3, seed=0).pad_to(10))
+        with pytest.raises(ValueError, match="node_mask presence"):
+            stack_states([s1, s3])
+
+
+class TestCheckpointedServing:
+    def _mixed_setup(self, seed=0):
+        graphs = [erdos_renyi(n, 0.15, seed=seed + n, weighted=True)
+                  for n in (8, 13, 21, 32)]
+        rng = np.random.default_rng(seed)
+
+        def mk_tick(t):
+            ds = []
+            for g in graphs:
+                n = g.n_nodes
+                i, j = rng.integers(0, n, 2)
+                if i == j:
+                    j = (i + 1) % n
+                i, j = min(int(i), int(j)), max(int(i), int(j))
+                w_old = float(np.asarray(g.weights)[i, j])
+                ds.append(GraphDelta.from_arrays(
+                    [i], [j], [0.4 if w_old == 0 else -w_old], [w_old],
+                    n_nodes=n, n_pad=32, k_pad=4))
+            return stack_deltas(ds)
+
+        return graphs, [mk_tick(t) for t in range(6)]
+
+    def test_save_restore_resumes_identical_scores(self, tmp_path):
+        """Kill/restart mid-run: a fresh engine restoring the checkpoint
+        must reproduce the uninterrupted run's scores exactly."""
+        graphs, ticks = self._mixed_setup()
+        engine = StreamEngine(exact_smax=True)
+        st = StreamEngine.init_states(graphs, n_pad=32)
+        uninterrupted = []
+        for d in ticks:
+            scores, st = engine.tick(st, d)
+            uninterrupted.append(np.asarray(scores))
+
+        st = StreamEngine.init_states(graphs, n_pad=32)
+        for d in ticks[:3]:
+            _, st = engine.tick(st, d)
+        engine.save(str(tmp_path), st, step=3)
+
+        fresh = StreamEngine(exact_smax=True)  # simulated restart
+        st2, step = fresh.restore(str(tmp_path))
+        assert step == 3
+        for t, d in enumerate(ticks[3:], start=3):
+            scores, st2 = fresh.tick(st2, d)
+            np.testing.assert_array_equal(np.asarray(scores),
+                                          uninterrupted[t])
+
+    def test_restore_onto_mesh_layout(self, tmp_path):
+        """Mesh-agnostic restore: save unsharded, restore sharded over a
+        mesh data axis, serve with the sharded tick — same scores."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        graphs, ticks = self._mixed_setup(seed=9)
+        engine = StreamEngine()
+        st = StreamEngine.init_states(graphs, n_pad=32)
+        _, st = engine.tick(st, ticks[0])
+        engine.save(str(tmp_path), st, step=1)
+        ref_scores, _ = engine.tick(st, ticks[1])
+
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        fresh = StreamEngine()
+        st2, _ = fresh.restore(str(tmp_path), mesh=mesh)
+        tick = fresh.make_sharded_tick(mesh, "data")
+        sharding = NamedSharding(mesh, P("data"))
+        d = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sharding), ticks[1])
+        scores, _ = tick(st2, d)
+        np.testing.assert_allclose(np.asarray(scores),
+                                   np.asarray(ref_scores), atol=1e-7)
+
+    def test_restore_missing_checkpoint_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            StreamEngine().restore(str(tmp_path / "nope"))
+
+
+class TestCompileOnce:
+    def test_mixed_n_tick_compiles_once_and_costs_like_uniform(self):
+        """Smoke: heterogeneous batches must reuse the uniform batch's
+        compiled tick (no per-shape recompiles) and cost ≤ ~1.1× at
+        equal n_pad (the threshold carries headroom for timer noise —
+        the two ticks are literally the same compiled program)."""
+        b, n_pad, k_pad = 16, 32, 4
+        uniform = [erdos_renyi(n_pad, 0.1, seed=s, weighted=True)
+                   for s in range(b)]
+        mixed_ns = [int(n) for n in
+                    np.linspace(8, n_pad, b).astype(int)]
+        mixed = [erdos_renyi(n, 0.1, seed=s, weighted=True)
+                 for s, n in enumerate(mixed_ns)]
+        engine = StreamEngine()
+        st_u = StreamEngine.init_states(uniform, n_pad=n_pad)
+        st_m = StreamEngine.init_states(mixed, n_pad=n_pad)
+        rng = np.random.default_rng(0)
+
+        def mk(graphs):
+            ds = []
+            for g in graphs:
+                n = g.n_nodes
+                i = int(rng.integers(0, n - 1))
+                ds.append(GraphDelta.from_arrays(
+                    [i], [i + 1], [0.3], [0.0], n_nodes=n, n_pad=n_pad,
+                    k_pad=k_pad))
+            return stack_deltas(ds)
+
+        d_u, d_m = mk(uniform), mk(mixed)
+
+        def block(st, d, iters=30):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                scores, st = engine.tick(st, d)
+            jax.block_until_ready(scores)
+            return time.perf_counter() - t0, st
+
+        # warmup (compiles once, shared by both layouts)
+        _, st_u = block(st_u, d_u, iters=2)
+        _, st_m = block(st_m, d_m, iters=2)
+        cache_size = engine._tick._cache_size()
+        assert cache_size == 1, \
+            f"mixed-n tick recompiled: jit cache has {cache_size} entries"
+        # The two layouts run the SAME compiled program, so any measured
+        # gap is scheduler noise; interleave blocks, take mins, and
+        # re-measure a few times before declaring a real cost gap.
+        ratio = np.inf
+        for _attempt in range(3):
+            t_u, t_m = [], []
+            for _ in range(4):
+                dt, st_u = block(st_u, d_u)
+                t_u.append(dt)
+                dt, st_m = block(st_m, d_m)
+                t_m.append(dt)
+            ratio = min(ratio, min(t_m) / min(t_u))
+            if ratio <= 1.2:
+                break
+        assert ratio <= 1.2, \
+            f"mixed-n tick {ratio:.2f}x uniform (want <= ~1.1x)"
+        assert engine._tick._cache_size() == 1
