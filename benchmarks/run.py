@@ -17,6 +17,7 @@ from benchmarks import (
     fig4_bifurcation,
     kernels_bench,
     roofline,
+    streams_bench,
     table2_wiki,
     table3_dos,
 )
@@ -29,6 +30,9 @@ SUITES = {
     "fig4": fig4_bifurcation.run,
     "kernels": kernels_bench.run,
     "roofline": roofline.run,
+    # Serving-path suite; also writes the machine-readable
+    # BENCH_streams.json tracked across PRs.
+    "streams": streams_bench.run,
 }
 
 

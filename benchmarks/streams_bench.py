@@ -1,25 +1,34 @@
-"""Batched multi-stream engine vs per-stream Python loop: ticks/sec.
+"""Multi-stream serving benchmarks on the declarative FingerService API.
 
-One "tick" advances every stream by one GraphDelta and emits one JSdist
-score per stream. The per-stream loop dispatches B jitted Algorithm-2
-steps from Python; the engine runs one vmapped step for all B streams.
+Three measurements, emitted both as the harness CSV and as a
+machine-readable ``BENCH_streams.json`` so the perf trajectory is
+tracked across PRs:
 
-``--mixed-n`` instead compares a heterogeneous batch (per-stream node
-counts spread over [n_pad/4, n_pad], mask-aware layout) against a
-uniform batch at equal n_pad: one compiled tick, ratio ≤ ~1.1×.
-``--quick`` shrinks batches/iters for CI smoke use.
+- **B/n_pad sweep**   : service tick latency + stream-ticks/s vs the
+  per-stream Python loop (one jitted Algorithm-2 step, B dispatches).
+- **ingest overlap**  : the same serving loop (host delta synthesis
+  every tick) under ``sync`` vs ``double_buffered`` ingestion;
+  ``overlap_fraction`` is the fraction of the sync-mode wall time the
+  double-buffered transfer hides. (On a single-host CPU backend the
+  transfer is nearly free, so expect ≈0 here and meaningful numbers on
+  a real accelerator.)
+- **mixed-n ratio**   : heterogeneous batch vs uniform batch at equal
+  n_pad through the plan-internal StreamEngine executor — one jit cache
+  entry, ratio ≤ ~1.1× (the mask-aware layout claim).
 
     PYTHONPATH=src python benchmarks/streams_bench.py
-    PYTHONPATH=src python benchmarks/streams_bench.py --mixed-n --quick
+    PYTHONPATH=src python benchmarks/streams_bench.py --quick \
+        --json /tmp/BENCH_streams.json
 """
 import argparse
+import json
 import sys
+import time
 from pathlib import Path
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 from common import emit, time_fn  # noqa: E402
@@ -28,6 +37,14 @@ from repro.core import finger_state, jsdist_incremental  # noqa: E402
 from repro.engine import StreamEngine, stack_deltas  # noqa: E402
 from repro.graphs.generators import erdos_renyi  # noqa: E402
 from repro.graphs.types import GraphDelta  # noqa: E402
+from repro.serving import (  # noqa: E402
+    FingerService,
+    ServiceConfig,
+    TopKSpec,
+)
+
+DEFAULT_JSON = str(Path(__file__).resolve().parent.parent
+                   / "BENCH_streams.json")
 
 
 def _random_deltas(graphs, rng, k, k_pad, n_pad=None):
@@ -45,9 +62,11 @@ def _random_deltas(graphs, rng, k, k_pad, n_pad=None):
     return out
 
 
-def bench_batch(b: int, n: int, k: int, method: str):
-    rng = np.random.default_rng(b)
-    graphs = [erdos_renyi(n, 0.08, seed=s, weighted=True)
+def bench_sweep_point(b: int, n_pad: int, k: int, method: str,
+                      iters: int = 10) -> dict:
+    """One (B, n_pad) cell: service tick vs per-stream Python loop."""
+    rng = np.random.default_rng(b + n_pad)
+    graphs = [erdos_renyi(n_pad, 0.08, seed=s, weighted=True)
               for s in range(b)]
     deltas = _random_deltas(graphs, rng, k, k_pad=k)
     stacked = stack_deltas(deltas)
@@ -59,33 +78,82 @@ def bench_batch(b: int, n: int, k: int, method: str):
     def loop_tick():
         return [step(s, d)[0] for s, d in zip(loop_states, deltas)]
 
-    t_loop = time_fn(lambda: jax.block_until_ready(loop_tick()))
+    t_loop = time_fn(lambda: jax.block_until_ready(loop_tick()),
+                     iters=iters)
 
-    # --- batched engine (one vmapped dispatch/tick) --------------------
-    engine = StreamEngine(method=method)
-    states = StreamEngine.init_states(graphs)
-    # tick() donates the state; re-feed the returned one so the timed
-    # closure is steady-state serving, not repeated donation errors.
-    holder = {"st": states}
+    # --- FingerService (one declarative open, one compiled tick) -------
+    config = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k,
+                           method=method, topk=TopKSpec(k=min(8, b)))
+    svc = FingerService.open(config, graphs)
 
-    def engine_tick():
-        dists, holder["st"] = engine.tick(holder["st"], stacked)
-        return dists
+    def svc_tick():
+        svc.ingest(stacked)
+        return svc.poll().scores
 
-    t_engine = time_fn(lambda: jax.block_until_ready(engine_tick()))
+    t_svc = time_fn(lambda: jax.block_until_ready(svc_tick()),
+                    iters=iters)
+    svc.close()
 
-    emit(f"streams_loop_b{b}_{method}", t_loop,
+    emit(f"streams_loop_b{b}_n{n_pad}_{method}", t_loop,
          f"{b / t_loop:.0f} stream-ticks/s")
-    emit(f"streams_engine_b{b}_{method}", t_engine,
-         f"{b / t_engine:.0f} stream-ticks/s")
-    return t_loop, t_engine
+    emit(f"streams_service_b{b}_n{n_pad}_{method}", t_svc,
+         f"{b / t_svc:.0f} stream-ticks/s")
+    return {
+        "b": b, "n_pad": n_pad, "k_pad": k, "method": method,
+        "loop_tick_latency_us": t_loop * 1e6,
+        "tick_latency_us": t_svc * 1e6,
+        "throughput_stream_ticks_per_s": b / t_svc,
+        "speedup_vs_loop": t_loop / t_svc,
+    }
+
+
+def bench_ingest_overlap(b: int, n_pad: int, k: int, method: str,
+                         ticks: int = 12) -> dict:
+    """Serving loop with live host delta synthesis under both ingestion
+    modes; the double-buffered mode starts tick T+1's transfer while
+    tick T computes."""
+    rng = np.random.default_rng(7)
+    graphs = [erdos_renyi(n_pad, 0.08, seed=s, weighted=True)
+              for s in range(b)]
+    # Pre-synthesize identical host delta sequences for both modes so
+    # the measured gap is purely the ingestion policy.
+    seq = [stack_deltas(_random_deltas(graphs, rng, k, k_pad=k))
+           for _ in range(ticks)]
+    totals = {}
+    for mode in ("sync", "double_buffered"):
+        config = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k,
+                               method=method, ingestion=mode,
+                               topk=TopKSpec(k=min(8, b)))
+        svc = FingerService.open(config, graphs)
+        svc.ingest(seq[0])
+        jax.block_until_ready(svc.poll().scores)  # compile + warm
+        t0 = time.perf_counter()
+        last = None
+        for d in seq[1:]:
+            svc.ingest(d)
+            last = svc.poll().scores
+        jax.block_until_ready(last)
+        totals[mode] = time.perf_counter() - t0
+        svc.close()
+    overlap = max(0.0, 1.0 - totals["double_buffered"] / totals["sync"])
+    emit(f"streams_ingest_sync_b{b}_{method}", totals["sync"] / (ticks - 1))
+    emit(f"streams_ingest_db_b{b}_{method}",
+         totals["double_buffered"] / (ticks - 1),
+         f"overlap fraction {overlap:.2f}")
+    return {
+        "b": b, "n_pad": n_pad, "k_pad": k, "ticks": ticks - 1,
+        "t_sync_s": totals["sync"],
+        "t_double_buffered_s": totals["double_buffered"],
+        "overlap_fraction": overlap,
+    }
 
 
 def bench_mixed(b: int, n_pad: int, k: int, method: str,
-                iters: int = 10):
-    """Mixed-n batch vs uniform batch at equal n_pad: the mask-aware
-    layout claim is that a heterogeneous tick reuses the uniform tick's
-    compiled program and costs about the same (≤ ~1.1×)."""
+                iters: int = 10) -> dict:
+    """Mixed-n batch vs uniform batch at equal n_pad through the
+    plan-internal StreamEngine executor: the mask-aware layout claim is
+    that a heterogeneous tick reuses the uniform tick's compiled
+    program (ONE engine, one jit cache entry) and costs ≤ ~1.1×."""
     rng = np.random.default_rng(b)
     uniform = [erdos_renyi(n_pad, 0.08, seed=s, weighted=True)
                for s in range(b)]
@@ -122,44 +190,99 @@ def bench_mixed(b: int, n_pad: int, k: int, method: str,
     print("# PASS: mixed-n tick compiles once and costs <= 1.1x uniform"
           if ok else
           f"# FAIL: {'recompiled' if cache != 1 else f'{ratio:.2f}x > 1.1x'}")
-    return t_u, t_m
+    return {"b": b, "n_pad": n_pad, "ratio_mixed_over_uniform": ratio,
+            "jit_cache_entries": cache, "compiles_once": cache == 1}
+
+
+def run(json_path: str = DEFAULT_JSON, quick: bool = True,
+        method: str = "dense", batches=None, n_pads=None,
+        k: int = 16) -> dict:
+    """Full suite → BENCH_streams.json.
+
+    The tracked cross-PR artifact is the harness invocation
+    (``python -m benchmarks.run --only streams``), which uses the
+    quick=True defaults below — regenerate it that way so trajectories
+    compare like with like. Explicit ``batches``/``n_pads``/``k``
+    override the quick/full presets (ad-hoc exploration; the JSON
+    records the actual cells, so a custom sweep is self-describing).
+    """
+    iters = 3 if quick else 10
+    if batches is None:
+        batches = [8, 32] if quick else [8, 64, 256]
+    if n_pads is None:
+        n_pads = [64] if quick else [64, 128]
+    report = {
+        "bench": "streams",
+        "method": method,
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "sweep": [],
+        "ingest_overlap": None,
+        "mixed_n": None,
+    }
+    for n_pad in n_pads:
+        for b in batches:
+            report["sweep"].append(
+                bench_sweep_point(b, n_pad, k=k, method=method,
+                                  iters=iters))
+    report["ingest_overlap"] = bench_ingest_overlap(
+        batches[-1], n_pads[0], k=k, method=method,
+        ticks=6 if quick else 12)
+    report["mixed_n"] = bench_mixed(
+        min(batches[-1], 32) if quick else max(batches), n_pads[0],
+        k=k, method=method, iters=iters)
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {json_path}", file=sys.stderr)
+    return report
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--nodes", type=int, default=128)
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="n_pad for the sweep (default: the quick/full "
+                         "preset)")
     ap.add_argument("--k", type=int, default=16)
-    ap.add_argument("--batches", type=int, nargs="*",
-                    default=[8, 64, 256])
+    ap.add_argument("--batches", type=int, nargs="*", default=None,
+                    help="batch sizes for the sweep (default: the "
+                         "quick/full preset)")
     ap.add_argument("--method", default="dense",
                     choices=["dense", "compact"])
     ap.add_argument("--mixed-n", action="store_true",
-                    help="benchmark heterogeneous-n batches vs uniform "
-                         "at equal n_pad instead of engine-vs-loop")
+                    help="run only the mixed-n vs uniform comparison")
     ap.add_argument("--quick", action="store_true",
                     help="small batches / few timing iters (CI smoke)")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable report path (default: the "
+                         "tracked repo-root BENCH_streams.json; the "
+                         "partial --mixed-n report is only written "
+                         "when this is passed explicitly)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     if args.mixed_n:
-        batches = [32] if args.quick else [b for b in args.batches
-                                           if b >= 32] or [256]
-        for b in batches:
-            bench_mixed(b, args.nodes if not args.quick else 64,
-                        args.k, args.method,
-                        iters=3 if args.quick else 10)
+        b = 32 if args.quick else 256
+        n_pad = args.nodes or (64 if args.quick else 128)
+        result = bench_mixed(b, n_pad, args.k, args.method,
+                             iters=3 if args.quick else 10)
+        if args.json:  # never clobber the tracked full report
+            with open(args.json, "w") as f:
+                json.dump({"bench": "streams", "mixed_n": result}, f,
+                          indent=2)
         return
-    wins = {}
-    batches = [8, 32] if args.quick else args.batches
-    for b in batches:
-        t_loop, t_engine = bench_batch(b, args.nodes, args.k, args.method)
-        wins[b] = t_engine < t_loop
-        print(f"# B={b}: engine speedup {t_loop / t_engine:.1f}x")
-    big = [b for b in batches if b >= 64]
-    if big and all(wins[b] for b in big):
-        print("# PASS: vmapped engine wins at every B >= 64")
+    report = run(json_path=args.json or DEFAULT_JSON, quick=args.quick,
+                 method=args.method, batches=args.batches,
+                 n_pads=[args.nodes] if args.nodes else None,
+                 k=args.k)
+    wins = [p for p in report["sweep"]
+            if p["b"] >= 64 and p["speedup_vs_loop"] <= 1.0]
+    big = [p for p in report["sweep"] if p["b"] >= 64]
+    if big and not wins:
+        print("# PASS: batched service wins at every B >= 64")
     elif big:
-        print("# FAIL: per-stream loop won somewhere at B >= 64")
+        print(f"# FAIL: per-stream loop won at "
+              f"{[(p['b'], p['n_pad']) for p in wins]}")
 
 
 if __name__ == "__main__":

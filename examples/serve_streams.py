@@ -1,30 +1,43 @@
-"""Multi-stream serving example: B concurrent graph streams, one
-JSdist anomaly score per stream per tick, from the batched engine.
+"""Graph-stream serving example: B concurrent FINGER streams behind one
+declarative `FingerService`, one JSdist anomaly score per stream per
+tick.
+
+Everything the old `StreamEngine` version hand-threaded per call site —
+update method, `n_pad`/`k_pad`, placement, checkpoint paths — is now
+stated once in a `ServiceConfig`; the service compiles the matching
+execution plan at `open` and the serving loop is just
+`ingest → poll → top_anomalies`.
 
 One stream gets a planted DoS-style fan-in burst halfway through; the
-engine's per-stream scores single it out while serving every other
-stream in the same vmapped tick.
+service's sharded top-k query singles it out without ever gathering the
+full score vector.
 
-With ``--mixed-n`` the tenants are heterogeneous: per-stream node counts
-cycle through {n/4, n/2, 3n/4, n} and every graph is embedded into one
-shared n_pad layout with a per-stream node mask — same single compiled
-tick, per-stream scores identical to unpadded serving. With
-``--ckpt-dir`` the demo saves the stacked state mid-run, simulates a
-serving restart (fresh engine + restore), and resumes scoring without
-replaying a single tick.
+With ``--mixed-n`` the tenants are heterogeneous (per-stream node counts
+cycle through {n/4, n/2, 3n/4, n}, embedded into one shared n_pad
+layout). With ``--ckpt-dir`` the demo saves mid-run, simulates a serving
+restart (`FingerService.restore`), and resumes scoring without
+replaying a tick. ``--placement sharded`` serves the same loop
+shard_mapped over the mesh data axis.
 
     PYTHONPATH=src python examples/serve_streams.py --streams 256 --ticks 20
     PYTHONPATH=src python examples/serve_streams.py --mixed-n \
         --ckpt-dir /tmp/streams_ckpt
+    PYTHONPATH=src python examples/serve_streams.py --placement sharded \
+        --ingestion double_buffered
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.engine import StreamEngine, stack_deltas
 from repro.graphs.generators import erdos_renyi
 from repro.graphs.types import GraphDelta
+from repro.serving import (
+    CheckpointPolicy,
+    FingerService,
+    ServiceConfig,
+    TopKSpec,
+)
 
 
 def churn_delta(w: np.ndarray, rng, k: int, k_pad: int,
@@ -76,6 +89,10 @@ def main():
     ap.add_argument("--dos-frac", type=float, default=0.25)
     ap.add_argument("--method", default="dense",
                     choices=["dense", "compact"])
+    ap.add_argument("--placement", default="local",
+                    choices=["local", "sharded", "multipod"])
+    ap.add_argument("--ingestion", default="double_buffered",
+                    choices=["sync", "double_buffered"])
     ap.add_argument("--mixed-n", action="store_true",
                     help="heterogeneous tenants: per-stream node counts "
                          "cycle through {n/4, n/2, 3n/4, n}")
@@ -101,8 +118,14 @@ def main():
     ws = [np.asarray(g.weights).copy() for g in graphs]
     triu = {n: np.triu_indices(n, k=1) for n in set(ns)}
 
-    engine = StreamEngine(method=args.method)
-    states = StreamEngine.init_states(graphs, n_pad=n_pad)
+    config = ServiceConfig(
+        batch_size=b, n_pad=n_pad, k_pad=k_pad,
+        method=args.method, placement=args.placement,
+        ingestion=args.ingestion,
+        checkpoint=CheckpointPolicy(directory=args.ckpt_dir),
+        topk=TopKSpec(k=1),
+    )
+    service = FingerService.open(config, graphs)
     if args.mixed_n:
         print(f"mixed-n tenants: n in {sorted(set(ns))}, "
               f"served at n_pad={n_pad} in one compiled tick")
@@ -125,32 +148,39 @@ def main():
                               // (n_pad * (n_pad - 1)))
                 deltas.append(churn_delta(ws[s], rng, churn_k, k_pad,
                                           iu, ju, n_pad=n_pad))
-        return stack_deltas(deltas)
+        return deltas
 
     scores = np.zeros((args.ticks, b), np.float32)
     t0 = time.time()
     for t in range(args.ticks):
         if restart_tick is not None and t == restart_tick:
-            engine.save(args.ckpt_dir, states, step=t)
+            service.save()
             print(f"tick {t}: state checkpointed to {args.ckpt_dir}; "
                   "simulating serving restart...")
-            engine = StreamEngine(method=args.method)  # fresh process
-            states, step = engine.restore(args.ckpt_dir)
-            print(f"tick {t}: restored step={step}, resuming without "
-                  "replaying any stream")
-        dists, states = engine.tick(states, synthesize(t))
-        scores[t] = np.asarray(dists)
+            service.close()  # fresh process
+            service = FingerService.restore(config)
+            print(f"tick {t}: restored step={service.step}, resuming "
+                  "without replaying any stream")
+        service.ingest(synthesize(t))
+        service.poll()
+        scores[t] = service.scores()
     dt = time.time() - t0
+    top_val, top_id = service.top_anomalies(1)
+    service.close()
 
     flagged_tick, flagged_stream = np.unravel_index(scores.argmax(),
                                                     scores.shape)
     rate = args.ticks * b / dt
     print(f"served {b} streams x {args.ticks} ticks in {dt:.2f}s "
-          f"({rate:.0f} stream-ticks/s incl. host delta synthesis)")
+          f"({rate:.0f} stream-ticks/s incl. host delta synthesis; "
+          f"placement={args.placement}, ingestion={args.ingestion})")
     print(f"planted DoS: stream {attack_stream} at tick {attack_tick}")
     print(f"top score  : stream {flagged_stream} at tick {flagged_tick} "
           f"(JSdist {scores[flagged_tick, flagged_stream]:.4f}; "
           f"background median {np.median(scores):.4f})")
+    print(f"final-tick top_anomalies(1): stream {int(top_id[0])} "
+          f"(JSdist {float(top_val[0]):.4f}, sharded query — no full "
+          "score gather)")
     hit = (flagged_stream == attack_stream and flagged_tick == attack_tick)
     print("DETECTED" if hit else "MISSED")
 

@@ -35,7 +35,12 @@ def average_graph(g: Graph, g2: Graph) -> Graph:
 
     For mask-aware layouts the common node set is the *union* of the two
     active sets: a node present in either endpoint graph is present in Ḡ
-    (possibly with only half-weight edges).
+    (possibly with only half-weight edges). Each operand's weights are
+    gated by its *own* mask before the union — weight residue in a slot
+    an endpoint graph holds inactive must not reappear in Ḡ just because
+    the other endpoint activates that slot (the EdgeList branch gets
+    this via `masked_weights` in `to_dense`; the dense branch must
+    match it).
     """
     if isinstance(g, DenseGraph) and isinstance(g2, DenseGraph):
         m1, m2 = g.node_mask, g2.node_mask
@@ -45,8 +50,9 @@ def average_graph(g: Graph, g2: Graph) -> Graph:
             ones = jnp.ones((g.n_nodes,), g.weights.dtype)
             mask = jnp.maximum(ones if m1 is None else m1,
                                ones if m2 is None else m2)
-        return DenseGraph(weights=0.5 * (g.weights + g2.weights),
-                          n_nodes=g.n_nodes, node_mask=mask)
+        return DenseGraph(
+            weights=0.5 * (g.masked_weights() + g2.masked_weights()),
+            n_nodes=g.n_nodes, node_mask=mask)
     if isinstance(g, EdgeList) and isinstance(g2, EdgeList):
         # Concatenate the two halved edge lists; duplicate (i, j) slots sum
         # in every downstream strength/weight reduction, except Σ w² which

@@ -1,4 +1,11 @@
-"""Batched multi-stream FINGER serving engine.
+"""Batched multi-stream FINGER serving engine (plan-internal executor).
+
+.. deprecated::
+    New serving code should use `repro.serving.FingerService`, which
+    declares placement/ingestion/checkpoint/top-k policy once in a
+    `ServiceConfig` instead of per call site. `StreamEngine` remains
+    fully API-compatible and is what the serving plans execute
+    underneath; see `examples/README.md` for the migration table.
 
 One FingerState per user/session stream, stacked along a leading batch
 axis and advanced in lockstep by vmapped Theorem-2 updates — the batched
@@ -14,6 +21,7 @@ replaying.
 """
 from repro.engine.stream import (
     StreamEngine,
+    restore_stacked_state,
     stack_deltas,
     stack_states,
     unstack_states,
@@ -21,6 +29,7 @@ from repro.engine.stream import (
 
 __all__ = [
     "StreamEngine",
+    "restore_stacked_state",
     "stack_deltas",
     "stack_states",
     "unstack_states",

@@ -1,5 +1,13 @@
 """StreamEngine: B independent FINGER streams advanced in lockstep.
 
+.. deprecated::
+    `StreamEngine` is now the *plan-internal executor* of
+    `repro.serving.FingerService`, which states placement, ingestion,
+    checkpointing, and top-k query policy once in a declarative
+    `ServiceConfig` instead of per call site. The class stays fully
+    API-compatible for existing callers; new serving code should open a
+    `FingerService` (migration note in `examples/README.md`).
+
 The ROADMAP serving target is millions of users, each with their own
 evolving graph (session interaction graph, per-tenant topology, …). The
 per-stream state of Algorithm 2 is tiny — (Q, S, s_max) plus the (n,)
@@ -71,6 +79,46 @@ def _check_consistent(label: str, kind: str, values) -> None:
             f"streams but {[values[i] for i in bad]!r} for stream(s) "
             f"{bad}; pad every stream to one shared layout "
             f"(thread n_pad/k_pad through the constructors)")
+
+
+def restore_stacked_state(ckpt_dir: str, *, exact_smax: bool,
+                          method: str) -> Tuple[FingerState, int, dict]:
+    """Latest checkpoint → (host stacked FingerState, step, metadata).
+
+    The manifest's layout fields rebuild the pytree without a template,
+    and the saved engine config is validated against the restoring one
+    (mismatches break the identical-scores guarantee). Shared by
+    `StreamEngine.restore` and `serving.FingerService.restore` — one
+    on-disk format, so checkpoints migrate freely between the two APIs.
+    """
+    path = latest_checkpoint(ckpt_dir)
+    if path is None:
+        raise FileNotFoundError(
+            f"restore: no checkpoint under {ckpt_dir!r}")
+    manifest = load_manifest(path)
+    meta = manifest["metadata"]
+    if meta.get("kind") != "stream_engine_state":
+        raise ValueError(
+            f"restore: {path!r} is not a FINGER serving checkpoint "
+            f"(kind={meta.get('kind')!r})")
+    for key, want in (("exact_smax", exact_smax), ("method", method)):
+        if key in meta and meta[key] != want:
+            raise ValueError(
+                f"restore: checkpoint was saved with {key}="
+                f"{meta[key]!r} but this engine uses {want!r}; "
+                "resuming across configs breaks the identical-"
+                "scores guarantee — construct the engine with the "
+                "saved config")
+    b, n_pad = int(meta["b"]), int(meta["n_pad"])
+    zb = jnp.zeros((b,), jnp.float32)
+    zbn = jnp.zeros((b, n_pad), jnp.float32)
+    template = FingerState(
+        q=zb, s_total=zb, s_max=zb, strengths=zbn,
+        node_mask=zbn if meta.get("has_node_mask") else None)
+    states, manifest = restore_checkpoint(path, template,
+                                          manifest=manifest)
+    states = jax.tree_util.tree_map(jnp.asarray, states)
+    return states, int(manifest["step"]), meta
 
 
 def stack_states(states: Sequence[FingerState]) -> FingerState:
@@ -167,13 +215,18 @@ class StreamEngine:
 
     # -- persistence -----------------------------------------------------
     def save(self, ckpt_dir: str, states: FingerState, step: int = 0,
-             metadata: Optional[dict] = None, keep_last: int = 3) -> str:
+             metadata: Optional[dict] = None,
+             keep_last: Optional[int] = None,
+             prune_policy=None) -> str:
         """Persist the stacked serving state (atomic write).
 
         Goes through `train.checkpoint`: arrays are gathered to host and
         published with a tmp-dir + rename, so a crash mid-save can never
         corrupt the latest checkpoint. The manifest records the stacked
         layout so `restore` can rebuild the pytree without a template.
+        ``prune_policy`` takes any `train.checkpoint` policy form
+        (int / ``("keep_every_n", n, k)`` / callable); ``keep_last`` is
+        the legacy int spelling.
         """
         # Reserved keys win over caller metadata: restore() depends on
         # them to rebuild the pytree and validate the engine config.
@@ -187,7 +240,8 @@ class StreamEngine:
             "method": self.method,
         })
         return save_checkpoint(ckpt_dir, step, states, metadata=meta,
-                               keep_last=keep_last)
+                               keep_last=keep_last,
+                               prune_policy=prune_policy)
 
     def restore(self, ckpt_dir: str, mesh: Optional[Mesh] = None,
                 axis: str = "data") -> Tuple[FingerState, int]:
@@ -198,37 +252,11 @@ class StreamEngine:
         the saving job's device layout is irrelevant, so an elastic
         restart can change pod shape and keep serving.
         """
-        path = latest_checkpoint(ckpt_dir)
-        if path is None:
-            raise FileNotFoundError(
-                f"restore: no checkpoint under {ckpt_dir!r}")
-        manifest = load_manifest(path)
-        meta = manifest["metadata"]
-        if meta.get("kind") != "stream_engine_state":
-            raise ValueError(
-                f"restore: {path!r} is not a StreamEngine checkpoint "
-                f"(kind={meta.get('kind')!r})")
-        for key, want in (("exact_smax", self.exact_smax),
-                          ("method", self.method)):
-            if key in meta and meta[key] != want:
-                raise ValueError(
-                    f"restore: checkpoint was saved with {key}="
-                    f"{meta[key]!r} but this engine uses {want!r}; "
-                    "resuming across configs breaks the identical-"
-                    "scores guarantee — construct the engine with the "
-                    "saved config")
-        b, n_pad = int(meta["b"]), int(meta["n_pad"])
-        zb = jnp.zeros((b,), jnp.float32)
-        zbn = jnp.zeros((b, n_pad), jnp.float32)
-        template = FingerState(
-            q=zb, s_total=zb, s_max=zb, strengths=zbn,
-            node_mask=zbn if meta.get("has_node_mask") else None)
-        states, manifest = restore_checkpoint(path, template,
-                                              manifest=manifest)
-        states = jax.tree_util.tree_map(jnp.asarray, states)
+        states, step, _ = restore_stacked_state(
+            ckpt_dir, exact_smax=self.exact_smax, method=self.method)
         if mesh is not None:
             states = self.shard_states(states, mesh, axis)
-        return states, int(manifest["step"])
+        return states, step
 
     # -- serving ---------------------------------------------------------
     def tick(self, states: FingerState,

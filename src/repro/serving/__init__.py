@@ -1,0 +1,51 @@
+"""repro.serving: declarative FINGER stream serving.
+
+The public serving surface of the reproduction: a frozen
+`ServiceConfig` states every placement/ingestion/query/checkpoint
+decision once, `FingerService.open` compiles it into an execution plan
+(local vmap, `shard_map` over ``("data",)``, or ``("pod", "data")``
+with shard-local top-k queries), and the lifecycle facade
+(`ingest`/`poll`/`scores`/`top_anomalies`/`save`/`restore`/`repad`/
+`close`) replaces the per-call-site plumbing that every `StreamEngine`
+caller used to hand-thread.
+
+`repro.engine.StreamEngine` remains underneath as the plan-internal
+executor and stays API-compatible for existing callers; new code should
+open a `FingerService` (see `examples/serve_streams.py` and
+`examples/README.md` for the migration note).
+"""
+from repro.serving.config import (
+    CheckpointPolicy,
+    ServiceConfig,
+    ServiceConfigError,
+    TopKSpec,
+)
+from repro.serving.ingest import IngestError
+from repro.serving.plans import (
+    ExecutionPlan,
+    LocalPlan,
+    MultiPodPlan,
+    ShardedPlan,
+    build_plan,
+)
+from repro.serving.service import (
+    FingerService,
+    ServiceLifecycleError,
+    TickReport,
+)
+
+__all__ = [
+    "CheckpointPolicy",
+    "ExecutionPlan",
+    "FingerService",
+    "IngestError",
+    "LocalPlan",
+    "MultiPodPlan",
+    "ServiceConfig",
+    "ServiceConfigError",
+    "ServiceLifecycleError",
+    "ShardedPlan",
+    "TickReport",
+    "TopKSpec",
+    "build_plan",
+]

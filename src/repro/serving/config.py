@@ -1,0 +1,184 @@
+"""ServiceConfig: the one declarative description of a FINGER service.
+
+Every placement/ingestion/query/checkpoint decision that used to be
+re-plumbed per call site (``method=``, ``n_pad``/``k_pad``, mesh
+construction, ``shard_map`` vs vmap, checkpoint paths) is stated once
+here, validated up front with named errors, and compiled once into an
+`ExecutionPlan` by `FingerService.open`.
+
+The config is a frozen dataclass and deliberately *static*: everything
+in it participates in the single up-front compilation of the serving
+tick, so changing any field means opening a new service (or, for the
+one legal live migration, `FingerService.repad`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# The accepted policy forms are documented (and enforced) in
+# `train.checkpoint` — this module only re-exports the alias.
+from repro.train.checkpoint import PrunePolicy
+
+PLACEMENTS = ("local", "sharded", "multipod")
+INGESTIONS = ("sync", "double_buffered")
+METHODS = ("dense", "compact")
+
+
+class ServiceConfigError(ValueError):
+    """A ServiceConfig field (or combination) is invalid.
+
+    Raised at `validate()` / `FingerService.open` time — never from
+    inside a compiled tick — so misconfiguration fails before any device
+    state exists.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Where and how the stacked serving state persists.
+
+    ``directory=None`` means the service is ephemeral: `save()` raises a
+    named error instead of inventing a path. ``every_ticks`` (optional)
+    lets `poll()` auto-save each time that many ticks complete.
+    """
+
+    directory: Optional[str] = None
+    prune: PrunePolicy = 3
+    every_ticks: Optional[int] = None
+
+    def validate(self) -> None:
+        if self.every_ticks is not None and self.every_ticks <= 0:
+            raise ServiceConfigError(
+                f"CheckpointPolicy.every_ticks must be positive, got "
+                f"{self.every_ticks}")
+        if self.every_ticks is not None and self.directory is None:
+            raise ServiceConfigError(
+                "CheckpointPolicy.every_ticks set but directory is None; "
+                "periodic saves need somewhere to go")
+        _validate_prune_policy(self.prune)
+
+
+def _validate_prune_policy(policy: PrunePolicy) -> None:
+    """Delegate to `train.checkpoint.resolve_prune_policy` — the single
+    source of truth for accepted policy forms — re-raising its
+    ValueError as the config-level named error."""
+    from repro.train.checkpoint import resolve_prune_policy
+
+    try:
+        resolve_prune_policy(policy)
+    except ValueError as e:
+        raise ServiceConfigError(f"prune policy: {e}") from e
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSpec:
+    """Default shape of `top_anomalies` queries.
+
+    ``k`` bounds the per-shard `lax.top_k` width that the sharded plans
+    compile, so it must not exceed the per-shard stream count (validated
+    against placement in `ServiceConfig.validate`).
+    """
+
+    k: int = 8
+
+    def validate(self) -> None:
+        if self.k <= 0:
+            raise ServiceConfigError(f"TopKSpec.k must be positive, "
+                                     f"got {self.k}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Declarative FINGER serving configuration (see module docstring).
+
+    Parameters
+    ----------
+    batch_size : number of concurrent streams B. Fixed for the life of
+        the service (the stacked state has a static leading axis).
+    n_pad : shared static node layout size. Growable only through the
+        explicit `FingerService.repad` migration.
+    k_pad : delta-edge slots per stream per tick.
+    j_pad : node join/leave slots per delta (None = deltas carry no
+        node slots).
+    method : Δ-statistics path, ``"dense"`` or ``"compact"``.
+    exact_smax : recompute s_max exactly after deletions (O(n)/stream).
+    placement : ``"local"`` (single-device vmap), ``"sharded"``
+        (shard_map over ``(data_axis,)``), or ``"multipod"``
+        (shard_map over ``(pod_axis, data_axis)``).
+    ingestion : ``"double_buffered"`` (default — the transfer of tick
+        T+1's deltas overlaps tick T's compute) or ``"sync"`` (the
+        explicitly-blocking baseline: host→device transfer serialized
+        on the tick's critical path, kept for honest overlap
+        measurements).
+    max_queue : ingestion queue depth before `ingest` raises.
+    checkpoint : CheckpointPolicy (directory, prune policy, cadence).
+    topk : TopKSpec for `top_anomalies` queries.
+    data_axis / pod_axis : mesh axis names the sharded placements bind.
+    """
+
+    batch_size: int
+    n_pad: int
+    k_pad: int
+    j_pad: Optional[int] = None
+    method: str = "dense"
+    exact_smax: bool = False
+    placement: str = "local"
+    ingestion: str = "double_buffered"
+    max_queue: int = 2
+    checkpoint: CheckpointPolicy = CheckpointPolicy()
+    topk: TopKSpec = TopKSpec()
+    data_axis: str = "data"
+    pod_axis: str = "pod"
+
+    def validate(self, num_shards: Optional[int] = None) -> None:
+        """Fail fast with a named error; `num_shards` (the mesh's total
+        shard count over the placement axes) adds the divisibility and
+        top-k-width checks that need a concrete mesh."""
+        if self.batch_size <= 0:
+            raise ServiceConfigError(
+                f"batch_size must be positive, got {self.batch_size}")
+        if self.n_pad <= 0:
+            raise ServiceConfigError(
+                f"n_pad must be positive, got {self.n_pad}")
+        if self.k_pad <= 0:
+            raise ServiceConfigError(
+                f"k_pad must be positive, got {self.k_pad}")
+        if self.j_pad is not None and self.j_pad <= 0:
+            raise ServiceConfigError(
+                f"j_pad must be positive (or None), got {self.j_pad}")
+        if self.method not in METHODS:
+            raise ServiceConfigError(
+                f"method {self.method!r} not in {METHODS}")
+        if self.placement not in PLACEMENTS:
+            raise ServiceConfigError(
+                f"placement {self.placement!r} not in {PLACEMENTS}")
+        if self.ingestion not in INGESTIONS:
+            raise ServiceConfigError(
+                f"ingestion {self.ingestion!r} not in {INGESTIONS}")
+        if self.max_queue <= 0:
+            raise ServiceConfigError(
+                f"max_queue must be positive, got {self.max_queue}")
+        if self.placement == "multipod" and self.pod_axis == self.data_axis:
+            raise ServiceConfigError(
+                f"multipod placement needs distinct pod/data axes, got "
+                f"{self.pod_axis!r} for both")
+        self.checkpoint.validate()
+        self.topk.validate()
+        if num_shards is not None:
+            if self.batch_size % num_shards != 0:
+                raise ServiceConfigError(
+                    f"batch_size={self.batch_size} must divide evenly "
+                    f"over {num_shards} shard(s) of the "
+                    f"{self.placement!r} placement")
+            per_shard = self.batch_size // num_shards
+            if self.topk.k > per_shard:
+                raise ServiceConfigError(
+                    f"topk.k={self.topk.k} exceeds the per-shard stream "
+                    f"count {per_shard} (batch_size={self.batch_size} "
+                    f"over {num_shards} shards); the sharded top-k "
+                    f"merge needs k ≤ B/shards")
+
+    def with_(self, **updates) -> "ServiceConfig":
+        """`dataclasses.replace` spelled as a method (repad uses it)."""
+        return dataclasses.replace(self, **updates)

@@ -1,0 +1,129 @@
+"""Host→device delta ingestion for FingerService.
+
+The ROADMAP bottleneck: `examples/serve_streams.py` was host-synthesis
+bound because every tick synchronously stacked + transferred its deltas
+on the tick's critical path. The queue here decouples the two:
+
+- ``SyncIngestor``          : the baseline. Deltas stay on host until
+  the tick that consumes them; the transfer is on the critical path
+  (explicitly blocked on, so the comparison is honest).
+- ``DoubleBufferedIngestor``: `ingest` starts the (asynchronous) device
+  transfer immediately, so tick T+1's deltas stream host→device while
+  tick T's compute occupies the device. By the time `poll` consumes
+  them the transfer has usually already landed.
+
+Both validate the stacked delta against the service layout up front
+with named errors, and bound their queue at ``config.max_queue`` so a
+producer that outruns the device fails loudly instead of hoarding
+host memory.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import jax
+
+from repro.graphs.types import GraphDelta
+from repro.serving.config import ServiceConfig
+from repro.serving.plans import ExecutionPlan
+
+
+class IngestError(ValueError):
+    """A stacked delta does not fit the service's compiled layout (or
+    the ingestion queue overflowed)."""
+
+
+def validate_stacked_delta(config: ServiceConfig,
+                           deltas: GraphDelta) -> None:
+    """Layout check before anything touches the device: every mismatch
+    here would otherwise surface as a silent recompile (new shapes) or
+    an opaque shard_map error."""
+    if deltas.dw.ndim != 2:
+        raise IngestError(
+            f"ingest expects a stacked (B, k_pad) delta, got dw shape "
+            f"{tuple(deltas.dw.shape)}; stack per-stream deltas with "
+            "engine.stack_deltas (or pass the list and let the service "
+            "stack them)")
+    b, k_pad = deltas.dw.shape
+    if b != config.batch_size:
+        raise IngestError(
+            f"stacked delta batch {b} != config.batch_size="
+            f"{config.batch_size}")
+    if k_pad != config.k_pad:
+        raise IngestError(
+            f"stacked delta k_pad {k_pad} != config.k_pad="
+            f"{config.k_pad}; a different edge-slot width would "
+            "recompile the serving tick")
+    if deltas.n_nodes != config.n_pad:
+        raise IngestError(
+            f"stacked delta n_pad {deltas.n_nodes} != config.n_pad="
+            f"{config.n_pad}; after a repad, rebuild deltas with the "
+            "new n_pad")
+    has_slots = deltas.node_ids is not None
+    want_slots = config.j_pad is not None
+    if has_slots != want_slots:
+        raise IngestError(
+            f"delta node-slot presence ({has_slots}) != config.j_pad="
+            f"{config.j_pad!r}; node join/leave slots must be declared "
+            "in the ServiceConfig so every tick shares one compiled "
+            "program")
+    if want_slots and deltas.node_ids.shape[-1] != config.j_pad:
+        raise IngestError(
+            f"delta j_pad {deltas.node_ids.shape[-1]} != config.j_pad="
+            f"{config.j_pad}")
+
+
+class SyncIngestor:
+    """Transfer-on-consume baseline: `get` puts the delta on device and
+    blocks until the transfer lands, serializing it before the tick."""
+
+    def __init__(self, config: ServiceConfig, plan: ExecutionPlan):
+        self.config = config
+        self.plan = plan
+        self._queue: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def _prepare(self, deltas: GraphDelta) -> GraphDelta:
+        """What `put` enqueues — the host delta (transfer deferred)."""
+        return deltas
+
+    def put(self, deltas: GraphDelta) -> None:
+        validate_stacked_delta(self.config, deltas)
+        if len(self._queue) >= self.config.max_queue:
+            raise IngestError(
+                f"ingestion queue full ({self.config.max_queue} "
+                f"pending tick(s)); poll() before ingesting more")
+        self._queue.append(self._prepare(deltas))
+
+    def get(self) -> Optional[GraphDelta]:
+        if not self._queue:
+            return None
+        deltas = self.plan.put_deltas(self._queue.popleft())
+        return jax.block_until_ready(deltas)
+
+    def drain(self) -> None:
+        self._queue.clear()
+
+
+class DoubleBufferedIngestor(SyncIngestor):
+    """Transfer-on-ingest: `put` starts the device transfer immediately
+    so it overlaps the in-flight tick's compute; `get` just hands the
+    (usually already resident) delta to the tick."""
+
+    def _prepare(self, deltas: GraphDelta) -> GraphDelta:
+        return self.plan.put_deltas(deltas)
+
+    def get(self) -> Optional[GraphDelta]:
+        if not self._queue:
+            return None
+        return self._queue.popleft()
+
+
+def make_ingestor(config: ServiceConfig,
+                  plan: ExecutionPlan) -> SyncIngestor:
+    if config.ingestion == "double_buffered":
+        return DoubleBufferedIngestor(config, plan)
+    return SyncIngestor(config, plan)

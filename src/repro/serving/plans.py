@@ -1,0 +1,292 @@
+"""ExecutionPlan: one compiled serving tick per ServiceConfig.
+
+A plan owns everything placement-shaped: the compiled batched tick
+(vmapped Algorithm 2, optionally under `shard_map`), how stacked state
+and delta pytrees are laid out on devices, and how `top_anomalies`
+queries run. `FingerService` chooses a plan once at `open` time from
+``config.placement``:
+
+- ``LocalPlan``    : single-device jit(vmap(step)) — the plain
+  `StreamEngine` tick.
+- ``ShardedPlan``  : streams sharded over ``(data_axis,)``. Independent
+  streams ⇒ the tick body needs zero collectives.
+- ``MultiPodPlan`` : streams sharded over ``(pod_axis, data_axis)``;
+  adds per-pod top-k queries merged over the data axis only.
+
+Sharded top-k without the full gather: each shard computes a local
+`lax.top_k` over its B/p resident scores, emits (k,) candidate values
+plus *global* stream ids (shard offset from `lax.axis_index`), and the
+final merge runs `top_k` over the (p·k,) candidate row — the (B,) score
+vector itself is never materialized on one device. Per-pod queries
+all-gather candidates over the data axis only (n_data·k values per
+pod).
+
+`StreamEngine` is the plan-internal executor: plans reuse its vmapped
+step and state sharding helpers rather than re-deriving them.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.state import FingerState
+from repro.distributed.sharding import shard_map
+from repro.engine.stream import StreamEngine
+from repro.graphs.types import GraphDelta
+from repro.serving.config import ServiceConfig, ServiceConfigError
+
+
+def _mesh_axis_size(mesh: Mesh, axis: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in sizes:
+        raise ServiceConfigError(
+            f"mesh axes {tuple(mesh.axis_names)} carry no {axis!r} axis "
+            f"required by the placement")
+    return sizes[axis]
+
+
+class ExecutionPlan:
+    """Compiled tick + placement policy for one ServiceConfig.
+
+    Subclasses fill in ``axes`` (the mesh axis names the stream axis is
+    sharded over; empty for local) and ``mesh``. All compilation happens
+    in ``__init__`` / first call — a running service never recompiles
+    unless `FingerService.repad` swaps the plan for a larger layout.
+    """
+
+    axes: Tuple[str, ...] = ()
+    mesh: Optional[Mesh] = None
+
+    def __init__(self, config: ServiceConfig):
+        self.config = config
+        self.engine = StreamEngine(exact_smax=config.exact_smax,
+                                   method=config.method)
+        self._topk_cache = {}
+
+    # -- placement geometry ---------------------------------------------
+    @property
+    def num_shards(self) -> int:
+        out = 1
+        for ax in self.axes:
+            out *= _mesh_axis_size(self.mesh, ax)
+        return out
+
+    @property
+    def streams_per_shard(self) -> int:
+        return self.config.batch_size // self.num_shards
+
+    def topk_candidate_count(self, k: int) -> int:
+        """Size of the merge row a global top-k query materializes —
+        num_shards·k, never the full (B,) score vector."""
+        return self.num_shards * k
+
+    def _spec(self) -> P:
+        return P(self.axes if len(self.axes) > 1 else self.axes[0])
+
+    # -- data movement ---------------------------------------------------
+    def shard_states(self, states: FingerState) -> FingerState:
+        if self.mesh is None:
+            return states
+        sharding = NamedSharding(self.mesh, self._spec())
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sharding), states)
+
+    def put_deltas(self, deltas: GraphDelta) -> GraphDelta:
+        """Start the host→device transfer of one tick's stacked deltas.
+
+        Returns immediately with the transfer in flight (jax transfers
+        are asynchronous) — the double-buffered ingestor leans on this
+        to overlap tick T+1's transfer with tick T's compute.
+        """
+        if self.mesh is None:
+            return jax.device_put(deltas)
+        sharding = NamedSharding(self.mesh, self._spec())
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sharding), deltas)
+
+    # -- the tick --------------------------------------------------------
+    def tick(self, states: FingerState,
+             deltas: GraphDelta) -> Tuple[jax.Array, FingerState]:
+        """(B,) JSdist scores + updated stacked state. `states` is
+        donated — rebind to the returned one."""
+        raise NotImplementedError
+
+    # -- queries ---------------------------------------------------------
+    def _validate_k(self, k: int) -> None:
+        if k <= 0:
+            raise ServiceConfigError(f"top_anomalies k={k} must be "
+                                     f"positive")
+        if k > self.streams_per_shard:
+            raise ServiceConfigError(
+                f"top_anomalies k={k} exceeds the per-shard stream "
+                f"count {self.streams_per_shard} "
+                f"(batch_size={self.config.batch_size} over "
+                f"{self.num_shards} shard(s)); shrink k or re-open with "
+                f"a coarser placement")
+
+    def topk(self, scores: jax.Array,
+             k: int) -> Tuple[jax.Array, jax.Array]:
+        """Global top-k: ((k,) values, (k,) stream ids), descending."""
+        self._validate_k(k)
+        fn = self._topk_cache.get(k)
+        if fn is None:
+            fn = self._compile_topk(k)
+            self._topk_cache[k] = fn
+        return fn(scores)
+
+    def _compile_topk(self, k: int):
+        raise NotImplementedError
+
+
+class LocalPlan(ExecutionPlan):
+    """Single-device vmapped tick — `StreamEngine.tick` verbatim, so
+    scores are bit-exact with the pre-redesign engine path."""
+
+    axes = ()
+    mesh = None
+
+    def tick(self, states, deltas):
+        return self.engine.tick(states, deltas)
+
+    def _compile_topk(self, k: int):
+        def topk(scores):
+            vals, ids = jax.lax.top_k(scores, k)
+            return vals, ids.astype(jnp.int32)
+
+        return jax.jit(topk)
+
+
+class _ShardedPlanBase(ExecutionPlan):
+    """Common shard_map machinery for the sharded/multipod placements."""
+
+    def __init__(self, config: ServiceConfig, mesh: Mesh):
+        super().__init__(config)
+        self.mesh = mesh
+        for ax in self.axes:
+            _mesh_axis_size(mesh, ax)  # named error before any compile
+        config.validate(num_shards=self.num_shards)
+        spec = self._spec()
+        body = self.engine._vstep
+        self._tick = jax.jit(
+            shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                      out_specs=(spec, spec), check_rep=False),
+            donate_argnums=(0,))
+
+    def tick(self, states, deltas):
+        return self._tick(states, deltas)
+
+    def _shard_offset_ids(self, local_idx: jax.Array) -> jax.Array:
+        """Local top-k indices → global stream ids for this shard.
+
+        Shard order under P(axes) partitions the stream axis first by
+        the leading axis, so the linear shard index is the mixed-radix
+        number over ``axes`` — matching the unsharded host-side order.
+        """
+        shard = jnp.asarray(0, jnp.int32)
+        for ax in self.axes:
+            shard = shard * _mesh_axis_size(self.mesh, ax) \
+                + jax.lax.axis_index(ax)
+        return local_idx.astype(jnp.int32) \
+            + shard * self.streams_per_shard
+
+    def _compile_topk(self, k: int):
+        spec = self._spec()
+
+        def body(scores):  # (B/p,) resident scores of one shard
+            vals, idx = jax.lax.top_k(scores, k)
+            return vals, self._shard_offset_ids(idx)
+
+        cand = shard_map(body, mesh=self.mesh, in_specs=(spec,),
+                         out_specs=(spec, spec), check_rep=False)
+
+        def topk(scores):
+            # (p·k,) candidates — the only cross-shard materialization.
+            cand_vals, cand_ids = cand(scores)
+            vals, pos = jax.lax.top_k(cand_vals, k)
+            return vals, cand_ids[pos]
+
+        return jax.jit(topk)
+
+
+class ShardedPlan(_ShardedPlanBase):
+    """Streams sharded over ``(data_axis,)`` of a single-pod mesh."""
+
+    def __init__(self, config: ServiceConfig, mesh: Mesh):
+        self.axes = (config.data_axis,)
+        super().__init__(config, mesh)
+
+
+class MultiPodPlan(_ShardedPlanBase):
+    """Streams sharded over ``(pod_axis, data_axis)``; per-pod top-k
+    queries merge candidates over the data axis only."""
+
+    def __init__(self, config: ServiceConfig, mesh: Mesh):
+        self.axes = (config.pod_axis, config.data_axis)
+        super().__init__(config, mesh)
+        self._pod_topk_cache = {}
+
+    @property
+    def n_pods(self) -> int:
+        return _mesh_axis_size(self.mesh, self.config.pod_axis)
+
+    def pod_topk(self, scores: jax.Array,
+                 k: int) -> Tuple[jax.Array, jax.Array]:
+        """Per-pod top-k: ((n_pods, k) values, (n_pods, k) stream ids).
+
+        Each pod's anomaly report is computed inside the pod — the
+        merge all-gathers n_data·k candidates over the data axis and
+        never crosses the pod axis.
+        """
+        self._validate_k(k)
+        fn = self._pod_topk_cache.get(k)
+        if fn is None:
+            fn = self._compile_pod_topk(k)
+            self._pod_topk_cache[k] = fn
+        return fn(scores)
+
+    def _compile_pod_topk(self, k: int):
+        spec = self._spec()
+        data_axis = self.config.data_axis
+        pod_axis = self.config.pod_axis
+
+        def body(scores):  # (B/p,) resident scores of one shard
+            vals, idx = jax.lax.top_k(scores, k)
+            gids = self._shard_offset_ids(idx)
+            cv = jax.lax.all_gather(vals, data_axis).reshape(-1)
+            ci = jax.lax.all_gather(gids, data_axis).reshape(-1)
+            pv, pos = jax.lax.top_k(cv, k)
+            return pv[None], ci[pos][None]  # (1, k) per pod, data-repl.
+
+        out_spec = P(pod_axis, None)
+        fn = shard_map(body, mesh=self.mesh, in_specs=(spec,),
+                       out_specs=(out_spec, out_spec), check_rep=False)
+        return jax.jit(fn)
+
+
+def build_plan(config: ServiceConfig,
+               mesh: Optional[Mesh] = None) -> ExecutionPlan:
+    """config.placement → the matching compiled plan (named errors for
+    placement/mesh mismatches; a default host mesh is built when the
+    sharded placements get none)."""
+    if config.placement == "local":
+        if mesh is not None:
+            raise ServiceConfigError(
+                "placement='local' takes no mesh; use 'sharded' or "
+                "'multipod' to place streams on a mesh")
+        config.validate(num_shards=1)
+        return LocalPlan(config)
+    if config.placement == "sharded":
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),),
+                                 (config.data_axis,))
+        return ShardedPlan(config, mesh)
+    if config.placement == "multipod":
+        if mesh is None:
+            mesh = jax.make_mesh((1, jax.device_count()),
+                                 (config.pod_axis, config.data_axis))
+        return MultiPodPlan(config, mesh)
+    raise ServiceConfigError(f"unknown placement {config.placement!r}")

@@ -1,0 +1,314 @@
+"""FingerService: the declarative serving facade over FINGER streams.
+
+One object owns the whole serving lifecycle that callers used to
+hand-assemble from `StreamEngine` pieces:
+
+    config = ServiceConfig(batch_size=256, n_pad=128, k_pad=32,
+                           placement="sharded",
+                           ingestion="double_buffered",
+                           checkpoint=CheckpointPolicy("/ckpts"))
+    with FingerService.open(config, graphs) as svc:
+        for tick_deltas in feed:
+            svc.ingest(tick_deltas)      # transfer overlaps compute
+            svc.poll()                   # advance one tick (async)
+        worst = svc.top_anomalies(8)     # sharded top-k, no full gather
+        svc.save()
+
+Lifecycle: `open` (or `restore`) → `ingest`/`poll` in any interleaving
+the queue depth allows → `scores`/`top_anomalies` queries → `save` →
+`close` (also via context manager). `repad` is the one live migration:
+it grows the shared `n_pad` layout in place of the old hard error when
+a tenant outgrows it.
+
+All placement/ingestion/query policy lives in the `ServiceConfig`; the
+compiled execution comes from `plans.build_plan`. `StreamEngine` remains
+underneath as the plan-internal executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.state import FingerState
+from repro.engine.stream import (
+    StreamEngine,
+    restore_stacked_state,
+    stack_deltas,
+)
+from repro.graphs.types import GraphDelta
+from repro.serving.config import ServiceConfig, ServiceConfigError
+from repro.serving.ingest import make_ingestor
+from repro.serving.plans import ExecutionPlan, MultiPodPlan, build_plan
+from repro.train.checkpoint import save_checkpoint
+
+# One on-disk format with StreamEngine.save: a FingerService checkpoint
+# restores into a bare StreamEngine and vice versa (the migration path).
+_CKPT_KIND = "stream_engine_state"
+
+
+class ServiceLifecycleError(RuntimeError):
+    """An operation was called in a state that cannot honor it (closed
+    service, empty queue where one was required, …)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """One completed `poll`: the tick index and its (B,) scores, still
+    on device — nothing here forces a host sync."""
+
+    step: int
+    scores: jax.Array
+
+
+class FingerService:
+    """Lifecycle facade for one declarative FINGER serving deployment.
+
+    Build with `open` (fresh state from host graphs) or `restore`
+    (resume from the config's checkpoint directory); never construct
+    directly.
+    """
+
+    def __init__(self, config: ServiceConfig, plan: ExecutionPlan,
+                 states: FingerState, step: int = 0):
+        self._config = config
+        self._plan = plan
+        self._states = states
+        self._step = step
+        self._ingestor = make_ingestor(config, plan)
+        self._last_scores: Optional[jax.Array] = None
+        self._closed = False
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def open(cls, config: ServiceConfig, graphs: Sequence,
+             mesh: Optional[Mesh] = None) -> "FingerService":
+        """Validate the config, compile its execution plan, and place
+        the initial stacked state from B host graphs."""
+        config.validate()
+        graphs = list(graphs)
+        if len(graphs) != config.batch_size:
+            raise ServiceConfigError(
+                f"open: {len(graphs)} graph(s) != config.batch_size="
+                f"{config.batch_size}")
+        too_big = [g.n_nodes for g in graphs if g.n_nodes > config.n_pad]
+        if too_big:
+            raise ServiceConfigError(
+                f"open: graph node count(s) {sorted(set(too_big))} "
+                f"exceed config.n_pad={config.n_pad}; open with a "
+                "larger n_pad (or repad() a running service)")
+        plan = build_plan(config, mesh)
+        states = StreamEngine.init_states(graphs, n_pad=config.n_pad)
+        return cls(config, plan, plan.shard_states(states))
+
+    @classmethod
+    def restore(cls, config: ServiceConfig,
+                mesh: Optional[Mesh] = None,
+                directory: Optional[str] = None) -> "FingerService":
+        """Resume from the latest checkpoint under ``directory`` (default:
+        the config's checkpoint directory). Mesh-agnostic: the saving
+        job's placement is irrelevant — arrays come back on host and the
+        new plan lays them out."""
+        config.validate()
+        ckpt_dir = directory or config.checkpoint.directory
+        if ckpt_dir is None:
+            raise ServiceConfigError(
+                "restore: no checkpoint directory — pass one or set "
+                "ServiceConfig.checkpoint.directory")
+        plan = build_plan(config, mesh)
+        states, step, _meta = restore_stacked_state(
+            ckpt_dir, exact_smax=config.exact_smax, method=config.method)
+        b = int(states.q.shape[0])
+        n_pad = int(states.strengths.shape[-1])
+        if b != config.batch_size:
+            raise ServiceConfigError(
+                f"restore: checkpoint holds {b} stream(s) but "
+                f"config.batch_size={config.batch_size}")
+        if n_pad != config.n_pad:
+            raise ServiceConfigError(
+                f"restore: checkpoint n_pad={n_pad} but config.n_pad="
+                f"{config.n_pad}; restore with the saved layout, then "
+                "repad() to grow it")
+        return cls(config, plan, plan.shard_states(states), step=step)
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def config(self) -> ServiceConfig:
+        return self._config
+
+    @property
+    def plan(self) -> ExecutionPlan:
+        return self._plan
+
+    @property
+    def step(self) -> int:
+        """Number of completed ticks (== next checkpoint's step)."""
+        return self._step
+
+    @property
+    def pending(self) -> int:
+        """Ingested ticks not yet consumed by `poll`."""
+        return len(self._ingestor)
+
+    def states(self) -> FingerState:
+        """The live stacked state (device-resident; read-only use)."""
+        return self._states
+
+    # -- serving loop ----------------------------------------------------
+    def _check_open(self, what: str) -> None:
+        if self._closed:
+            raise ServiceLifecycleError(f"{what} on a closed "
+                                        "FingerService")
+
+    def ingest(self, deltas: Union[GraphDelta,
+                                   Sequence[GraphDelta]]) -> None:
+        """Queue one tick's deltas (a stacked (B, k_pad) GraphDelta, or
+        a list of B per-stream deltas to stack). Under double-buffered
+        ingestion the host→device transfer starts here, overlapping the
+        in-flight tick's compute."""
+        self._check_open("ingest")
+        if not isinstance(deltas, GraphDelta):
+            deltas = stack_deltas(list(deltas))
+        self._ingestor.put(deltas)
+
+    def poll(self) -> Optional[TickReport]:
+        """Advance one tick if a delta is queued; None otherwise.
+
+        Dispatch is asynchronous — the returned report's scores are a
+        device array the tick is still free to be computing; only
+        `scores()`/`top_anomalies()` (or the caller) force the sync.
+        """
+        self._check_open("poll")
+        deltas = self._ingestor.get()
+        if deltas is None:
+            return None
+        dists, self._states = self._plan.tick(self._states, deltas)
+        self._last_scores = dists
+        self._step += 1
+        every = self._config.checkpoint.every_ticks
+        if every is not None and self._step % every == 0:
+            self.save()
+        return TickReport(step=self._step, scores=dists)
+
+    def scores(self) -> Optional[np.ndarray]:
+        """Latest tick's (B,) per-stream JSdist scores on host (blocks
+        until the tick lands); None before the first tick."""
+        self._check_open("scores")
+        if self._last_scores is None:
+            return None
+        return np.asarray(self._last_scores)
+
+    def top_anomalies(self, k: Optional[int] = None,
+                      per_pod: bool = False
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """The k highest-scoring streams of the latest tick, computed
+        where the scores live: per-shard `lax.top_k` + a num_shards·k
+        candidate merge — the (B,) score vector is never gathered.
+
+        Returns ``(values, stream_ids)``, each (k,) descending — or
+        (n_pods, k) with ``per_pod=True`` under the multipod placement.
+        """
+        self._check_open("top_anomalies")
+        if self._last_scores is None:
+            raise ServiceLifecycleError(
+                "top_anomalies before the first completed tick")
+        k = self._config.topk.k if k is None else k
+        if per_pod:
+            if not isinstance(self._plan, MultiPodPlan):
+                raise ServiceConfigError(
+                    "per_pod top-k needs placement='multipod', got "
+                    f"{self._config.placement!r}")
+            vals, ids = self._plan.pod_topk(self._last_scores, k)
+        else:
+            vals, ids = self._plan.topk(self._last_scores, k)
+        return np.asarray(vals), np.asarray(ids)
+
+    # -- persistence -----------------------------------------------------
+    def save(self, directory: Optional[str] = None) -> str:
+        """Checkpoint the stacked state (atomic write, config-declared
+        prune policy). Returns the checkpoint path."""
+        self._check_open("save")
+        ckpt_dir = directory or self._config.checkpoint.directory
+        if ckpt_dir is None:
+            raise ServiceConfigError(
+                "save: ServiceConfig.checkpoint.directory is None and "
+                "no directory was passed — declare one in the config")
+        states = jax.block_until_ready(self._states)
+        meta = {
+            "kind": _CKPT_KIND,
+            "b": int(states.q.shape[0]),
+            "n_pad": int(states.strengths.shape[-1]),
+            "has_node_mask": states.node_mask is not None,
+            "exact_smax": self._config.exact_smax,
+            "method": self._config.method,
+            "service": {"placement": self._config.placement,
+                        "ingestion": self._config.ingestion,
+                        "k_pad": self._config.k_pad},
+        }
+        return save_checkpoint(ckpt_dir, self._step, states,
+                               metadata=meta,
+                               prune_policy=self._config.checkpoint.prune)
+
+    # -- live migration --------------------------------------------------
+    def repad(self, new_n_pad: int) -> None:
+        """Grow the shared node layout to ``new_n_pad`` in place.
+
+        The state-migration path for a tenant outgrowing `n_pad` (the
+        old behavior was a hard constructor error with no way forward):
+        gathers the stacked state to host, embeds it into the larger
+        layout (new slots inactive, zero strength — padding is exact for
+        every FINGER statistic), rebuilds the execution plan for the new
+        shape, and re-shards. Queued-but-unconsumed deltas still carry
+        the old layout, so the queue must be drained first. Subsequent
+        deltas must be built with ``n_pad=new_n_pad``.
+        """
+        self._check_open("repad")
+        if self.pending:
+            raise ServiceLifecycleError(
+                f"repad with {self.pending} queued tick(s); poll() the "
+                "queue dry first (queued deltas carry the old layout)")
+        old = self._config.n_pad
+        if new_n_pad <= old:
+            raise ServiceConfigError(
+                f"repad: new_n_pad={new_n_pad} must exceed the current "
+                f"n_pad={old}")
+        states = jax.device_get(jax.block_until_ready(self._states))
+        grow = new_n_pad - old
+        strengths = np.pad(np.asarray(states.strengths),
+                           ((0, 0), (0, grow)))
+        if states.node_mask is None:
+            # Legacy unmasked layout: the old slots were all live.
+            mask = np.ones_like(np.asarray(states.strengths))
+        else:
+            mask = np.asarray(states.node_mask)
+        mask = np.pad(mask, ((0, 0), (0, grow)))
+        migrated = FingerState(
+            q=jnp.asarray(states.q), s_total=jnp.asarray(states.s_total),
+            s_max=jnp.asarray(states.s_max),
+            strengths=jnp.asarray(strengths),
+            node_mask=jnp.asarray(mask))
+        self._config = self._config.with_(n_pad=new_n_pad)
+        self._plan = build_plan(self._config, self._plan.mesh)
+        self._states = self._plan.shard_states(migrated)
+        self._ingestor = make_ingestor(self._config, self._plan)
+
+    # -- teardown --------------------------------------------------------
+    def close(self) -> None:
+        """Block on in-flight work and drop the queue. Idempotent; every
+        other method raises `ServiceLifecycleError` afterwards."""
+        if self._closed:
+            return
+        jax.block_until_ready(self._states)
+        self._ingestor.drain()
+        self._closed = True
+
+    def __enter__(self) -> "FingerService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

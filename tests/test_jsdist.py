@@ -77,6 +77,68 @@ class TestAlgorithms:
             assert abs(float(dist) - ref) < 5e-3
 
 
+class TestAverageGraphMaskParity:
+    """The EdgeList and DenseGraph branches of `average_graph` must
+    agree on mask-aware layouts: union node set, each operand's weights
+    gated by its *own* mask (a slot one endpoint holds inactive must
+    contribute zero even when the other endpoint activates it)."""
+
+    def _mixed_mask_pair(self):
+        # g1: active {0,1,2} of 4; slot 3 carries stale weight residue.
+        w1 = np.zeros((4, 4), np.float32)
+        w1[0, 1] = w1[1, 0] = 1.0
+        w1[2, 3] = w1[3, 2] = 5.0  # touches g1-inactive node 3
+        m1 = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+        # g2: active {0,1,3}; edge (1,3) into g1's inactive slot.
+        w2 = np.zeros((4, 4), np.float32)
+        w2[1, 3] = w2[3, 1] = 2.0
+        m2 = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+        return w1, m1, w2, m2
+
+    def test_edgelist_matches_dense_on_mixed_masks(self):
+        from repro.graphs import EdgeList
+
+        w1, m1, w2, m2 = self._mixed_mask_pair()
+        gd1 = DenseGraph(weights=jnp.asarray(w1), n_nodes=4, node_mask=m1)
+        gd2 = DenseGraph(weights=jnp.asarray(w2), n_nodes=4, node_mask=m2)
+        ge1 = EdgeList.from_arrays([0, 2], [1, 3], [1.0, 5.0], n_nodes=4,
+                                   node_mask=m1)
+        ge2 = EdgeList.from_arrays([1], [3], [2.0], n_nodes=4,
+                                   node_mask=m2)
+        bar_d = average_graph(gd1, gd2)
+        bar_e = average_graph(ge1, ge2)
+        np.testing.assert_allclose(np.asarray(bar_d.weights),
+                                   np.asarray(bar_e.weights),
+                                   rtol=0, atol=0)
+        np.testing.assert_array_equal(np.asarray(bar_d.node_mask),
+                                      np.asarray(bar_e.node_mask))
+        # union node set: every node live in either endpoint is in Ḡ
+        np.testing.assert_array_equal(np.asarray(bar_d.node_mask),
+                                      [1.0, 1.0, 1.0, 1.0])
+
+    def test_own_mask_gates_before_union(self):
+        """g1's stale (2,3) weight (node 3 inactive in g1) must not
+        reach Ḡ just because g2 activates node 3."""
+        w1, m1, w2, m2 = self._mixed_mask_pair()
+        gd1 = DenseGraph(weights=jnp.asarray(w1), n_nodes=4, node_mask=m1)
+        gd2 = DenseGraph(weights=jnp.asarray(w2), n_nodes=4, node_mask=m2)
+        bar = average_graph(gd1, gd2)
+        assert float(bar.weights[2, 3]) == 0.0
+        assert float(bar.weights[1, 3]) == 1.0  # g2's live edge, halved
+        assert float(bar.weights[0, 1]) == 0.5
+
+    def test_jsdist_consistent_across_representations(self):
+        from repro.graphs import EdgeList
+
+        g1 = erdos_renyi(24, 0.2, seed=3, weighted=True).pad_to(32)
+        g2 = erdos_renyi(30, 0.2, seed=4, weighted=True).pad_to(32)
+        e1 = EdgeList.from_dense(g1, m_pad=256)
+        e2 = EdgeList.from_dense(g2, m_pad=256)
+        d_dense = float(jsdist_tilde(g1, g2))
+        d_edges = float(jsdist_tilde(e1, e2))
+        assert abs(d_dense - d_edges) < 1e-6
+
+
 @settings(max_examples=15, deadline=None)
 @given(s1=st.integers(0, 1000), s2=st.integers(0, 1000))
 def test_property_symmetry_nonneg(s1, s2):

@@ -1,0 +1,450 @@
+"""FingerService: declarative config validation, bit-exact regression
+against the pre-redesign StreamEngine path, ingestion queue semantics,
+sharded top-k queries, and the repad state migration.
+
+Acceptance anchors (ISSUE 3):
+- the rewritten serving path produces *bit-exact* scores vs the
+  pre-redesign `StreamEngine` loop for the same delta sequence;
+- `top_anomalies` matches a full-gather oracle on a sharded mesh while
+  only ever materializing the (num_shards · k) candidate row, never the
+  (B,) score vector (8-device subprocess test).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.engine import StreamEngine, stack_deltas
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.types import GraphDelta
+from repro.serving import (
+    CheckpointPolicy,
+    FingerService,
+    IngestError,
+    ServiceConfig,
+    ServiceConfigError,
+    ServiceLifecycleError,
+    TopKSpec,
+    build_plan,
+)
+
+
+def _graphs(b, n, seed=0):
+    return [erdos_renyi(n, 0.15, seed=seed + s, weighted=True)
+            for s in range(b)]
+
+
+def _tick_deltas(graphs, rng, k_pad, n_pad=None):
+    ds = []
+    for g in graphs:
+        n = g.n_nodes
+        i, j = sorted(rng.choice(n, 2, replace=False).tolist())
+        w_old = float(np.asarray(g.weights)[i, j])
+        ds.append(GraphDelta.from_arrays(
+            [i], [j], [0.5 if w_old == 0 else -w_old], [w_old],
+            n_nodes=n, n_pad=n_pad, k_pad=k_pad))
+    return ds
+
+
+class TestConfigValidation:
+    def _base(self, **kw):
+        kw.setdefault("batch_size", 8)
+        kw.setdefault("n_pad", 16)
+        kw.setdefault("k_pad", 4)
+        return ServiceConfig(**kw)
+
+    @pytest.mark.parametrize("field,value,match", [
+        ("batch_size", 0, "batch_size"),
+        ("n_pad", -1, "n_pad"),
+        ("k_pad", 0, "k_pad"),
+        ("j_pad", 0, "j_pad"),
+        ("method", "sparse", "method"),
+        ("placement", "galactic", "placement"),
+        ("ingestion", "triple", "ingestion"),
+        ("max_queue", 0, "max_queue"),
+    ])
+    def test_named_field_errors(self, field, value, match):
+        with pytest.raises(ServiceConfigError, match=match):
+            self._base(**{field: value}).validate()
+
+    def test_multipod_needs_distinct_axes(self):
+        with pytest.raises(ServiceConfigError, match="distinct"):
+            self._base(placement="multipod", pod_axis="data").validate()
+
+    def test_batch_must_divide_over_shards(self):
+        with pytest.raises(ServiceConfigError, match="divide evenly"):
+            self._base(batch_size=6).validate(num_shards=4)
+
+    def test_topk_must_fit_per_shard(self):
+        with pytest.raises(ServiceConfigError, match="per-shard"):
+            self._base(batch_size=8, topk=TopKSpec(k=3)).validate(
+                num_shards=4)
+
+    def test_local_plan_rejects_mesh(self):
+        mesh = jax.make_mesh((1,), ("data",))
+        with pytest.raises(ServiceConfigError, match="takes no mesh"):
+            build_plan(self._base(topk=TopKSpec(k=2)), mesh)
+
+    def test_sharded_plan_rejects_missing_axis(self):
+        mesh = jax.make_mesh((1,), ("model",))
+        with pytest.raises(ServiceConfigError, match="no 'data' axis"):
+            build_plan(self._base(placement="sharded",
+                                  topk=TopKSpec(k=2)), mesh)
+
+    def test_open_rejects_wrong_graph_count_and_oversize(self):
+        cfg = self._base(topk=TopKSpec(k=2))
+        with pytest.raises(ServiceConfigError, match="batch_size"):
+            FingerService.open(cfg, _graphs(3, 8))
+        with pytest.raises(ServiceConfigError, match="exceed config.n_pad"):
+            FingerService.open(cfg, _graphs(8, 32))
+
+
+class TestBitExactRegression:
+    @pytest.mark.parametrize("method", ["dense", "compact"])
+    def test_service_matches_stream_engine_bit_exact(self, method):
+        """The acceptance criterion: the FingerService serving loop and
+        the pre-redesign StreamEngine path produce *identical* score
+        sequences for the same deltas (same compiled tick underneath)."""
+        b, n_pad, k_pad, t = 16, 24, 4, 5
+        graphs = _graphs(b, n_pad)
+        rng = np.random.default_rng(1)
+        ticks = [_tick_deltas(graphs, rng, k_pad) for _ in range(t)]
+
+        engine = StreamEngine(method=method)
+        st = StreamEngine.init_states(graphs)
+        old = []
+        for d in ticks:
+            scores, st = engine.tick(st, stack_deltas(d))
+            old.append(np.asarray(scores))
+
+        cfg = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k_pad,
+                            method=method, topk=TopKSpec(k=4))
+        with FingerService.open(cfg, graphs) as svc:
+            for step, d in enumerate(ticks, start=1):
+                svc.ingest(d)
+                report = svc.poll()
+                assert report.step == step
+                np.testing.assert_array_equal(svc.scores(),
+                                              old[step - 1])
+
+    def test_double_buffered_matches_sync(self):
+        b, n_pad, k_pad, t = 8, 16, 4, 4
+        graphs = _graphs(b, n_pad, seed=5)
+        rng = np.random.default_rng(5)
+        ticks = [_tick_deltas(graphs, rng, k_pad) for _ in range(t)]
+        outs = {}
+        for mode in ("sync", "double_buffered"):
+            cfg = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k_pad,
+                                ingestion=mode, topk=TopKSpec(k=2))
+            with FingerService.open(cfg, graphs) as svc:
+                for d in ticks:
+                    svc.ingest(d)
+                    svc.poll()
+                outs[mode] = svc.scores()
+        np.testing.assert_array_equal(outs["sync"],
+                                      outs["double_buffered"])
+
+
+class TestIngestionQueue:
+    def _svc(self, **kw):
+        kw.setdefault("batch_size", 4)
+        kw.setdefault("n_pad", 12)
+        kw.setdefault("k_pad", 3)
+        kw.setdefault("topk", TopKSpec(k=2))
+        cfg = ServiceConfig(**kw)
+        return FingerService.open(cfg, _graphs(cfg.batch_size,
+                                               cfg.n_pad)), cfg
+
+    def test_poll_on_empty_queue_returns_none(self):
+        svc, _ = self._svc()
+        assert svc.poll() is None
+        assert svc.scores() is None
+        svc.close()
+
+    def test_queue_depth_enforced(self):
+        svc, cfg = self._svc(max_queue=2)
+        rng = np.random.default_rng(0)
+        g = _graphs(4, 12)
+        svc.ingest(_tick_deltas(g, rng, 3))
+        svc.ingest(_tick_deltas(g, rng, 3))
+        assert svc.pending == 2
+        with pytest.raises(IngestError, match="queue full"):
+            svc.ingest(_tick_deltas(g, rng, 3))
+        svc.poll()
+        svc.poll()
+        assert svc.pending == 0
+        svc.close()
+
+    @pytest.mark.parametrize("mutate,match", [
+        (dict(k_pad=5), "k_pad"),
+        (dict(n_pad=16), "n_pad"),
+        (dict(j_pad=2), "node-slot"),
+    ])
+    def test_layout_mismatch_named_errors(self, mutate, match):
+        svc, _ = self._svc()
+        rng = np.random.default_rng(0)
+        kw = dict(k_pad=3, n_pad=None, j_pad=None)
+        kw.update(mutate)
+        ds = []
+        for g in _graphs(4, 12):
+            extra = {}
+            if kw["j_pad"]:
+                extra = dict(join=[0], j_pad=kw["j_pad"])
+            ds.append(GraphDelta.from_arrays(
+                [0], [1], [0.5], [float(np.asarray(g.weights)[0, 1])],
+                n_nodes=12, n_pad=kw["n_pad"], k_pad=kw["k_pad"],
+                **extra))
+        with pytest.raises(IngestError, match=match):
+            svc.ingest(ds)
+        svc.close()
+
+    def test_wrong_batch_named_error(self):
+        svc, _ = self._svc()
+        rng = np.random.default_rng(0)
+        with pytest.raises(IngestError, match="batch"):
+            svc.ingest(_tick_deltas(_graphs(2, 12), rng, 3))
+        svc.close()
+
+    def test_unstacked_delta_named_error(self):
+        svc, _ = self._svc()
+        d = GraphDelta.from_arrays([0], [1], [0.5], [0.0], n_nodes=12,
+                                   k_pad=3)
+        with pytest.raises(IngestError, match="stacked"):
+            svc.ingest(d)
+        svc.close()
+
+
+class TestTopAnomalies:
+    def test_local_topk_matches_numpy_oracle(self):
+        b = 12
+        graphs = _graphs(b, 16, seed=2)
+        rng = np.random.default_rng(2)
+        cfg = ServiceConfig(batch_size=b, n_pad=16, k_pad=3,
+                            topk=TopKSpec(k=4))
+        with FingerService.open(cfg, graphs) as svc:
+            with pytest.raises(ServiceLifecycleError,
+                               match="before the first"):
+                svc.top_anomalies()
+            svc.ingest(_tick_deltas(graphs, rng, 3))
+            svc.poll()
+            scores = svc.scores()
+            vals, ids = svc.top_anomalies(4)
+            order = np.argsort(scores)[::-1][:4]
+            np.testing.assert_array_equal(ids, order)
+            np.testing.assert_allclose(vals, scores[order], rtol=0)
+            with pytest.raises(ServiceConfigError, match="exceeds"):
+                svc.top_anomalies(b + 1)
+            with pytest.raises(ServiceConfigError, match="multipod"):
+                svc.top_anomalies(2, per_pod=True)
+
+
+class TestRepad:
+    def test_repad_grows_layout_and_matches_oracle(self):
+        from repro.core import finger_state, jsdist_incremental
+
+        b, n0, n_pad = 3, 10, 12
+        graphs = _graphs(b, n0, seed=4)
+        rng = np.random.default_rng(4)
+        cfg = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=3, j_pad=2,
+                            topk=TopKSpec(k=2))
+        svc = FingerService.open(cfg, graphs)
+        # single-edge deltas carrying (empty) node slots to match j_pad
+        d1 = []
+        for g in graphs:
+            i, j = sorted(rng.choice(n0, 2, replace=False).tolist())
+            w_old = float(np.asarray(g.weights)[i, j])
+            d1.append(GraphDelta.from_arrays(
+                [i], [j], [0.5 if w_old == 0 else -w_old], [w_old],
+                n_nodes=n0, n_pad=n_pad, k_pad=3, j_pad=2))
+        svc.ingest(d1)
+        svc.poll()
+        s1 = svc.scores()
+
+        svc.repad(20)
+        assert svc.config.n_pad == 20
+        # join a node beyond the OLD layout — the previously-hard error
+        d2 = [GraphDelta.from_arrays(
+            [15], [0], [0.9], [0.0], n_nodes=n0, n_pad=20, k_pad=3,
+            join=[15], j_pad=2) for _ in range(b)]
+        svc.ingest(d2)
+        svc.poll()
+        s2 = svc.scores()
+        assert np.isfinite(s2).all()
+
+        # per-stream oracle over the larger layout from scratch
+        for i in range(b):
+            st = finger_state(graphs[i].pad_to(20))
+            o1 = GraphDelta.from_arrays(
+                np.asarray(d1[i].senders)[:1],
+                np.asarray(d1[i].receivers)[:1],
+                np.asarray(d1[i].dw)[:1], np.asarray(d1[i].w_old)[:1],
+                n_nodes=n0, n_pad=20, k_pad=3, j_pad=2)
+            r1, st_next = jsdist_incremental(st, o1)
+            st = st_next
+            r2, st = jsdist_incremental(st, d2[i])
+            assert abs(float(r1) - s1[i]) < 1e-6
+            assert abs(float(r2) - s2[i]) < 1e-6
+        # old-layout deltas are now rejected by name
+        stale = [GraphDelta.from_arrays([0], [1], [0.1], [0.0],
+                                        n_nodes=n_pad, k_pad=3, j_pad=2)
+                 for _ in range(b)]
+        with pytest.raises(IngestError, match="repad"):
+            svc.ingest(stale)
+        svc.close()
+
+    def test_repad_refuses_pending_queue_and_shrink(self):
+        b = 4
+        graphs = _graphs(b, 12, seed=6)
+        rng = np.random.default_rng(6)
+        cfg = ServiceConfig(batch_size=b, n_pad=12, k_pad=3,
+                            topk=TopKSpec(k=2))
+        svc = FingerService.open(cfg, graphs)
+        svc.ingest(_tick_deltas(graphs, rng, 3))
+        with pytest.raises(ServiceLifecycleError, match="queued"):
+            svc.repad(24)
+        svc.poll()
+        with pytest.raises(ServiceConfigError, match="must exceed"):
+            svc.repad(12)
+        svc.close()
+
+
+class TestLifecycle:
+    def test_closed_service_raises_everywhere(self):
+        graphs = _graphs(2, 8)
+        cfg = ServiceConfig(batch_size=2, n_pad=8, k_pad=2,
+                            topk=TopKSpec(k=1))
+        svc = FingerService.open(cfg, graphs)
+        svc.close()
+        svc.close()  # idempotent
+        for call in (lambda: svc.poll(), lambda: svc.scores(),
+                     lambda: svc.ingest([]), lambda: svc.save(),
+                     lambda: svc.repad(16)):
+            with pytest.raises(ServiceLifecycleError, match="closed"):
+                call()
+
+    def test_save_without_directory_is_named_error(self):
+        graphs = _graphs(2, 8)
+        cfg = ServiceConfig(batch_size=2, n_pad=8, k_pad=2,
+                            topk=TopKSpec(k=1))
+        with FingerService.open(cfg, graphs) as svc:
+            with pytest.raises(ServiceConfigError, match="directory"):
+                svc.save()
+
+    def test_restore_validates_layout_against_config(self, tmp_path):
+        graphs = _graphs(4, 8, seed=7)
+        cfg = ServiceConfig(batch_size=4, n_pad=8, k_pad=2,
+                            topk=TopKSpec(k=1),
+                            checkpoint=CheckpointPolicy(str(tmp_path)))
+        with FingerService.open(cfg, graphs) as svc:
+            svc.save()
+        with pytest.raises(ServiceConfigError, match="batch_size"):
+            FingerService.restore(cfg.with_(batch_size=8))
+        with pytest.raises(ServiceConfigError, match="repad"):
+            FingerService.restore(cfg.with_(n_pad=16))
+        svc2 = FingerService.restore(cfg)
+        assert svc2.step == 0
+        svc2.close()
+
+
+_SHARDED_TOPK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+
+from repro.engine import StreamEngine, stack_deltas
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.types import GraphDelta
+from repro.serving import FingerService, ServiceConfig, TopKSpec
+
+b, n, k_pad, k = 64, 24, 4, 3
+graphs = [erdos_renyi(n, 0.15, seed=s, weighted=True) for s in range(b)]
+rng = np.random.default_rng(0)
+
+def tick_deltas():
+    ds = []
+    for g in graphs:
+        i, j = sorted(rng.choice(n, 2, replace=False).tolist())
+        w_old = float(np.asarray(g.weights)[i, j])
+        ds.append(GraphDelta.from_arrays(
+            [i], [j], [0.6 if w_old == 0 else -w_old], [w_old],
+            n_nodes=n, k_pad=k_pad))
+    return ds
+
+ticks = [tick_deltas() for _ in range(3)]
+engine = StreamEngine()
+st = StreamEngine.init_states(graphs)
+for t in ticks:
+    ref, st = engine.tick(st, stack_deltas(t))
+ref = np.asarray(ref)  # the full-gather oracle, host side only
+
+out = {"n_devices": jax.device_count(), "cases": []}
+meshes = {
+    "sharded": jax.make_mesh((8,), ("data",)),
+    "multipod": jax.make_mesh((2, 4), ("pod", "data")),
+}
+for placement, mesh in meshes.items():
+    cfg = ServiceConfig(batch_size=b, n_pad=n, k_pad=k_pad,
+                        placement=placement, ingestion="double_buffered",
+                        topk=TopKSpec(k=k))
+    svc = FingerService.open(cfg, graphs, mesh=mesh)
+    for t in ticks:
+        svc.ingest(t)
+        svc.poll()
+    scores = svc.scores()
+    vals, ids = svc.top_anomalies(k)
+    oracle_ids = np.argsort(ref)[::-1][:k]
+    case = {
+        "placement": placement,
+        "scores_max_err": float(np.abs(scores - ref).max()),
+        "topk_ids_match": bool(np.array_equal(ids, oracle_ids)),
+        "topk_vals_max_err": float(np.abs(vals - ref[oracle_ids]).max()),
+        # structural: the merge row is num_shards*k, never B
+        "candidates": svc.plan.topk_candidate_count(k),
+        "b": b,
+    }
+    if placement == "multipod":
+        pv, pi = svc.top_anomalies(k, per_pod=True)
+        ok = True
+        per_pod = b // 2
+        for p in range(2):
+            blk = ref[p * per_pod:(p + 1) * per_pod]
+            want = p * per_pod + np.argsort(blk)[::-1][:k]
+            ok = ok and np.array_equal(pi[p], want)
+            ok = ok and np.allclose(pv[p], blk[np.argsort(blk)[::-1][:k]])
+        case["per_pod_match"] = bool(ok)
+    svc.close()
+    out["cases"].append(case)
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_topk_matches_full_gather_oracle():
+    """Acceptance: on an 8-device mesh, `top_anomalies` equals the
+    full-gather oracle while the query only materializes the
+    num_shards·k candidate row (structural check), for both the
+    sharded and multipod placements — including per-pod reports."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_TOPK_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["n_devices"] == 8
+    assert len(out["cases"]) == 2
+    for case in out["cases"]:
+        assert case["scores_max_err"] < 1e-6, case
+        assert case["topk_ids_match"], case
+        assert case["topk_vals_max_err"] < 1e-6, case
+        assert case["candidates"] < case["b"], case
+    mp = out["cases"][1]
+    assert mp["per_pod_match"], mp
