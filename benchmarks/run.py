@@ -35,6 +35,14 @@ SUITES = {
     "streams": streams_bench.run,
 }
 
+# Suites that publish a machine-readable artifact get it schema-checked
+# after the run: a malformed JSON fails the harness instead of silently
+# corrupting the cross-PR perf trajectory.
+ARTIFACT_VALIDATORS = {
+    "streams": lambda: streams_bench.validate_report_file(
+        streams_bench.DEFAULT_JSON),
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -48,6 +56,10 @@ def main() -> None:
         t0 = time.time()
         try:
             SUITES[name]()
+            validator = ARTIFACT_VALIDATORS.get(name)
+            if validator is not None:
+                validator()
+                print(f"# {name}: artifact schema OK", file=sys.stderr)
         except Exception:
             traceback.print_exc()
             failed.append(name)

@@ -15,6 +15,17 @@ tracked across PRs:
 - **mixed-n ratio**   : heterogeneous batch vs uniform batch at equal
   n_pad through the plan-internal StreamEngine executor — one jit cache
   entry, ratio ≤ ~1.1× (the mask-aware layout claim).
+- **migration pause** : wall time of one layout migration — the legacy
+  host round-trip repad (device_get + pad + device_put, kept here as
+  the reference), the device-side `repad` growth, and a `compact` that
+  reclaims the inactive tail — at B ∈ {64, 256}, n_pad ∈ {128, 512}
+  (quick mode measures the smallest cell only). Times include the
+  migration's one-off jit compile: that *is* the serving pause.
+
+The emitted ``BENCH_streams.json`` is schema-checked by
+``validate_report`` (also enforced by ``benchmarks/run.py``) so a
+malformed bench output fails fast instead of silently corrupting the
+cross-PR perf trajectory.
 
     PYTHONPATH=src python benchmarks/streams_bench.py
     PYTHONPATH=src python benchmarks/streams_bench.py --quick \
@@ -29,6 +40,7 @@ from pathlib import Path
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 from common import emit, time_fn  # noqa: E402
@@ -194,6 +206,148 @@ def bench_mixed(b: int, n_pad: int, k: int, method: str,
             "jit_cache_entries": cache, "compiles_once": cache == 1}
 
 
+def _host_repad_reference(states, new_n_pad: int):
+    """The pre-NodeLayout repad: gather the whole stacked state to host,
+    pad with numpy, transfer back. Kept only as the migration-pause
+    baseline the device-side path is measured against."""
+    host = jax.device_get(jax.block_until_ready(states))
+    grow = new_n_pad - host.strengths.shape[-1]
+    strengths = np.pad(np.asarray(host.strengths), ((0, 0), (0, grow)))
+    mask = np.asarray(host.node_mask) if host.node_mask is not None \
+        else np.ones_like(np.asarray(host.strengths))
+    mask = np.pad(mask, ((0, 0), (0, grow)))
+    from repro.core.state import FingerState
+    from repro.graphs.layout import NodeLayout
+
+    out = FingerState(
+        q=jnp.asarray(host.q), s_total=jnp.asarray(host.s_total),
+        s_max=jnp.asarray(host.s_max), strengths=jnp.asarray(strengths),
+        node_mask=jnp.asarray(mask), layout=NodeLayout(new_n_pad))
+    return jax.block_until_ready(out)
+
+
+def bench_migration(b: int, n_pad: int, k: int, method: str,
+                    repeats: int = 3) -> dict:
+    """One migration-pause cell: host-repad baseline vs device grow vs
+    compact, each measured as the full serving pause (best of
+    ``repeats`` fresh services, jit compile included)."""
+    grow_to = n_pad * 2
+    # Streams occupy only 3/4 of the layout so compact() has a real
+    # inactive tail to reclaim.
+    n_live = max(8, (3 * n_pad) // 4)
+
+    def fresh_service():
+        graphs = [erdos_renyi(n_live, 0.05, seed=s, weighted=True)
+                  for s in range(b)]
+        config = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k,
+                               method=method, topk=TopKSpec(k=min(8, b)))
+        svc = FingerService.open(config, graphs)
+        svc.ingest(stack_deltas(_random_deltas(graphs, rng, k, k_pad=k,
+                                               n_pad=n_pad)))
+        jax.block_until_ready(svc.poll().scores)  # warm the tick
+        return svc
+
+    rng = np.random.default_rng(n_pad)
+    times = {"host_repad_ms": [], "device_grow_ms": [], "compact_ms": []}
+    for _ in range(repeats):
+        svc = fresh_service()
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            _host_repad_reference(svc.states(), grow_to).strengths)
+        times["host_repad_ms"].append((time.perf_counter() - t0) * 1e3)
+
+        t0 = time.perf_counter()
+        svc.repad(grow_to)
+        jax.block_until_ready(svc.states().strengths)
+        times["device_grow_ms"].append((time.perf_counter() - t0) * 1e3)
+        svc.close()
+
+        svc = fresh_service()
+        t0 = time.perf_counter()
+        report = svc.compact()
+        jax.block_until_ready(svc.states().strengths)
+        times["compact_ms"].append((time.perf_counter() - t0) * 1e3)
+        assert report.reclaimed > 0
+        svc.close()
+    cell = {"b": b, "n_pad": n_pad, "grow_to": grow_to,
+            "compact_to": int(report.new_n_pad)}
+    for key, vals in times.items():
+        cell[key] = min(vals)
+    emit(f"streams_migrate_hostrepad_b{b}_n{n_pad}",
+         cell["host_repad_ms"] * 1e-3)
+    emit(f"streams_migrate_grow_b{b}_n{n_pad}",
+         cell["device_grow_ms"] * 1e-3,
+         f"{cell['host_repad_ms'] / max(cell['device_grow_ms'], 1e-9):.1f}x"
+         " vs host repad")
+    emit(f"streams_migrate_compact_b{b}_n{n_pad}",
+         cell["compact_ms"] * 1e-3,
+         f"reclaimed to n_pad={cell['compact_to']}")
+    return cell
+
+
+_SWEEP_KEYS = ("b", "n_pad", "k_pad", "method", "loop_tick_latency_us",
+               "tick_latency_us", "throughput_stream_ticks_per_s",
+               "speedup_vs_loop")
+_OVERLAP_KEYS = ("b", "n_pad", "k_pad", "ticks", "t_sync_s",
+                 "t_double_buffered_s", "overlap_fraction")
+_MIXED_KEYS = ("b", "n_pad", "ratio_mixed_over_uniform",
+               "jit_cache_entries", "compiles_once")
+_MIGRATION_KEYS = ("b", "n_pad", "grow_to", "compact_to",
+                   "host_repad_ms", "device_grow_ms", "compact_ms")
+
+
+def _require(mapping, keys, where: str) -> None:
+    if not isinstance(mapping, dict):
+        raise ValueError(f"BENCH_streams.json: {where} must be an "
+                         f"object, got {type(mapping).__name__}")
+    missing = [key for key in keys if key not in mapping]
+    if missing:
+        raise ValueError(
+            f"BENCH_streams.json: {where} is missing key(s) {missing}")
+    string_ok = ("method", "bench", "backend")
+    bad = [key for key in keys
+           if isinstance(mapping[key], str) and key not in string_ok]
+    if bad:
+        raise ValueError(
+            f"BENCH_streams.json: {where} key(s) {bad} must be "
+            "numeric/boolean, got strings")
+
+
+def validate_report(report: dict) -> dict:
+    """Schema check for the tracked BENCH_streams.json artifact.
+
+    Raises ValueError naming the first violation, so a malformed bench
+    run fails fast (in `run()` before the file is written, and again in
+    `benchmarks/run.py` on the written file) instead of silently
+    shipping a corrupt perf trajectory.
+    """
+    _require(report, ("bench", "method", "quick", "backend",
+                      "device_count", "sweep", "ingest_overlap",
+                      "mixed_n", "migration"), "top level")
+    if report["bench"] != "streams":
+        raise ValueError(
+            f"BENCH_streams.json: bench={report['bench']!r} != 'streams'")
+    if not isinstance(report["sweep"], list) or not report["sweep"]:
+        raise ValueError("BENCH_streams.json: sweep must be a "
+                         "non-empty list")
+    for i, cell in enumerate(report["sweep"]):
+        _require(cell, _SWEEP_KEYS, f"sweep[{i}]")
+    _require(report["ingest_overlap"], _OVERLAP_KEYS, "ingest_overlap")
+    _require(report["mixed_n"], _MIXED_KEYS, "mixed_n")
+    if not isinstance(report["migration"], list) or not report["migration"]:
+        raise ValueError("BENCH_streams.json: migration must be a "
+                         "non-empty list")
+    for i, cell in enumerate(report["migration"]):
+        _require(cell, _MIGRATION_KEYS, f"migration[{i}]")
+    return report
+
+
+def validate_report_file(json_path: str = DEFAULT_JSON) -> dict:
+    """`validate_report` on an on-disk artifact (what run.py enforces)."""
+    with open(json_path) as f:
+        return validate_report(json.load(f))
+
+
 def run(json_path: str = DEFAULT_JSON, quick: bool = True,
         method: str = "dense", batches=None, n_pads=None,
         k: int = 16) -> dict:
@@ -220,6 +374,7 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
         "sweep": [],
         "ingest_overlap": None,
         "mixed_n": None,
+        "migration": [],
     }
     for n_pad in n_pads:
         for b in batches:
@@ -232,6 +387,15 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
     report["mixed_n"] = bench_mixed(
         min(batches[-1], 32) if quick else max(batches), n_pads[0],
         k=k, method=method, iters=iters)
+    # Migration-pause cells (ISSUE spec: B ∈ {64, 256} × n_pad ∈
+    # {128, 512}; quick CI measures the smallest cell only).
+    migration_cells = [(64, 128)] if quick \
+        else [(64, 128), (64, 512), (256, 128), (256, 512)]
+    for mb, mn in migration_cells:
+        report["migration"].append(
+            bench_migration(mb, mn, k=k, method=method,
+                            repeats=2 if quick else 3))
+    validate_report(report)  # fail fast before clobbering the artifact
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"# wrote {json_path}", file=sys.stderr)

@@ -19,11 +19,22 @@ restart (`FingerService.restore`), and resumes scoring without
 replaying a tick. ``--placement sharded`` serves the same loop
 shard_mapped over the mesh data axis.
 
+``--compact-every N`` demos the layout lifecycle's slot reclamation:
+each tick every stream's highest active node leaves (its edges deleted
+and the slot deactivated in one delta), and every N ticks the service
+runs `compact()` — dropping the permanently-left slots, shrinking the
+compiled layout, and printing the migration pause. The synthesizer
+keeps addressing deltas in the *original* layout throughout: the
+compaction's layout-owned index map renumbers them on ingest, which is
+exactly the grace path real producers get.
+
     PYTHONPATH=src python examples/serve_streams.py --streams 256 --ticks 20
     PYTHONPATH=src python examples/serve_streams.py --mixed-n \
         --ckpt-dir /tmp/streams_ckpt
     PYTHONPATH=src python examples/serve_streams.py --placement sharded \
         --ingestion double_buffered
+    PYTHONPATH=src python examples/serve_streams.py --streams 64 \
+        --ticks 20 --compact-every 5
 """
 import argparse
 import time
@@ -42,7 +53,7 @@ from repro.serving import (
 
 def churn_delta(w: np.ndarray, rng, k: int, k_pad: int,
                 iu: np.ndarray, ju: np.ndarray,
-                n_pad: int) -> GraphDelta:
+                n_pad: int, j_pad=None) -> GraphDelta:
     """Toggle k random node pairs (background churn for one stream).
 
     Mutates `w` in place — the host mirror stays current without a
@@ -55,16 +66,16 @@ def churn_delta(w: np.ndarray, rng, k: int, k_pad: int,
     w_old = w[ii, jj]
     dw = np.where(w_old > 0, -w_old, 1.0).astype(np.float32)
     d = GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n, k_pad=k_pad,
-                               n_pad=n_pad)
+                               n_pad=n_pad, j_pad=j_pad)
     w[ii, jj] += dw
     w[jj, ii] += dw
     return d
 
 
 def dos_delta(w: np.ndarray, rng, frac: float, k_pad: int,
-              n_pad: int) -> GraphDelta:
+              n_pad: int, n_active=None, j_pad=None) -> GraphDelta:
     """Fan-in burst: frac·n nodes all connect to one target (in place)."""
-    n = w.shape[0]
+    n = w.shape[0] if n_active is None else int(n_active)
     target = int(rng.integers(0, n))
     botnet = rng.choice(np.setdiff1d(np.arange(n), [target]),
                         size=max(1, int(frac * n)), replace=False)
@@ -72,10 +83,25 @@ def dos_delta(w: np.ndarray, rng, frac: float, k_pad: int,
     dw = (1.0 - w_old).astype(np.float32)
     keep = np.abs(dw) > 1e-12
     ii, jj = botnet[keep], np.full(int(keep.sum()), target)
-    d = GraphDelta.from_arrays(ii, jj, dw[keep], w_old[keep], n_nodes=n,
-                               k_pad=k_pad, n_pad=n_pad)
+    d = GraphDelta.from_arrays(ii, jj, dw[keep], w_old[keep],
+                               n_nodes=w.shape[0],
+                               k_pad=k_pad, n_pad=n_pad, j_pad=j_pad)
     w[ii, jj] += dw[keep]
     w[jj, ii] += dw[keep]
+    return d
+
+
+def leave_delta(w: np.ndarray, node: int, k_pad: int, n_pad: int,
+                j_pad: int) -> GraphDelta:
+    """The stream's node `node` leaves: delete its incident edges and
+    deactivate the slot, in one delta (isolated-leave contract)."""
+    nb = np.nonzero(w[node])[0]
+    d = GraphDelta.from_arrays(
+        np.full(len(nb), node), nb, -w[node, nb], w[node, nb],
+        n_nodes=w.shape[0], k_pad=k_pad, n_pad=n_pad,
+        leave=[node], j_pad=j_pad)
+    w[node, :] = 0.0
+    w[:, node] = 0.0
     return d
 
 
@@ -99,11 +125,22 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="save mid-run and resume from a simulated "
                          "serving restart")
+    ap.add_argument("--compact-every", type=int, default=None,
+                    help="every N ticks, compact() the layout: streams "
+                         "shed their highest active node each tick and "
+                         "the service reclaims the permanently-left "
+                         "slots (deltas stay addressed in the original "
+                         "layout — ingestion remaps them)")
     args = ap.parse_args()
 
     b, n_pad = args.streams, args.nodes
     rng = np.random.default_rng(0)
+    compacting = args.compact_every is not None
+    j_pad = 1 if compacting else None
     k_pad = max(args.churn, int(args.dos_frac * n_pad)) + 1
+    if compacting:
+        # a leaving node's whole incident edge set rides in one delta
+        k_pad = max(k_pad, n_pad)
     attack_stream = int(rng.integers(0, b))
     attack_tick = args.ticks // 2
 
@@ -119,7 +156,7 @@ def main():
     triu = {n: np.triu_indices(n, k=1) for n in set(ns)}
 
     config = ServiceConfig(
-        batch_size=b, n_pad=n_pad, k_pad=k_pad,
+        batch_size=b, n_pad=n_pad, k_pad=k_pad, j_pad=j_pad,
         method=args.method, placement=args.placement,
         ingestion=args.ingestion,
         checkpoint=CheckpointPolicy(directory=args.ckpt_dir),
@@ -131,23 +168,36 @@ def main():
               f"served at n_pad={n_pad} in one compiled tick")
 
     restart_tick = args.ticks // 2 if args.ckpt_dir else None
+    # Tenants shrink from the top: act[s] tracks the active prefix, so
+    # churn/DoS target live nodes and leaves never create re-joins.
+    act = list(ns)
+    min_act = max(4, min(ns) // 4)
 
     def synthesize(t):
         deltas = []
         for s in range(b):
             iu, ju = triu[ns[s]]
+            if compacting:
+                sel = ju < act[s]
+                iu, ju = iu[sel], ju[sel]
             if s == attack_stream and t == attack_tick:
                 deltas.append(dos_delta(ws[s], rng, args.dos_frac, k_pad,
-                                        n_pad=n_pad))
+                                        n_pad=n_pad, n_active=act[s],
+                                        j_pad=j_pad))
+            elif compacting and t % 2 == 1 and act[s] > min_act:
+                deltas.append(leave_delta(ws[s], act[s] - 1, k_pad,
+                                          n_pad=n_pad, j_pad=j_pad))
+                act[s] -= 1
             else:
                 # churn proportional to the tenant's node-pair space, so
                 # a small tenant's background churn is not an anomaly in
                 # itself (edges live in O(n²) pair space)
-                n_s = ns[s]
+                n_s = act[s] if compacting else ns[s]
                 churn_k = max(1, args.churn * (n_s * (n_s - 1))
                               // (n_pad * (n_pad - 1)))
                 deltas.append(churn_delta(ws[s], rng, churn_k, k_pad,
-                                          iu, ju, n_pad=n_pad))
+                                          iu, ju, n_pad=n_pad,
+                                          j_pad=j_pad))
         return deltas
 
     scores = np.zeros((args.ticks, b), np.float32)
@@ -157,10 +207,24 @@ def main():
             service.save()
             print(f"tick {t}: state checkpointed to {args.ckpt_dir}; "
                   "simulating serving restart...")
+            cfg_now = service.config  # carries any migrated n_pad
             service.close()  # fresh process
-            service = FingerService.restore(config)
-            print(f"tick {t}: restored step={service.step}, resuming "
+            service = FingerService.restore(cfg_now,
+                                            directory=args.ckpt_dir)
+            print(f"tick {t}: restored step={service.step} (layout "
+                  f"generation {service.layout.generation}), resuming "
                   "without replaying any stream")
+        if compacting and t > 0 and t % args.compact_every == 0:
+            tm = time.perf_counter()
+            report = service.compact()
+            pause_ms = (time.perf_counter() - tm) * 1e3
+            if report.reclaimed:
+                print(f"tick {t}: compact() reclaimed "
+                      f"{report.reclaimed} slot(s) — n_pad "
+                      f"{report.old_n_pad}→{report.new_n_pad}, layout "
+                      f"generation {report.generation}, pause "
+                      f"{pause_ms:.1f}ms (deltas keep addressing the "
+                      f"original {n_pad}-slot layout; ingestion remaps)")
         service.ingest(synthesize(t))
         service.poll()
         scores[t] = service.scores()

@@ -240,7 +240,20 @@ def update_state(
     (the mask must be part of the scan carry from the start). See
     `graphs.types` for the join/leave ordering and the isolated-leave
     contract.
+
+    When the state carries a `NodeLayout`, a delta addressed in a
+    *larger* layout is rejected at trace time: its node ids can point
+    past this state's n_pad, and the ``mode="drop"`` scatters would
+    silently ignore them — the exact failure mode `FingerService.repad`
+    exists to migrate through.
     """
+    if state.layout is not None and delta.n_nodes > state.layout.n_pad:
+        raise ValueError(
+            f"update_state: delta is addressed in an n_pad="
+            f"{delta.n_nodes} layout but the state's layout is n_pad="
+            f"{state.layout.n_pad} (generation "
+            f"{state.layout.generation}); migrate the state first "
+            "(FingerService.repad / serving.migrate.grow_stacked)")
     delta, mask_joined = gate_delta_for_update(state.node_mask, delta)
     if method == "dense":
         delta_s_total, delta_q_term, ds, max_new_s = delta_stats(state, delta)
@@ -287,6 +300,7 @@ def update_state(
         s_max=s_max_new,
         strengths=strengths_new,
         node_mask=mask_new,
+        layout=state.layout,
     )
 
 

@@ -11,6 +11,14 @@ which slots are live, so states of streams with different true node
 counts share one pytree structure (and one compiled program) at a
 common ``n_pad``. Every statistic is computed over active nodes only —
 inactive slots have exactly zero strength.
+
+The layout itself rides along as the static ``layout`` field (a
+`repro.graphs.layout.NodeLayout`): it names the n_pad the state is
+addressed in and the migration generation it was produced under, so a
+delta built against a different (e.g. pre-`repad`) layout is rejected
+at trace time instead of silently scattering into the wrong slots, and
+checkpoints can record which layout generation they were taken under.
+``layout=None`` is the legacy unmasked state.
 """
 from __future__ import annotations
 
@@ -21,12 +29,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vnge import c_from_s_total, strength_stats
+from repro.graphs.layout import NodeLayout
 from repro.graphs.types import DenseGraph, EdgeList, _pytree_dataclass
 
 Graph = Union[DenseGraph, EdgeList]
 
 
-@_pytree_dataclass
+@_pytree_dataclass(static_fields=("layout",))
 class FingerState:
     """Sufficient statistics of the current graph G for FINGER-H̃ updates."""
 
@@ -35,10 +44,16 @@ class FingerState:
     s_max: jax.Array  # largest nodal strength
     strengths: jax.Array  # (n,) nodal strengths of G
     node_mask: Optional[jax.Array] = None  # (n,) 0/1; None = all active
+    layout: Optional[NodeLayout] = None  # static; None = legacy unmasked
 
     @property
     def c(self) -> jax.Array:
         return c_from_s_total(self.s_total)
+
+    @property
+    def n_pad(self) -> int:
+        """The (trailing) node-layout size of the carried strengths."""
+        return int(self.strengths.shape[-1])
 
     def n_active(self) -> jax.Array:
         """Number of live node slots (layout size when unmasked)."""
@@ -56,10 +71,23 @@ class FingerState:
         return jnp.where(self.s_total > 0, -self.q * jnp.log(arg), 0.0)
 
 
-def finger_state(g: Graph) -> FingerState:
-    """Build the state from a full graph (one O(n + m) pass)."""
+def finger_state(g: Graph,
+                 layout: Optional[NodeLayout] = None) -> FingerState:
+    """Build the state from a full graph (one O(n + m) pass).
+
+    Mask-aware graphs stamp the state with their `NodeLayout` (pass
+    ``layout=`` to carry a migration generation other than 0); legacy
+    unmasked graphs keep ``layout=None``.
+    """
     s_total, sum_s2, sum_w2, s_max = strength_stats(g)
     c = c_from_s_total(s_total)
     q = 1.0 - c * c * (sum_s2 + 2.0 * sum_w2)
+    if layout is None and g.node_mask is not None:
+        layout = g.layout
+    if layout is not None and layout.n_pad != g.n_nodes:
+        raise ValueError(
+            f"finger_state: layout.n_pad={layout.n_pad} != graph "
+            f"n_nodes={g.n_nodes}")
     return FingerState(q=q, s_total=s_total, s_max=s_max,
-                       strengths=g.strengths(), node_mask=g.node_mask)
+                       strengths=g.strengths(), node_mask=g.node_mask,
+                       layout=layout)

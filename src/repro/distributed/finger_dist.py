@@ -67,7 +67,9 @@ def distributed_finger_state(g: EdgeList, mesh: Mesh,
     q, s_total, s_max, strengths = fn(g.senders, g.receivers, g.weights,
                                       g.mask, g.node_mask)
     return FingerState(q=q, s_total=s_total, s_max=s_max,
-                       strengths=strengths, node_mask=g.node_mask)
+                       strengths=strengths, node_mask=g.node_mask,
+                       layout=g.layout if g.node_mask is not None
+                       else None)
 
 
 def distributed_power_iteration(

@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.jsdist import jsdist_incremental
 from repro.core.state import FingerState, finger_state
 from repro.distributed.sharding import shard_map
+from repro.graphs.layout import NodeLayout
 from repro.graphs.types import GraphDelta
 from repro.train.checkpoint import (
     latest_checkpoint,
@@ -112,9 +113,15 @@ def restore_stacked_state(ckpt_dir: str, *, exact_smax: bool,
     b, n_pad = int(meta["b"]), int(meta["n_pad"])
     zb = jnp.zeros((b,), jnp.float32)
     zbn = jnp.zeros((b, n_pad), jnp.float32)
+    has_mask = bool(meta.get("has_node_mask"))
+    # Mask-aware checkpoints carry their layout generation (older
+    # manifests predate migrations: generation 0).
+    layout = NodeLayout(
+        n_pad, generation=int(meta.get("layout_generation", 0))) \
+        if has_mask else None
     template = FingerState(
         q=zb, s_total=zb, s_max=zb, strengths=zbn,
-        node_mask=zbn if meta.get("has_node_mask") else None)
+        node_mask=zbn if has_mask else None, layout=layout)
     states, manifest = restore_checkpoint(path, template,
                                           manifest=manifest)
     states = jax.tree_util.tree_map(jnp.asarray, states)
@@ -133,6 +140,8 @@ def stack_states(states: Sequence[FingerState]) -> FingerState:
                       (tuple(s.strengths.shape) for s in states))
     _check_consistent("stack_states", "node_mask presence",
                       (s.node_mask is not None for s in states))
+    _check_consistent("stack_states", "NodeLayout",
+                      (s.layout for s in states))
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
 
@@ -191,26 +200,34 @@ class StreamEngine:
 
     # -- construction ----------------------------------------------------
     @staticmethod
-    def init_states(graphs, n_pad: Optional[int] = None) -> FingerState:
+    def init_states(graphs, n_pad: Optional[int] = None,
+                    layout: Optional[NodeLayout] = None) -> FingerState:
         """Initial stacked state from B host graphs (one O(n + m) pass
         per stream, host-side; the online loop never does this again).
 
         Heterogeneous node counts are welcome: every graph is embedded
-        into a shared `n_pad` layout (default: the largest layout in the
-        batch) with a per-stream node mask, so a batch of tenants with
-        n ∈ {32, 57, 96, 128} runs as one (B, n_pad) program. Uniform
-        batches get an all-ones mask — the compiled tick is identical
-        either way, so mixed-`n` serving costs nothing extra.
+        into a shared `NodeLayout` (pass one, or an ``n_pad``; default:
+        the largest layout in the batch) with a per-stream node mask, so
+        a batch of tenants with n ∈ {32, 57, 96, 128} runs as one
+        (B, n_pad) program. Uniform batches get an all-ones mask — the
+        compiled tick is identical either way, so mixed-`n` serving
+        costs nothing extra.
         """
         graphs = list(graphs)
-        if n_pad is None:
-            n_pad = max(g.n_nodes for g in graphs)
-        too_big = [i for i, g in enumerate(graphs) if g.n_nodes > n_pad]
+        if layout is None:
+            layout = NodeLayout(max(g.n_nodes for g in graphs)
+                                if n_pad is None else int(n_pad))
+        elif n_pad is not None and int(n_pad) != layout.n_pad:
+            raise ValueError(
+                f"init_states: n_pad={n_pad} conflicts with "
+                f"layout.n_pad={layout.n_pad}; pass one or the other")
+        too_big = [i for i, g in enumerate(graphs)
+                   if g.n_nodes > layout.n_pad]
         if too_big:
             raise ValueError(
                 f"init_states: stream(s) {too_big} have n_nodes > "
-                f"n_pad={n_pad}")
-        return stack_states([finger_state(g.pad_to(n_pad))
+                f"n_pad={layout.n_pad}")
+        return stack_states([finger_state(g.pad_to(layout), layout=layout)
                              for g in graphs])
 
     # -- persistence -----------------------------------------------------
@@ -236,6 +253,8 @@ class StreamEngine:
             "b": int(states.q.shape[0]),
             "n_pad": int(states.strengths.shape[-1]),
             "has_node_mask": states.node_mask is not None,
+            "layout_generation": (states.layout.generation
+                                  if states.layout is not None else 0),
             "exact_smax": self.exact_smax,
             "method": self.method,
         })

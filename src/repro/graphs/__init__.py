@@ -1,4 +1,13 @@
-"""Graph substrate: representations, Laplacian ops, spectra, generators."""
+"""Graph substrate: representations, layouts, Laplacian ops, spectra,
+generators."""
+from repro.graphs.layout import (
+    LayoutCompaction,
+    NodeLayout,
+    compose_index_maps,
+    identity_index_map,
+    plan_compaction,
+    truncation_plan,
+)
 from repro.graphs.laplacian import (
     laplacian_dense,
     laplacian_matvec,

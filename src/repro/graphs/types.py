@@ -18,6 +18,10 @@ Mask-aware node layout
 ----------------------
 The node dimension is a *layout* size (``n_nodes``, aliased ``n_pad``):
 a static pytree field shared by every stream stacked into one batch.
+The layout itself is a first-class object — `repro.graphs.layout
+.NodeLayout` — which owns the constructor-argument resolution and the
+mask-embedding logic below, plus the grow/compact migration lifecycle
+(every constructor here accepts ``layout=`` in place of ``n_pad=``).
 Which of those slots are real is the per-stream dynamic ``node_mask``
 ((n,) 0/1, ``None`` meaning "all active"). Padding with inactive nodes
 is exact for every FINGER statistic: an isolated node has zero strength,
@@ -41,11 +45,13 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.graphs.layout import NodeLayout
 
 
 def _drop_self_loops(senders: np.ndarray, receivers: np.ndarray,
@@ -95,38 +101,17 @@ def _pytree_dataclass(cls=None, *, static_fields=()):
     return wrap(cls)
 
 
-def _default_node_mask(n_logical: int, n_pad: int, dtype=jnp.float32):
-    """[1]*n_logical + [0]*(n_pad - n_logical) — contiguous active prefix."""
-    return jnp.concatenate([
-        jnp.ones((n_logical,), dtype),
-        jnp.zeros((n_pad - n_logical,), dtype),
-    ])
+def _resolve_layout_args(n_nodes: int, n_pad, node_mask, layout, kind: str):
+    """Constructor args → (layout size, mask) via `NodeLayout.resolve`.
 
-
-def _resolve_node_layout(n_nodes: int, n_pad, node_mask, kind: str):
-    """(logical n, n_pad, mask) constructor args → (layout n, mask).
-
-    ``n_pad=None, node_mask=None`` keeps the legacy unmasked layout
-    (layout size = n_nodes, mask None). Supplying either produces a
-    masked layout of size n_pad (default n_nodes) whose first n_nodes
-    slots are active unless an explicit mask says otherwise.
+    The legacy unmasked layout (nothing supplied) keeps layout size =
+    n_nodes and mask None; everything else is owned by `NodeLayout`.
     """
-    if n_pad is None and node_mask is None:
+    resolved, mask = NodeLayout.resolve(n_nodes, n_pad, node_mask,
+                                        layout=layout, kind=kind)
+    if resolved is None:
         return int(n_nodes), None
-    n_layout = int(n_nodes) if n_pad is None else int(n_pad)
-    if n_layout < n_nodes:
-        raise ValueError(f"{kind}: n_pad={n_layout} < n_nodes={n_nodes}")
-    if node_mask is None:
-        node_mask = _default_node_mask(int(n_nodes), n_layout)
-    else:
-        node_mask = jnp.asarray(node_mask, jnp.float32)
-        if node_mask.shape[0] == n_nodes and n_layout > n_nodes:
-            node_mask = jnp.pad(node_mask, (0, n_layout - int(n_nodes)))
-        if node_mask.shape[0] != n_layout:
-            raise ValueError(
-                f"{kind}: node_mask length {node_mask.shape[0]} != "
-                f"n_pad {n_layout}")
-    return n_layout, node_mask
+    return resolved.n_pad, mask
 
 
 @_pytree_dataclass(static_fields=("n_nodes",))
@@ -150,6 +135,11 @@ class DenseGraph:
     def n_pad(self) -> int:
         return self.n_nodes
 
+    @property
+    def layout(self) -> NodeLayout:
+        """This graph's node layout (host graphs are generation 0)."""
+        return NodeLayout(self.n_nodes)
+
     def n_active(self) -> jax.Array:
         if self.node_mask is None:
             return jnp.asarray(self.n_nodes, jnp.int32)
@@ -165,34 +155,36 @@ class DenseGraph:
     def strengths(self) -> jax.Array:
         return jnp.sum(self.masked_weights(), axis=1)
 
-    def pad_to(self, n_pad: int) -> "DenseGraph":
-        """Embed into an n_pad layout; new slots are inactive (mask 0).
+    def pad_to(self, n_pad: Union[int, NodeLayout]) -> "DenseGraph":
+        """Embed into an n_pad (or NodeLayout) layout; new slots are
+        inactive (mask 0).
 
         Always returns a graph *with* a node mask (all-ones when nothing
         was padded) so heterogeneous batches share one pytree structure.
         """
+        layout = n_pad if isinstance(n_pad, NodeLayout) \
+            else NodeLayout(int(n_pad))
         n = self.n_nodes
-        if n_pad < n:
-            raise ValueError(f"pad_to: n_pad={n_pad} < n_nodes={n}")
-        mask = self.node_mask
-        if mask is None:
-            mask = jnp.ones((n,), self.weights.dtype)
+        if layout.n_pad < n:
+            raise ValueError(f"pad_to: n_pad={layout.n_pad} < n_nodes={n}")
+        mask = layout.embed_mask(self.node_mask, n,
+                                 dtype=self.weights.dtype)
         w = self.weights
-        if n_pad > n:
-            w = jnp.pad(w, ((0, n_pad - n), (0, n_pad - n)))
-            mask = jnp.pad(mask, (0, n_pad - n))
-        return DenseGraph(weights=w, n_nodes=n_pad, node_mask=mask)
+        if layout.n_pad > n:
+            w = jnp.pad(w, ((0, layout.n_pad - n), (0, layout.n_pad - n)))
+        return DenseGraph(weights=w, n_nodes=layout.n_pad, node_mask=mask)
 
     @staticmethod
     def from_weights(w: jax.Array, n_pad: Optional[int] = None,
-                     node_mask: Optional[jax.Array] = None) -> "DenseGraph":
+                     node_mask: Optional[jax.Array] = None,
+                     layout: Optional[NodeLayout] = None) -> "DenseGraph":
         n = w.shape[0]
         w = 0.5 * (w + w.T)
         w = w * (1.0 - jnp.eye(n, dtype=w.dtype))
-        if n_pad is None and node_mask is None:
+        if n_pad is None and node_mask is None and layout is None:
             return DenseGraph(weights=w, n_nodes=n)
-        n_layout, node_mask = _resolve_node_layout(
-            n, n_pad, node_mask, kind="DenseGraph.from_weights")
+        n_layout, node_mask = _resolve_layout_args(
+            n, n_pad, node_mask, layout, kind="DenseGraph.from_weights")
         node_mask = node_mask.astype(w.dtype)
         if n_layout > n:
             w = jnp.pad(w, ((0, n_layout - n), (0, n_layout - n)))
@@ -226,6 +218,11 @@ class EdgeList:
         return self.n_nodes
 
     @property
+    def layout(self) -> NodeLayout:
+        """This graph's node layout (host graphs are generation 0)."""
+        return NodeLayout(self.n_nodes)
+
+    @property
     def m_pad(self) -> int:
         return self.senders.shape[0]
 
@@ -253,19 +250,19 @@ class EdgeList:
             s = s * self.node_mask
         return s
 
-    def pad_to(self, n_pad: int) -> "EdgeList":
-        """Embed into an n_pad node layout (edge arrays unchanged)."""
+    def pad_to(self, n_pad: Union[int, NodeLayout]) -> "EdgeList":
+        """Embed into an n_pad (or NodeLayout) node layout (edge arrays
+        unchanged)."""
+        layout = n_pad if isinstance(n_pad, NodeLayout) \
+            else NodeLayout(int(n_pad))
         n = self.n_nodes
-        if n_pad < n:
-            raise ValueError(f"pad_to: n_pad={n_pad} < n_nodes={n}")
-        mask = self.node_mask
-        if mask is None:
-            mask = jnp.ones((n,), self.weights.dtype)
-        if n_pad > n:
-            mask = jnp.pad(mask, (0, n_pad - n))
+        if layout.n_pad < n:
+            raise ValueError(f"pad_to: n_pad={layout.n_pad} < n_nodes={n}")
+        mask = layout.embed_mask(self.node_mask, n,
+                                 dtype=self.weights.dtype)
         return EdgeList(senders=self.senders, receivers=self.receivers,
                         weights=self.weights, mask=self.mask,
-                        n_nodes=n_pad, node_mask=mask)
+                        n_nodes=layout.n_pad, node_mask=mask)
 
     def to_dense(self) -> DenseGraph:
         w = self.masked_weights()
@@ -302,7 +299,8 @@ class EdgeList:
     def from_arrays(senders, receivers, weights, n_nodes: int,
                     m_pad: Optional[int] = None,
                     n_pad: Optional[int] = None,
-                    node_mask: Optional[jax.Array] = None) -> "EdgeList":
+                    node_mask: Optional[jax.Array] = None,
+                    layout: Optional[NodeLayout] = None) -> "EdgeList":
         senders = np.asarray(senders, np.int32)
         receivers = np.asarray(receivers, np.int32)
         weights = np.asarray(weights, np.float32)
@@ -315,8 +313,8 @@ class EdgeList:
         if m_pad is None:
             m_pad = max(m, 1)
         pad = m_pad - m
-        n_layout, node_mask = _resolve_node_layout(
-            n_nodes, n_pad, node_mask, kind="EdgeList.from_arrays")
+        n_layout, node_mask = _resolve_layout_args(
+            n_nodes, n_pad, node_mask, layout, kind="EdgeList.from_arrays")
         return EdgeList(
             senders=jnp.asarray(np.concatenate([senders, np.zeros(pad, np.int32)])),
             receivers=jnp.asarray(np.concatenate([receivers, np.zeros(pad, np.int32)])),
@@ -362,6 +360,12 @@ class GraphDelta:
         return self.n_nodes
 
     @property
+    def layout(self) -> NodeLayout:
+        """The node layout this delta is addressed in (generation 0 —
+        a delta itself carries no migration history)."""
+        return NodeLayout(self.n_nodes)
+
+    @property
     def has_node_slots(self) -> bool:
         return self.node_ids is not None
 
@@ -401,7 +405,8 @@ class GraphDelta:
                     k_pad: Optional[int] = None,
                     n_pad: Optional[int] = None,
                     join=(), leave=(),
-                    j_pad: Optional[int] = None) -> "GraphDelta":
+                    j_pad: Optional[int] = None,
+                    layout: Optional[NodeLayout] = None) -> "GraphDelta":
         senders = np.asarray(senders, np.int32)
         receivers = np.asarray(receivers, np.int32)
         dw = np.asarray(dw, np.float32)
@@ -417,6 +422,12 @@ class GraphDelta:
             raise ValueError(f"k={k} delta edges exceed k_pad={k_pad}")
         pad = k_pad - k
         z = np.zeros(pad, np.float32)
+        if layout is not None:
+            if n_pad is not None and int(n_pad) != layout.n_pad:
+                raise ValueError(
+                    f"GraphDelta.from_arrays: n_pad={n_pad} conflicts "
+                    f"with layout.n_pad={layout.n_pad}")
+            n_pad = layout.n_pad
         n_layout = int(n_nodes) if n_pad is None else int(n_pad)
         if n_layout < n_nodes:
             raise ValueError(

@@ -21,6 +21,10 @@ from repro.serving.config import (
     TopKSpec,
 )
 from repro.serving.ingest import IngestError
+from repro.serving.migrate import (
+    CompactionReport,
+    LayoutMigrationError,
+)
 from repro.serving.plans import (
     ExecutionPlan,
     LocalPlan,
@@ -36,9 +40,11 @@ from repro.serving.service import (
 
 __all__ = [
     "CheckpointPolicy",
+    "CompactionReport",
     "ExecutionPlan",
     "FingerService",
     "IngestError",
+    "LayoutMigrationError",
     "LocalPlan",
     "MultiPodPlan",
     "ServiceConfig",

@@ -16,11 +16,21 @@ Both validate the stacked delta against the service layout up front
 with named errors, and bound their queue at ``config.max_queue`` so a
 producer that outruns the device fails loudly instead of hoarding
 host memory.
+
+Layout migrations: after a `FingerService.compact`, producers may still
+emit deltas addressed in a pre-compaction layout for a grace period.
+The ingestor holds the layout-owned old→new index-map table and remaps
+those deltas on ``put`` (`serving.migrate.remap_delta`) before
+validation — a delta addressing a *dropped* slot is a lossy remap and
+raises. ``take_all`` hands the in-flight queue back to the service so a
+migration can re-lay-out prefetched ticks instead of refusing to run.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Optional
+from typing import Dict, Optional
+
+import numpy as np
 
 import jax
 
@@ -59,7 +69,8 @@ def validate_stacked_delta(config: ServiceConfig,
         raise IngestError(
             f"stacked delta n_pad {deltas.n_nodes} != config.n_pad="
             f"{config.n_pad}; after a repad, rebuild deltas with the "
-            "new n_pad")
+            "new n_pad (deltas in a pre-compact() layout are remapped "
+            "automatically while its index map is installed)")
     has_slots = deltas.node_ids is not None
     want_slots = config.j_pad is not None
     if has_slots != want_slots:
@@ -78,25 +89,46 @@ class SyncIngestor:
     """Transfer-on-consume baseline: `get` puts the delta on device and
     blocks until the transfer lands, serializing it before the tick."""
 
-    def __init__(self, config: ServiceConfig, plan: ExecutionPlan):
+    def __init__(self, config: ServiceConfig, plan: ExecutionPlan,
+                 remaps: Optional[Dict[int, np.ndarray]] = None):
         self.config = config
         self.plan = plan
+        # old n_pad -> old→current index map (installed by compact()).
+        self.remaps: Dict[int, np.ndarray] = dict(remaps or {})
         self._queue: deque = deque()
 
     def __len__(self) -> int:
         return len(self._queue)
+
+    def _maybe_remap(self, deltas: GraphDelta) -> GraphDelta:
+        """Renumber a delta still addressed in a pre-compaction layout
+        (the migration grace path; steady-state deltas pass through)."""
+        if deltas.n_nodes == self.config.n_pad \
+                or deltas.n_nodes not in self.remaps:
+            return deltas
+        from repro.serving.migrate import remap_delta
+
+        return remap_delta(deltas, self.remaps[deltas.n_nodes],
+                           self.config.n_pad)
 
     def _prepare(self, deltas: GraphDelta) -> GraphDelta:
         """What `put` enqueues — the host delta (transfer deferred)."""
         return deltas
 
     def put(self, deltas: GraphDelta) -> None:
+        deltas = self._maybe_remap(deltas)
         validate_stacked_delta(self.config, deltas)
         if len(self._queue) >= self.config.max_queue:
             raise IngestError(
                 f"ingestion queue full ({self.config.max_queue} "
                 f"pending tick(s)); poll() before ingesting more")
         self._queue.append(self._prepare(deltas))
+
+    def take_all(self) -> list:
+        """Pop every pending tick, oldest first (migration re-layout)."""
+        out = list(self._queue)
+        self._queue.clear()
+        return out
 
     def get(self) -> Optional[GraphDelta]:
         if not self._queue:
@@ -122,8 +154,9 @@ class DoubleBufferedIngestor(SyncIngestor):
         return self._queue.popleft()
 
 
-def make_ingestor(config: ServiceConfig,
-                  plan: ExecutionPlan) -> SyncIngestor:
+def make_ingestor(config: ServiceConfig, plan: ExecutionPlan,
+                  remaps: Optional[Dict[int, np.ndarray]] = None,
+                  ) -> SyncIngestor:
     if config.ingestion == "double_buffered":
-        return DoubleBufferedIngestor(config, plan)
-    return SyncIngestor(config, plan)
+        return DoubleBufferedIngestor(config, plan, remaps)
+    return SyncIngestor(config, plan, remaps)

@@ -1,0 +1,349 @@
+"""Migration-safe NodeLayout lifecycle for the serving state.
+
+The two lifecycle moves the ROADMAP asked for, implemented as jitted
+device-side transforms of the stacked ``(B, n_pad)`` `FingerState`:
+
+- ``grow_stacked``    : embed into a larger layout *without the host
+  round-trip* the old `FingerService.repad` paid (new slots inactive,
+  zero strength — padding is exact for every FINGER statistic). With
+  ``out_shardings`` the same call reshards in place under the sharded/
+  multipod placements; the stacked state never leaves the devices.
+- ``compact_stacked`` : drop permanently-left slots (inactive in every
+  stream) and renumber the survivors to a packed prefix. Dropped slots
+  carry exactly zero strength and zero mask, so S, Σs², Σ_E w² and
+  s_max are all invariant — only the *addressing* changes, which is why
+  the migration owns an old→new ``index_map`` that ingestion applies to
+  `GraphDelta`s still addressed in the old layout (``remap_delta``).
+
+Both are one-shot migrations, not serving-tick hot paths: each call
+jit-compiles for its (old, new) shape pair, and that compile is part of
+the migration pause the benchmarks measure.
+
+Checkpoint interplay: every migration appends a record to
+``layout_log.json`` in the checkpoint directory (when one is
+configured). `FingerService.restore` uses the log to walk a checkpoint
+taken under an older layout generation forward — pad for grows, gather
+through the index map for compactions — until it reaches the layout the
+restoring config declares (``migrate_host_arrays``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import FingerState
+from repro.graphs.layout import LayoutCompaction, NodeLayout
+from repro.graphs.types import GraphDelta
+from repro.serving.config import ServiceConfigError
+
+LAYOUT_LOG = "layout_log.json"
+
+
+class LayoutMigrationError(ServiceConfigError):
+    """A layout migration would lose information (truncating active
+    slots, remapping a delta that addresses a dropped slot, restoring a
+    checkpoint with no migration chain to the requested layout)."""
+
+
+# -- device-side state transforms -----------------------------------------
+
+def _grow_impl(states: FingerState, new_layout: NodeLayout) -> FingerState:
+    grow = new_layout.n_pad - states.strengths.shape[-1]
+    pad = [(0, 0)] * (states.strengths.ndim - 1) + [(0, grow)]
+    mask = states.node_mask
+    if mask is None:
+        # Legacy unmasked state: the old slots were all live.
+        mask = jnp.ones_like(states.strengths)
+    return FingerState(
+        q=states.q, s_total=states.s_total, s_max=states.s_max,
+        strengths=jnp.pad(states.strengths, pad),
+        node_mask=jnp.pad(mask, pad),
+        layout=new_layout)
+
+
+def grow_stacked(states: FingerState, new_layout: NodeLayout,
+                 out_shardings=None) -> FingerState:
+    """Embed the stacked state into a larger layout, entirely on device.
+
+    The old slots keep their ids; new slots are inactive with zero
+    strength, so every FINGER statistic is unchanged (tested under
+    ``jax.transfer_guard("disallow")`` — no host transfer of the
+    stacked state). ``out_shardings`` lets the caller reshard in place
+    (a `NamedSharding` over the stream axis applies to every leaf).
+    """
+    old_n_pad = int(states.strengths.shape[-1])
+    if new_layout.n_pad <= old_n_pad:
+        raise LayoutMigrationError(
+            f"grow_stacked: new layout n_pad={new_layout.n_pad} does "
+            f"not grow the current n_pad={old_n_pad}")
+    kwargs = {}
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    # No donation: every (B, n_pad) leaf changes size, so XLA could
+    # never reuse the buffers anyway (it would only warn about it).
+    fn = jax.jit(_grow_impl, static_argnames=("new_layout",), **kwargs)
+    return fn(states, new_layout=new_layout)
+
+
+def compact_stacked(states: FingerState, compaction: LayoutCompaction,
+                    out_shardings=None) -> FingerState:
+    """Gather the surviving slots into the compacted layout (device-side;
+    the only host-side input is the small static ``keep`` index vector
+    baked into the compiled gather).
+
+    Dropped slots are inactive in every stream — zero strength, zero
+    mask — so the scalar statistics (Q, S, s_max) pass through
+    untouched and the gathered strengths equal the old ones up to pure
+    renumbering.
+    """
+    keep = compaction.keep
+    n_live = int(keep.shape[0])
+    tail = compaction.new.n_pad - n_live
+
+    def impl(st: FingerState) -> FingerState:
+        idx = jnp.asarray(keep)
+        pad = [(0, 0)] * (st.strengths.ndim - 1) + [(0, tail)]
+        mask = st.node_mask
+        if mask is None:
+            mask = jnp.ones_like(st.strengths)
+        return FingerState(
+            q=st.q, s_total=st.s_total, s_max=st.s_max,
+            strengths=jnp.pad(st.strengths[..., idx], pad),
+            node_mask=jnp.pad(mask[..., idx], pad),
+            layout=compaction.new)
+
+    kwargs = {}
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    return jax.jit(impl, **kwargs)(states)
+
+
+def occupancy(states: FingerState) -> np.ndarray:
+    """(n_pad,) bool: slot live in *any* stream. One small device
+    reduction + host transfer of an (n_pad,) vector — never the stacked
+    state. Unmasked states are fully occupied by definition."""
+    if states.node_mask is None:
+        return np.ones((int(states.strengths.shape[-1]),), bool)
+    mask = states.node_mask
+    axes = tuple(range(mask.ndim - 1))
+    return np.asarray(jnp.max(mask, axis=axes) > 0) if axes \
+        else np.asarray(mask > 0)
+
+
+# -- delta remapping (the ingestion-side half of a compaction) ------------
+
+def remap_delta(delta: GraphDelta, index_map: np.ndarray,
+                new_n_pad: int) -> GraphDelta:
+    """Renumber a delta addressed in an old layout through ``index_map``.
+
+    The compatibility path for producers still emitting deltas against
+    a pre-compaction layout: valid slots addressing a *dropped* node are
+    a lossy remap and raise `LayoutMigrationError` (a dropped slot was
+    inactive in every stream, so only a join — or a stale producer —
+    can hit one). Host-side by design: this runs on the migration grace
+    path, not the steady-state tick.
+    """
+    index_map = np.asarray(index_map, np.int32)
+    senders = np.asarray(delta.senders)
+    receivers = np.asarray(delta.receivers)
+    mask = np.asarray(delta.mask)
+    ms, mr = index_map[senders], index_map[receivers]
+    lossy = ((ms < 0) | (mr < 0)) & (mask > 0)
+    if lossy.any():
+        bad = sorted(set(np.concatenate(
+            [senders[lossy & (ms < 0)].ravel(),
+             receivers[lossy & (mr < 0)].ravel()]).tolist()))
+        raise LayoutMigrationError(
+            f"remap_delta: delta edge(s) address dropped node slot(s) "
+            f"{bad[:8]} of the old layout; those slots were reclaimed "
+            "by compact() and no longer exist")
+    node_ids = node_flag = None
+    if delta.node_ids is not None:
+        ids = np.asarray(delta.node_ids)
+        flag = np.asarray(delta.node_flag)
+        mi = index_map[ids]
+        lossy_n = (mi < 0) & (flag != 0)
+        if lossy_n.any():
+            bad = sorted(set(ids[lossy_n].ravel().tolist()))
+            raise LayoutMigrationError(
+                f"remap_delta: node join/leave slot(s) {bad[:8]} "
+                "address dropped node slots of the old layout; re-issue "
+                "them against the compacted layout (or repad to grow)")
+        node_ids = jnp.asarray(np.where(mi < 0, 0, mi).astype(np.int32))
+        node_flag = delta.node_flag
+    # Masked slots may map to -1; clamp to 0 so downstream gathers
+    # (which run before the mask zeroes them) never see a wrapped index.
+    return GraphDelta(
+        senders=jnp.asarray(np.where(ms < 0, 0, ms).astype(np.int32)),
+        receivers=jnp.asarray(np.where(mr < 0, 0, mr).astype(np.int32)),
+        dw=delta.dw, w_old=delta.w_old, mask=delta.mask,
+        n_nodes=int(new_n_pad), node_ids=node_ids, node_flag=node_flag)
+
+
+def embed_delta(delta: GraphDelta, new_n_pad: int) -> GraphDelta:
+    """Re-address a delta into a larger layout. Node ids are unchanged
+    by a growth, so this only swaps the static layout size — no array
+    work, no transfer (what `repad` applies to the in-flight queue)."""
+    if new_n_pad < delta.n_nodes:
+        raise LayoutMigrationError(
+            f"embed_delta: new_n_pad={new_n_pad} < delta layout "
+            f"{delta.n_nodes}")
+    return GraphDelta(
+        senders=delta.senders, receivers=delta.receivers,
+        dw=delta.dw, w_old=delta.w_old, mask=delta.mask,
+        n_nodes=int(new_n_pad),
+        node_ids=delta.node_ids, node_flag=delta.node_flag)
+
+
+# -- the on-disk migration journal ----------------------------------------
+
+def migration_record(kind: str, old: NodeLayout, new: NodeLayout,
+                     index_map: Optional[np.ndarray]) -> dict:
+    return {
+        "kind": kind,
+        "from_generation": old.generation,
+        "to_generation": new.generation,
+        "old_n_pad": old.n_pad,
+        "new_n_pad": new.n_pad,
+        "index_map": None if index_map is None
+        else np.asarray(index_map, np.int32).tolist(),
+    }
+
+
+def check_journalable(ckpt_dir: Optional[str], generation: int) -> None:
+    """Refuse a migration that would *fork* the journal: one record per
+    from_generation, or the restore walk becomes ambiguous (the dict
+    lookup would silently shadow the older branch). Called before any
+    state is touched so a refused migration changes nothing."""
+    if ckpt_dir is None:
+        return
+    dup = [r for r in load_layout_log(ckpt_dir)
+           if r["from_generation"] == generation]
+    if dup:
+        raise LayoutMigrationError(
+            f"layout log in {ckpt_dir!r} already records a migration "
+            f"from generation {generation} (n_pad "
+            f"{dup[0]['old_n_pad']}→{dup[0]['new_n_pad']}): migrating a "
+            "service restored at an older generation in the same "
+            "directory would fork the journal and corrupt "
+            "cross-generation restores — point "
+            "ServiceConfig.checkpoint.directory at a fresh directory "
+            "to fork the deployment")
+
+
+def append_layout_record(ckpt_dir: str, record: dict) -> str:
+    """Append one migration record to the checkpoint directory's layout
+    log (atomic tmp + rename, same contract as the checkpoints)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, LAYOUT_LOG)
+    check_journalable(ckpt_dir, record["from_generation"])
+    log = load_layout_log(ckpt_dir)
+    log.append(record)
+    tmp = path + f".tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(log, f)
+    os.replace(tmp, path)
+    return path
+
+
+def load_layout_log(ckpt_dir: str) -> List[dict]:
+    path = os.path.join(ckpt_dir, LAYOUT_LOG)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def migrate_host_arrays(
+    strengths: np.ndarray, node_mask: Optional[np.ndarray],
+    log: List[dict], from_generation: int, target_n_pad: int,
+) -> Tuple[np.ndarray, np.ndarray, int, List[dict]]:
+    """Walk host-side (B, n_pad) arrays forward through the migration
+    log until they reach ``target_n_pad``.
+
+    Returns ``(strengths, node_mask, generation, applied_records)``.
+    Raises `LayoutMigrationError` when the log holds no chain from
+    ``from_generation`` to a layout of the target size — restoring a
+    checkpoint across an unrecorded migration would scramble slot ids.
+    """
+    strengths = np.asarray(strengths)
+    if node_mask is None:
+        node_mask = np.ones_like(strengths)
+    node_mask = np.asarray(node_mask)
+    by_from = {rec["from_generation"]: rec for rec in log}
+    gen = int(from_generation)
+    applied: List[dict] = []
+    while strengths.shape[-1] != target_n_pad:
+        rec = by_from.get(gen)
+        if rec is None:
+            raise LayoutMigrationError(
+                f"restore: checkpoint layout (n_pad="
+                f"{strengths.shape[-1]}, generation {gen}) has no "
+                f"recorded migration chain to n_pad={target_n_pad}; "
+                f"the layout log covers generations "
+                f"{sorted(by_from)} — restore with the checkpoint's "
+                "own n_pad instead")
+        if rec["old_n_pad"] != strengths.shape[-1]:
+            raise LayoutMigrationError(
+                f"restore: layout log record {gen}→"
+                f"{rec['to_generation']} expects n_pad="
+                f"{rec['old_n_pad']} but the arrays are "
+                f"{strengths.shape[-1]} — corrupt migration journal")
+        if rec["index_map"] is None:  # grow
+            pad = rec["new_n_pad"] - rec["old_n_pad"]
+            widths = [(0, 0)] * (strengths.ndim - 1) + [(0, pad)]
+            strengths = np.pad(strengths, widths)
+            node_mask = np.pad(node_mask, widths)
+        else:  # compact
+            imap = np.asarray(rec["index_map"], np.int32)
+            keep = np.nonzero(imap >= 0)[0]
+            tail = rec["new_n_pad"] - len(keep)
+            widths = [(0, 0)] * (strengths.ndim - 1) + [(0, tail)]
+            strengths = np.pad(strengths[..., keep], widths)
+            node_mask = np.pad(node_mask[..., keep], widths)
+        gen = int(rec["to_generation"])
+        applied.append(rec)
+    return strengths, node_mask, gen, applied
+
+
+def remaps_from_records(records: List[dict]) -> Dict[int, np.ndarray]:
+    """Compose the applied migration records into the per-old-n_pad
+    ingestion remap table (what a live service accumulates as it
+    migrates; reconstructed here for a restored one). Grows compose as
+    the identity injection; a later migration re-using an older n_pad
+    shadows it (keys are layout sizes, the only thing a raw
+    `GraphDelta` can declare)."""
+    from repro.graphs.layout import compose_index_maps, identity_index_map
+
+    table: Dict[int, np.ndarray] = {}
+    for rec in records:
+        imap = identity_index_map(rec["old_n_pad"]) \
+            if rec["index_map"] is None \
+            else np.asarray(rec["index_map"], np.int32)
+        table = {k: compose_index_maps(m, imap)
+                 for k, m in table.items()}
+        if rec["index_map"] is not None:
+            table[rec["old_n_pad"]] = imap
+    return table
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionReport:
+    """What one `FingerService.compact` did (returned to the caller)."""
+
+    old_n_pad: int
+    new_n_pad: int
+    n_live: int
+    generation: int
+    index_map: np.ndarray
+
+    @property
+    def reclaimed(self) -> int:
+        return self.old_n_pad - self.new_n_pad

@@ -88,10 +88,18 @@ class ExecutionPlan:
         return P(self.axes if len(self.axes) > 1 else self.axes[0])
 
     # -- data movement ---------------------------------------------------
-    def shard_states(self, states: FingerState) -> FingerState:
+    def state_sharding(self) -> Optional[NamedSharding]:
+        """How this plan lays the stacked state out (stream axis over
+        ``axes``); None for the single-device plan. Device-side layout
+        migrations pass it as ``out_shardings`` to reshard in place."""
         if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self._spec())
+
+    def shard_states(self, states: FingerState) -> FingerState:
+        sharding = self.state_sharding()
+        if sharding is None:
             return states
-        sharding = NamedSharding(self.mesh, self._spec())
         return jax.tree_util.tree_map(
             lambda x: jax.device_put(x, sharding), states)
 

@@ -16,9 +16,23 @@ hand-assemble from `StreamEngine` pieces:
 
 Lifecycle: `open` (or `restore`) → `ingest`/`poll` in any interleaving
 the queue depth allows → `scores`/`top_anomalies` queries → `save` →
-`close` (also via context manager). `repad` is the one live migration:
-it grows the shared `n_pad` layout in place of the old hard error when
-a tenant outgrows it.
+`close` (also via context manager). Two live layout migrations:
+
+- `repad(new_n_pad)` grows (or losslessly truncates) the shared
+  `NodeLayout`. Growth is a jitted device-side embed — the stacked
+  state never round-trips through host, and under the sharded/multipod
+  placements it reshards in place. A shrink that would cut an active
+  slot raises `LayoutMigrationError` instead of truncating.
+- `compact()` drops permanently-left node slots (inactive in every
+  stream), renumbering the survivors; the resulting old→new index map
+  stays installed so ingestion keeps accepting deltas addressed in the
+  pre-compaction layout for a grace period.
+
+Both migrations re-lay-out any prefetched ticks still in the ingestion
+queue (a double-buffered tick laid out for the old `n_pad` would
+otherwise be applied against the wrong layout), bump the layout
+generation, and journal themselves into the checkpoint directory so
+`restore` can walk an old-generation checkpoint forward.
 
 All placement/ingestion/query policy lives in the `ServiceConfig`; the
 compiled execution comes from `plans.build_plan`. `StreamEngine` remains
@@ -27,7 +41,7 @@ underneath as the plan-internal executor.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -41,9 +55,17 @@ from repro.engine.stream import (
     restore_stacked_state,
     stack_deltas,
 )
+from repro.graphs.layout import (
+    NodeLayout,
+    compose_index_maps,
+    plan_compaction,
+    truncation_plan,
+)
 from repro.graphs.types import GraphDelta
+from repro.serving import migrate
 from repro.serving.config import ServiceConfig, ServiceConfigError
 from repro.serving.ingest import make_ingestor
+from repro.serving.migrate import CompactionReport, LayoutMigrationError
 from repro.serving.plans import ExecutionPlan, MultiPodPlan, build_plan
 from repro.train.checkpoint import save_checkpoint
 
@@ -75,12 +97,21 @@ class FingerService:
     """
 
     def __init__(self, config: ServiceConfig, plan: ExecutionPlan,
-                 states: FingerState, step: int = 0):
+                 states: FingerState, step: int = 0,
+                 remaps: Optional[Dict[int, np.ndarray]] = None):
         self._config = config
         self._plan = plan
         self._states = states
         self._step = step
-        self._ingestor = make_ingestor(config, plan)
+        self._layout = states.layout if states.layout is not None \
+            else NodeLayout(config.n_pad)
+        if self._layout.n_pad != config.n_pad:
+            raise ServiceConfigError(
+                f"FingerService: state layout n_pad="
+                f"{self._layout.n_pad} != config.n_pad={config.n_pad}")
+        # old n_pad -> composed old→current index map (compact() grace).
+        self._remaps: Dict[int, np.ndarray] = dict(remaps or {})
+        self._ingestor = make_ingestor(config, plan, self._remaps)
         self._last_scores: Optional[jax.Array] = None
         self._closed = False
 
@@ -113,7 +144,14 @@ class FingerService:
         """Resume from the latest checkpoint under ``directory`` (default:
         the config's checkpoint directory). Mesh-agnostic: the saving
         job's placement is irrelevant — arrays come back on host and the
-        new plan lays them out."""
+        new plan lays them out.
+
+        Layout-generation aware: a checkpoint taken under an older
+        `NodeLayout` is walked forward through the migrations journaled
+        in the directory's layout log (pad for grows, index-map gather
+        for compactions) until it reaches ``config.n_pad`` — so both
+        "restore onto the layout I saved under" and "restore onto the
+        layout I since migrated to" work, bit-exact."""
         config.validate()
         ckpt_dir = directory or config.checkpoint.directory
         if ckpt_dir is None:
@@ -121,7 +159,7 @@ class FingerService:
                 "restore: no checkpoint directory — pass one or set "
                 "ServiceConfig.checkpoint.directory")
         plan = build_plan(config, mesh)
-        states, step, _meta = restore_stacked_state(
+        states, step, meta = restore_stacked_state(
             ckpt_dir, exact_smax=config.exact_smax, method=config.method)
         b = int(states.q.shape[0])
         n_pad = int(states.strengths.shape[-1])
@@ -129,12 +167,34 @@ class FingerService:
             raise ServiceConfigError(
                 f"restore: checkpoint holds {b} stream(s) but "
                 f"config.batch_size={config.batch_size}")
+        log = migrate.load_layout_log(ckpt_dir)
+        gen = int(meta.get("layout_generation", 0))
         if n_pad != config.n_pad:
-            raise ServiceConfigError(
-                f"restore: checkpoint n_pad={n_pad} but config.n_pad="
-                f"{config.n_pad}; restore with the saved layout, then "
-                "repad() to grow it")
-        return cls(config, plan, plan.shard_states(states), step=step)
+            if not log:
+                raise ServiceConfigError(
+                    f"restore: checkpoint n_pad={n_pad} but config."
+                    f"n_pad={config.n_pad} and the directory has no "
+                    "layout log; restore with the saved layout, then "
+                    "repad()/compact() to migrate it")
+            strengths, node_mask, gen, _applied = \
+                migrate.migrate_host_arrays(
+                    np.asarray(states.strengths),
+                    None if states.node_mask is None
+                    else np.asarray(states.node_mask),
+                    log, gen, config.n_pad)
+            states = FingerState(
+                q=states.q, s_total=states.s_total, s_max=states.s_max,
+                strengths=jnp.asarray(strengths),
+                node_mask=jnp.asarray(node_mask),
+                layout=NodeLayout(config.n_pad, generation=gen))
+        # Rebuild the ingestion grace table the live service had at this
+        # generation: every journaled migration up to it, composed — so
+        # a restored service keeps accepting the same old-layout deltas.
+        recs = sorted((r for r in log if r["to_generation"] <= gen),
+                      key=lambda r: r["from_generation"])
+        remaps = migrate.remaps_from_records(recs)
+        return cls(config, plan, plan.shard_states(states), step=step,
+                   remaps=remaps)
 
     # -- introspection ---------------------------------------------------
     @property
@@ -149,6 +209,11 @@ class FingerService:
     def step(self) -> int:
         """Number of completed ticks (== next checkpoint's step)."""
         return self._step
+
+    @property
+    def layout(self) -> NodeLayout:
+        """The live `NodeLayout` (n_pad + migration generation)."""
+        return self._layout
 
     @property
     def pending(self) -> int:
@@ -244,6 +309,7 @@ class FingerService:
             "b": int(states.q.shape[0]),
             "n_pad": int(states.strengths.shape[-1]),
             "has_node_mask": states.node_mask is not None,
+            "layout_generation": self._layout.generation,
             "exact_smax": self._config.exact_smax,
             "method": self._config.method,
             "service": {"placement": self._config.placement,
@@ -255,47 +321,168 @@ class FingerService:
                                prune_policy=self._config.checkpoint.prune)
 
     # -- live migration --------------------------------------------------
-    def repad(self, new_n_pad: int) -> None:
-        """Grow the shared node layout to ``new_n_pad`` in place.
+    def _journal(self, record: dict) -> None:
+        """Append a migration record to the checkpoint directory's
+        layout log (no-op for ephemeral services) so old-generation
+        checkpoints stay restorable through the migration."""
+        ckpt_dir = self._config.checkpoint.directory
+        if ckpt_dir is not None:
+            migrate.append_layout_record(ckpt_dir, record)
 
-        The state-migration path for a tenant outgrowing `n_pad` (the
-        old behavior was a hard constructor error with no way forward):
-        gathers the stacked state to host, embeds it into the larger
-        layout (new slots inactive, zero strength — padding is exact for
-        every FINGER statistic), rebuilds the execution plan for the new
-        shape, and re-shards. Queued-but-unconsumed deltas still carry
-        the old layout, so the queue must be drained first. Subsequent
-        deltas must be built with ``n_pad=new_n_pad``.
+    def _install_migration(self, states: FingerState,
+                           new_layout: NodeLayout, pending) -> None:
+        """Common tail of repad/compact: swap config/plan/layout, rebuild
+        the ingestor, and re-enqueue the prefetched ticks (already
+        migrated into the new layout by the caller — applying them
+        as-is after the migration would scatter into the wrong slots)."""
+        self._config = self._config.with_(n_pad=new_layout.n_pad)
+        self._plan = build_plan(self._config, self._plan.mesh)
+        self._layout = new_layout
+        self._states = states
+        self._ingestor = make_ingestor(self._config, self._plan,
+                                       self._remaps)
+        for deltas in pending:
+            self._ingestor.put(deltas)
+
+    def _take_pending_migrated(self, transform):
+        """Drain the queue through ``transform`` (the migration's delta
+        re-layout). Atomic: if any prefetched tick cannot be migrated
+        (e.g. a queued join addressing a slot the compaction would
+        drop), the queue is restored and the migration aborts with the
+        service exactly as it was."""
+        pending = self._ingestor.take_all()
+        try:
+            return [transform(d) for d in pending]
+        except LayoutMigrationError:
+            for d in pending:
+                self._ingestor.put(d)
+            raise
+
+    def _apply_compaction(self, plan) -> None:
+        """One shrinking migration (`LayoutCompaction`), shared by the
+        repad truncation path and `compact`: migrate the prefetched
+        queue first (clean abort), then the state, then install + journal."""
+        migrate.check_journalable(self._config.checkpoint.directory,
+                                  self._layout.generation)
+        pending = self._take_pending_migrated(
+            lambda d: migrate.remap_delta(d, plan.index_map,
+                                          plan.new.n_pad))
+        states = migrate.compact_stacked(
+            self._states, plan,
+            out_shardings=self._plan.state_sharding())
+        self._absorb_index_map(plan.index_map)
+        record = migrate.migration_record(
+            "compact", plan.old, plan.new, plan.index_map)
+        self._install_migration(states, plan.new, pending)
+        self._journal(record)
+
+    def repad(self, new_n_pad: int) -> None:
+        """Migrate the shared node layout to ``new_n_pad`` in place.
+
+        Growth — the path for a tenant outgrowing `n_pad` (the old
+        behavior was a hard constructor error with no way forward) — is
+        a jitted device-side embed: new slots are inactive with zero
+        strength (padding is exact for every FINGER statistic), the
+        stacked state never round-trips through host, and under the
+        sharded/multipod placements the same compiled call reshards in
+        place. Shrinking is allowed only when every slot at/above
+        ``new_n_pad`` is inactive in every stream; anything else would
+        silently truncate live state and raises `LayoutMigrationError`
+        (use `compact()` to also reclaim interior holes).
+
+        Prefetched ticks still in the ingestion queue are re-laid-out
+        into the new layout as part of the migration. Subsequent deltas
+        must be built with ``n_pad=new_n_pad``.
         """
         self._check_open("repad")
-        if self.pending:
-            raise ServiceLifecycleError(
-                f"repad with {self.pending} queued tick(s); poll() the "
-                "queue dry first (queued deltas carry the old layout)")
-        old = self._config.n_pad
-        if new_n_pad <= old:
+        old = self._layout.n_pad
+        if new_n_pad == old:
             raise ServiceConfigError(
-                f"repad: new_n_pad={new_n_pad} must exceed the current "
-                f"n_pad={old}")
-        states = jax.device_get(jax.block_until_ready(self._states))
-        grow = new_n_pad - old
-        strengths = np.pad(np.asarray(states.strengths),
-                           ((0, 0), (0, grow)))
-        if states.node_mask is None:
-            # Legacy unmasked layout: the old slots were all live.
-            mask = np.ones_like(np.asarray(states.strengths))
-        else:
-            mask = np.asarray(states.node_mask)
-        mask = np.pad(mask, ((0, 0), (0, grow)))
-        migrated = FingerState(
-            q=jnp.asarray(states.q), s_total=jnp.asarray(states.s_total),
-            s_max=jnp.asarray(states.s_max),
-            strengths=jnp.asarray(strengths),
-            node_mask=jnp.asarray(mask))
-        self._config = self._config.with_(n_pad=new_n_pad)
-        self._plan = build_plan(self._config, self._plan.mesh)
-        self._states = self._plan.shard_states(migrated)
-        self._ingestor = make_ingestor(self._config, self._plan)
+                f"repad: already at n_pad={old}")
+        if new_n_pad > old:
+            migrate.check_journalable(self._config.checkpoint.directory,
+                                      self._layout.generation)
+            pending = self._take_pending_migrated(
+                lambda d: migrate.embed_delta(d, new_n_pad))
+            new_layout = self._layout.grown(new_n_pad)
+            states = migrate.grow_stacked(
+                self._states, new_layout,
+                out_shardings=self._plan.state_sharding())
+            record = migrate.migration_record(
+                "grow", self._layout, new_layout, index_map=None)
+            self._install_migration(states, new_layout, pending)
+            self._journal(record)
+            return
+        occ = migrate.occupancy(self._states)
+        lost = np.nonzero(occ[new_n_pad:])[0] + new_n_pad
+        if lost.size:
+            # Raise before touching the queue: a refused migration
+            # must leave the service (and its prefetched ticks)
+            # exactly as they were.
+            raise LayoutMigrationError(
+                f"repad: new_n_pad={new_n_pad} would truncate "
+                f"active node slot(s) {lost[:8].tolist()} — a lossy "
+                "migration; grow instead, or compact() after the "
+                "tenants holding those slots leave")
+        self._apply_compaction(truncation_plan(occ, self._layout,
+                                               new_n_pad))
+
+    def _absorb_index_map(self, index_map: np.ndarray) -> None:
+        """Compose a fresh old→new map into the ingestion grace table
+        (existing entries chain through it; the just-retired layout
+        gains a direct entry, keyed by its n_pad — the only address a
+        raw `GraphDelta` carries, so a later migration re-using a size
+        shadows the older generation of that size)."""
+        self._remaps = {k: compose_index_maps(m, index_map)
+                        for k, m in self._remaps.items()}
+        self._remaps[self._layout.n_pad] = np.asarray(index_map, np.int32)
+
+    def compact(self, new_n_pad: Optional[int] = None) -> CompactionReport:
+        """Drop permanently-left node slots and renumber the survivors.
+
+        A slot is reclaimable when it is inactive in *every* stream —
+        such a slot holds exactly zero strength and zero mask, so S,
+        Σs², Σ_E w² and s_max are all invariant and only the addressing
+        changes. The old→new index map stays installed: ingestion keeps
+        remapping deltas addressed in the pre-compaction layout, and the
+        checkpoint directory's layout log records the migration so
+        old-generation checkpoints restore through it.
+
+        ``new_n_pad`` defaults to exactly the live-slot count; passing a
+        larger value leaves headroom for future joins, and a value below
+        the live count raises `LayoutMigrationError`. Prefetched queue
+        ticks are re-laid-out (remapped) as part of the migration.
+        Returns a `CompactionReport`; when nothing is reclaimable (and
+        no explicit ``new_n_pad`` asks for a resize) the service is left
+        untouched with ``reclaimed == 0``.
+        """
+        self._check_open("compact")
+        occ = migrate.occupancy(self._states)
+        n_live = int(occ.sum())
+        target = max(n_live, 1) if new_n_pad is None else int(new_n_pad)
+        if target < n_live:
+            raise LayoutMigrationError(
+                f"compact: new_n_pad={target} < {n_live} live slot(s) — "
+                "a lossy migration; only permanently-left slots can be "
+                "reclaimed")
+        if target >= self._layout.n_pad:
+            if new_n_pad is None:
+                # Nothing reclaimable: every slot is live somewhere.
+                return CompactionReport(
+                    old_n_pad=self._layout.n_pad,
+                    new_n_pad=self._layout.n_pad, n_live=n_live,
+                    generation=self._layout.generation,
+                    index_map=np.arange(self._layout.n_pad,
+                                        dtype=np.int32))
+            raise LayoutMigrationError(
+                f"compact: new_n_pad={target} does not shrink the "
+                f"current n_pad={self._layout.n_pad} (repad() grows)")
+        plan = plan_compaction(occ, self._layout, new_n_pad=target)
+        self._apply_compaction(plan)
+        return CompactionReport(
+            old_n_pad=plan.old.n_pad, new_n_pad=plan.new.n_pad,
+            n_live=n_live, generation=plan.new.generation,
+            index_map=plan.index_map)
 
     # -- teardown --------------------------------------------------------
     def close(self) -> None:

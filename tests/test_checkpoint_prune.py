@@ -229,3 +229,116 @@ class TestRestoreLatestUnderPruning:
                           checkpoint=CheckpointPolicy(
                               directory=None,
                               every_ticks=2)).validate()
+
+
+class TestLayoutGenerationRoundTrip:
+    """Satellite contract: checkpoints record their layout generation,
+    and `FingerService.restore` walks a checkpoint taken under an older
+    layout forward through the directory's migration journal — so one
+    checkpoint restores bit-exact onto *both* the generation it was
+    saved under and the generation the live service has since migrated
+    to (save at n_pad=128, compact() to 96)."""
+
+    B, N0, N_PAD, NEW_N_PAD, K_PAD = 4, 90, 128, 96, 4
+
+    def _tick(self, graphs, seed):
+        rng = np.random.default_rng(seed)
+        ds = []
+        for g in graphs:
+            i, j = sorted(rng.choice(self.N0, 2, replace=False).tolist())
+            w_old = float(np.asarray(g.weights)[i, j])
+            ds.append(GraphDelta.from_arrays(
+                [i], [j], [0.5 if w_old == 0 else -w_old], [w_old],
+                n_nodes=self.N0, n_pad=self.N_PAD, k_pad=self.K_PAD))
+        return ds
+
+    def test_restore_across_compaction_both_generations(self, tmp_path):
+        import jax
+
+        from repro.serving import FingerService
+
+        graphs = [erdos_renyi(self.N0, 0.05, seed=s, weighted=True)
+                  for s in range(self.B)]
+        cfg = ServiceConfig(
+            batch_size=self.B, n_pad=self.N_PAD, k_pad=self.K_PAD,
+            topk=TopKSpec(k=2),
+            checkpoint=CheckpointPolicy(directory=str(tmp_path)))
+        svc = FingerService.open(cfg, graphs)
+        svc.ingest(self._tick(graphs, seed=1))
+        svc.poll()
+        svc.save()  # generation 0, n_pad=128
+        saved = jax.device_get(svc.states())
+
+        report = svc.compact(new_n_pad=self.NEW_N_PAD)
+        assert (report.old_n_pad, report.new_n_pad) == (self.N_PAD,
+                                                        self.NEW_N_PAD)
+        assert report.generation == 1
+        live = jax.device_get(svc.states())
+
+        # (a) onto the OLD generation: the checkpoint's own layout.
+        svc_old = FingerService.restore(cfg)
+        old = jax.device_get(svc_old.states())
+        for a, b in zip(jax.tree_util.tree_leaves(saved),
+                        jax.tree_util.tree_leaves(old)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert svc_old.layout.generation == 0
+        svc_old.close()
+
+        # (b) onto the NEW generation: walked forward through the
+        # journaled compaction, bit-exact with the live migrated state.
+        svc_new = FingerService.restore(cfg.with_(n_pad=self.NEW_N_PAD))
+        new = jax.device_get(svc_new.states())
+        assert svc_new.layout.generation == 1
+        for a, b in zip(jax.tree_util.tree_leaves(live),
+                        jax.tree_util.tree_leaves(new)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # both serve the next tick identically (old-layout deltas are
+        # remapped by the restored service's reconstructed grace table)
+        nxt = self._tick(graphs, seed=7)
+        svc.ingest(nxt)
+        svc_new.ingest(nxt)
+        np.testing.assert_array_equal(
+            np.asarray(svc.poll().scores),
+            np.asarray(svc_new.poll().scores))
+        svc_new.close()
+        svc.close()
+
+    def test_restore_without_migration_chain_is_named_error(self, tmp_path):
+        from repro.serving import FingerService
+
+        graphs = [erdos_renyi(8, 0.3, seed=s, weighted=True)
+                  for s in range(2)]
+        cfg = ServiceConfig(batch_size=2, n_pad=8, k_pad=2,
+                            topk=TopKSpec(k=1),
+                            checkpoint=CheckpointPolicy(str(tmp_path)))
+        with FingerService.open(cfg, graphs) as svc:
+            svc.save()
+        # no layout log at all -> the pre-existing named error
+        with pytest.raises(ServiceConfigError, match="layout log"):
+            FingerService.restore(cfg.with_(n_pad=16))
+
+    def test_restore_across_grow_via_journal(self, tmp_path):
+        """The grow record (index_map=None) also journals: a checkpoint
+        saved pre-repad restores onto the grown layout by padding."""
+        import jax
+
+        from repro.serving import FingerService
+
+        graphs = [erdos_renyi(8, 0.3, seed=s, weighted=True)
+                  for s in range(2)]
+        cfg = ServiceConfig(batch_size=2, n_pad=8, k_pad=2,
+                            topk=TopKSpec(k=1),
+                            checkpoint=CheckpointPolicy(str(tmp_path)))
+        svc = FingerService.open(cfg, graphs)
+        svc.save()
+        svc.repad(12)
+        live = jax.device_get(svc.states())
+        svc_new = FingerService.restore(cfg.with_(n_pad=12))
+        assert svc_new.layout.generation == 1
+        for a, b in zip(jax.tree_util.tree_leaves(live),
+                        jax.tree_util.tree_leaves(
+                            jax.device_get(svc_new.states()))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        svc_new.close()
+        svc.close()

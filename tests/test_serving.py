@@ -18,14 +18,17 @@ import numpy as np
 import pytest
 
 import jax
+import jax.numpy as jnp
 
 from repro.engine import StreamEngine, stack_deltas
 from repro.graphs.generators import erdos_renyi
+from repro.graphs.layout import NodeLayout
 from repro.graphs.types import GraphDelta
 from repro.serving import (
     CheckpointPolicy,
     FingerService,
     IngestError,
+    LayoutMigrationError,
     ServiceConfig,
     ServiceConfigError,
     ServiceLifecycleError,
@@ -265,8 +268,12 @@ class TestRepad:
         svc.poll()
         s1 = svc.scores()
 
-        svc.repad(20)
+        # Acceptance: the growth is a device-side embed — no transfer
+        # of the stacked state in either direction.
+        with jax.transfer_guard("disallow"):
+            svc.repad(20)
         assert svc.config.n_pad == 20
+        assert svc.layout == NodeLayout(20, generation=1)
         # join a node beyond the OLD layout — the previously-hard error
         d2 = [GraphDelta.from_arrays(
             [15], [0], [0.9], [0.0], n_nodes=n0, n_pad=20, k_pad=3,
@@ -297,7 +304,7 @@ class TestRepad:
             svc.ingest(stale)
         svc.close()
 
-    def test_repad_refuses_pending_queue_and_shrink(self):
+    def test_repad_rejects_noop_and_lossy_shrink(self):
         b = 4
         graphs = _graphs(b, 12, seed=6)
         rng = np.random.default_rng(6)
@@ -305,11 +312,259 @@ class TestRepad:
                             topk=TopKSpec(k=2))
         svc = FingerService.open(cfg, graphs)
         svc.ingest(_tick_deltas(graphs, rng, 3))
-        with pytest.raises(ServiceLifecycleError, match="queued"):
-            svc.repad(24)
-        svc.poll()
-        with pytest.raises(ServiceConfigError, match="must exceed"):
+        with pytest.raises(ServiceConfigError, match="already at"):
             svc.repad(12)
+        # every slot is live, so ANY shrink would truncate active state
+        with pytest.raises(LayoutMigrationError, match="truncate"):
+            svc.repad(8)
+        # a refused migration must not have eaten the prefetched tick
+        assert svc.pending == 1
+        assert svc.poll() is not None
+        svc.close()
+
+    @pytest.mark.parametrize("ingestion", ["sync", "double_buffered"])
+    def test_repad_relays_out_prefetched_queue(self, ingestion):
+        """Satellite regression: a tick ingested *before* the migration
+        (laid out for the old n_pad, possibly already transferred by the
+        double-buffered ingestor) must be re-laid-out inside repad and
+        produce the same scores as the drain-first ordering."""
+        from repro.core import finger_state, jsdist_incremental
+
+        b, n0 = 3, 10
+        graphs = _graphs(b, n0, seed=8)
+        rng = np.random.default_rng(8)
+        cfg = ServiceConfig(batch_size=b, n_pad=n0, k_pad=3,
+                            ingestion=ingestion, topk=TopKSpec(k=2))
+        svc = FingerService.open(cfg, graphs)
+        d1 = _tick_deltas(graphs, rng, 3)
+        svc.ingest(d1)           # prefetched under n_pad=10 ...
+        svc.repad(16)            # ... migrated to n_pad=16
+        assert svc.pending == 1  # the queue survived the migration
+        report = svc.poll()
+        assert report is not None
+        s1 = svc.scores()
+        for i in range(b):
+            st = finger_state(graphs[i].pad_to(16))
+            ref, _ = jsdist_incremental(
+                st, GraphDelta.from_arrays(
+                    np.asarray(d1[i].senders)[:1],
+                    np.asarray(d1[i].receivers)[:1],
+                    np.asarray(d1[i].dw)[:1],
+                    np.asarray(d1[i].w_old)[:1],
+                    n_nodes=n0, n_pad=16, k_pad=3))
+            assert abs(float(ref) - s1[i]) < 1e-6
+        svc.close()
+
+    def test_repad_truncates_inactive_tail(self):
+        """Shrinking is legal exactly when the cut slots are inactive in
+        every stream — grow to 24, then shrink back to 12 (slots 12..23
+        were never activated)."""
+        b = 3
+        graphs = _graphs(b, 12, seed=9)
+        rng = np.random.default_rng(9)
+        cfg = ServiceConfig(batch_size=b, n_pad=12, k_pad=3,
+                            topk=TopKSpec(k=2))
+        svc = FingerService.open(cfg, graphs)
+        svc.ingest(_tick_deltas(graphs, rng, 3))
+        svc.poll()
+        before = jax.device_get(svc.states())
+        svc.repad(24)
+        svc.repad(12)
+        assert svc.layout == NodeLayout(12, generation=2)
+        after = jax.device_get(svc.states())
+        np.testing.assert_array_equal(np.asarray(before.strengths),
+                                      np.asarray(after.strengths))
+        np.testing.assert_array_equal(np.asarray(before.q),
+                                      np.asarray(after.q))
+        svc.ingest(_tick_deltas(graphs, rng, 3))
+        assert svc.poll() is not None
+        svc.close()
+
+
+def _leave_delta(g, node, n_pad, k_pad, j_pad):
+    """Delete every edge at `node`, then the node leaves — one delta
+    honoring the isolated-leave contract."""
+    w = np.asarray(g.weights)
+    nb = np.nonzero(w[node])[0]
+    return GraphDelta.from_arrays(
+        np.full(len(nb), node), nb, -w[node, nb], w[node, nb],
+        n_nodes=g.n_nodes, n_pad=n_pad, k_pad=k_pad,
+        leave=[node], j_pad=j_pad)
+
+
+class TestCompact:
+    def _open(self, b=3, n0=12, n_pad=16, k_pad=12, j_pad=2, seed=11,
+              **kw):
+        graphs = _graphs(b, n0, seed=seed)
+        # exact_smax: the oracle comparisons below rebuild fresh states,
+        # whose s_max is exact — the eq. (3) never-decreasing bound
+        # would differ after the leave deltas' deletions (by design).
+        kw.setdefault("exact_smax", True)
+        cfg = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k_pad,
+                            j_pad=j_pad, topk=TopKSpec(k=2), **kw)
+        return FingerService.open(cfg, graphs), graphs
+
+    def test_compact_reclaims_and_matches_unpadded_oracle(self):
+        """Acceptance: after every stream's node 3 leaves and the layout
+        compacts, the per-stream statistics equal a fresh unpadded
+        FINGER state of the renumbered graph to 1e-5 — S, Σs², Σ_E w²
+        and s_max are invariant under the renumbering."""
+        from repro.core import finger_state
+
+        svc, graphs = self._open()
+        svc.ingest([_leave_delta(g, 3, 16, 12, 2) for g in graphs])
+        svc.poll()
+        report = svc.compact()
+        assert report.old_n_pad == 16
+        assert report.reclaimed == 16 - report.new_n_pad
+        assert report.new_n_pad == 11  # 12 actives minus the left slot
+        assert svc.layout.generation == 1
+        assert np.array_equal(report.index_map[:4], [0, 1, 2, -1])
+
+        states = jax.device_get(svc.states())
+        keep = np.nonzero(report.index_map >= 0)[0]
+        for i, g in enumerate(graphs):
+            w = np.asarray(g.weights).copy()
+            w[3, :] = 0.0
+            w[:, 3] = 0.0
+            renum = w[np.ix_(keep, keep)]  # the compacted addressing
+            from repro.graphs.types import DenseGraph
+            ref = finger_state(DenseGraph.from_weights(
+                jnp.asarray(renum), n_pad=report.new_n_pad))
+            np.testing.assert_allclose(
+                np.asarray(states.strengths)[i],
+                np.asarray(ref.strengths), atol=1e-5)
+            for field in ("q", "s_total", "s_max"):
+                assert abs(float(getattr(states, field)[i])
+                           - float(getattr(ref, field))) < 1e-5, field
+        svc.close()
+
+    def test_ingestion_remaps_old_layout_deltas(self):
+        """The layout-owned index map: after compact, producers still
+        addressing the old 16-slot layout keep working (their ids are
+        renumbered on ingest), and the scores match the oracle on the
+        compacted layout."""
+        from repro.core import finger_state, jsdist_incremental
+        from repro.graphs.types import DenseGraph
+
+        svc, graphs = self._open(seed=12)
+        svc.ingest([_leave_delta(g, 2, 16, 12, 2) for g in graphs])
+        svc.poll()
+        report = svc.compact()
+        keep = np.nonzero(report.index_map >= 0)[0]
+        # delta still addressed in the OLD layout: edge (4, 7) -> the
+        # compacted slots (index_map[4], index_map[7])
+        old_i, old_j = 4, 7
+        deltas = [GraphDelta.from_arrays(
+            [old_i], [old_j], [0.7],
+            [float(np.asarray(g.weights)[old_i, old_j])],
+            n_nodes=12, n_pad=16, k_pad=12, j_pad=2) for g in graphs]
+        svc.ingest(deltas)
+        svc.poll()
+        scores = svc.scores()
+        for i, g in enumerate(graphs):
+            w = np.asarray(g.weights).copy()
+            w[2, :] = 0.0
+            w[:, 2] = 0.0
+            renum = w[np.ix_(keep, keep)]
+            st = finger_state(DenseGraph.from_weights(
+                jnp.asarray(renum), n_pad=report.new_n_pad))
+            ni, nj = int(report.index_map[old_i]), \
+                int(report.index_map[old_j])
+            ref, _ = jsdist_incremental(st, GraphDelta.from_arrays(
+                [ni], [nj], [0.7], [renum[ni, nj]],
+                n_nodes=report.new_n_pad, n_pad=report.new_n_pad,
+                k_pad=12, j_pad=2))
+            assert abs(float(ref) - scores[i]) < 1e-5
+        # a join addressing a DROPPED slot of the old layout is lossy
+        stale_join = [GraphDelta.from_arrays(
+            [0], [1], [0.1], [0.0], n_nodes=12, n_pad=16, k_pad=12,
+            join=[2], j_pad=2) for _ in graphs]
+        with pytest.raises(LayoutMigrationError, match="dropped"):
+            svc.ingest(stale_join)
+        svc.close()
+
+    def test_compact_noop_and_lossy_named_errors(self):
+        svc, graphs = self._open(b=2, n0=16, n_pad=16, seed=13)
+        report = svc.compact()  # every slot live: nothing to reclaim
+        assert report.reclaimed == 0
+        assert svc.layout.generation == 0
+        with pytest.raises(LayoutMigrationError, match="lossy"):
+            svc.compact(new_n_pad=8)
+        with pytest.raises(LayoutMigrationError, match="does not shrink"):
+            svc.compact(new_n_pad=16)
+        svc.close()
+
+    def test_compact_aborts_cleanly_on_unmigratable_queued_tick(self, tmp_path):
+        """A prefetched join addressing a slot the compaction would drop
+        cannot be remapped — the migration must abort with the service
+        (state, layout, queue, journal) exactly as it was, not
+        half-migrated with the queue eaten."""
+        from repro.serving import migrate
+
+        svc, graphs = self._open(seed=15,
+                                 checkpoint=CheckpointPolicy(
+                                     str(tmp_path)))
+        svc.ingest([_leave_delta(g, 4, 16, 12, 2) for g in graphs])
+        svc.poll()
+        # queue a join re-activating slot 4 — valid now, lossy to drop
+        svc.ingest([GraphDelta.from_arrays(
+            [0], [4], [0.3], [0.0], n_nodes=12, n_pad=16, k_pad=12,
+            join=[4], j_pad=2) for g in graphs])
+        before = jax.device_get(svc.states())
+        with pytest.raises(LayoutMigrationError, match="dropped"):
+            svc.compact()
+        assert svc.layout.generation == 0
+        assert svc.config.n_pad == 16
+        assert svc.pending == 1
+        assert migrate.load_layout_log(str(tmp_path)) == []
+        after = jax.device_get(svc.states())
+        for a, b in zip(jax.tree_util.tree_leaves(before),
+                        jax.tree_util.tree_leaves(after)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the queued join still applies fine on the unmigrated layout
+        assert svc.poll() is not None
+        svc.close()
+
+    def test_migrating_a_forked_journal_is_rejected(self, tmp_path):
+        """Restoring an old-generation checkpoint into the same
+        directory and migrating it again would fork the layout log
+        (two records from one generation) — refused up front, before
+        any state changes."""
+        svc, graphs = self._open(seed=16,
+                                 checkpoint=CheckpointPolicy(
+                                     str(tmp_path)))
+        svc.ingest([_leave_delta(g, 4, 16, 12, 2) for g in graphs])
+        svc.poll()
+        svc.save()
+        svc.compact()  # journals generation 0 -> 1
+        svc.close()
+        forked = FingerService.restore(
+            ServiceConfig(batch_size=3, n_pad=16, k_pad=12, j_pad=2,
+                          topk=TopKSpec(k=2), exact_smax=True,
+                          checkpoint=CheckpointPolicy(str(tmp_path))))
+        assert forked.layout.generation == 0
+        with pytest.raises(LayoutMigrationError, match="fork"):
+            forked.compact()
+        assert forked.layout.generation == 0  # untouched
+        forked.close()
+
+    def test_compact_relays_out_prefetched_queue(self):
+        """A tick prefetched before compact() is remapped with the same
+        index map ingestion applies — the queue survives the migration."""
+        svc, graphs = self._open(seed=14, ingestion="double_buffered")
+        svc.ingest([_leave_delta(g, 5, 16, 12, 2) for g in graphs])
+        svc.poll()
+        # prefetch a tick in the old layout, then migrate under it
+        deltas = [GraphDelta.from_arrays(
+            [0], [1], [0.4], [float(np.asarray(g.weights)[0, 1])],
+            n_nodes=12, n_pad=16, k_pad=12, j_pad=2) for g in graphs]
+        svc.ingest(deltas)
+        report = svc.compact()
+        assert report.reclaimed > 0
+        assert svc.pending == 1
+        assert svc.poll() is not None
+        assert np.isfinite(svc.scores()).all()
         svc.close()
 
 
