@@ -16,6 +16,7 @@ from benchmarks import (
     fig2_size,
     fig4_bifurcation,
     kernels_bench,
+    kernels_interpret,
     roofline,
     streams_bench,
     table2_wiki,
@@ -29,6 +30,10 @@ SUITES = {
     "table3": table3_dos.run,
     "fig4": fig4_bifurcation.run,
     "kernels": kernels_bench.run,
+    # Quick interpret-mode parity pass over EVERY Pallas kernel
+    # (incl. the stream_tick megakernel) so CPU CI catches kernel/ref
+    # drift without a TPU; a mismatch fails the harness.
+    "kernels-interpret": kernels_interpret.run,
     "roofline": roofline.run,
     # Serving-path suite; also writes the machine-readable
     # BENCH_streams.json tracked across PRs.

@@ -5,7 +5,12 @@ machine-readable ``BENCH_streams.json`` so the perf trajectory is
 tracked across PRs:
 
 - **B/n_pad sweep**   : service tick latency + stream-ticks/s vs the
-  per-stream Python loop (one jitted Algorithm-2 step, B dispatches).
+  per-stream Python loop (one jitted Algorithm-2 step, B dispatches),
+  plus a ``fused_tick`` column — the same tick through the
+  `kernels.stream_tick` Pallas megakernel (one kernel launch per tick
+  instead of the vmapped op chain; on the CPU backend it runs in
+  interpret mode, so treat the CPU ratio as structural, not a timing
+  proxy — the HBM-traffic claim needs a real accelerator).
 - **ingest overlap**  : the same serving loop (host delta synthesis
   every tick) under ``sync`` vs ``double_buffered`` ingestion;
   ``overlap_fraction`` is the fraction of the sync-mode wall time the
@@ -20,7 +25,12 @@ tracked across PRs:
   the reference), the device-side `repad` growth, and a `compact` that
   reclaims the inactive tail — at B ∈ {64, 256}, n_pad ∈ {128, 512}
   (quick mode measures the smallest cell only). Times include the
-  migration's one-off jit compile: that *is* the serving pause.
+  migration's one-off jit compile: that *is* the serving pause. Each
+  cell also measures the full **plan swap** (repad + the first
+  post-migration tick, the pause a serving loop actually observes)
+  cold vs warm: ``warm_swap_ms`` pre-compiles the predicted layout via
+  `FingerService.warm_next_layouts` / the `PlanCache` first, so the
+  swap installs an already-compiled plan.
 
 The emitted ``BENCH_streams.json`` is schema-checked by
 ``validate_report`` (also enforced by ``benchmarks/run.py``) so a
@@ -106,14 +116,30 @@ def bench_sweep_point(b: int, n_pad: int, k: int, method: str,
                     iters=iters)
     svc.close()
 
+    # --- fused_tick: the same tick as ONE Pallas kernel launch --------
+    svc_f = FingerService.open(config.with_(method="fused_tick"), graphs)
+
+    def fused_tick():
+        svc_f.ingest(stacked)
+        return svc_f.poll().scores
+
+    t_fused = time_fn(lambda: jax.block_until_ready(fused_tick()),
+                      iters=iters)
+    svc_f.close()
+
     emit(f"streams_loop_b{b}_n{n_pad}_{method}", t_loop,
          f"{b / t_loop:.0f} stream-ticks/s")
     emit(f"streams_service_b{b}_n{n_pad}_{method}", t_svc,
          f"{b / t_svc:.0f} stream-ticks/s")
+    emit(f"streams_fused_b{b}_n{n_pad}", t_fused,
+         f"{b / t_fused:.0f} stream-ticks/s "
+         f"({t_svc / t_fused:.2f}x vs {method} tick)")
     return {
         "b": b, "n_pad": n_pad, "k_pad": k, "method": method,
         "loop_tick_latency_us": t_loop * 1e6,
         "tick_latency_us": t_svc * 1e6,
+        "fused_tick_latency_us": t_fused * 1e6,
+        "fused_speedup_vs_tick": t_svc / t_fused,
         "throughput_stream_ticks_per_s": b / t_svc,
         "speedup_vs_loop": t_loop / t_svc,
     }
@@ -269,6 +295,28 @@ def bench_migration(b: int, n_pad: int, k: int, method: str,
         times["compact_ms"].append((time.perf_counter() - t0) * 1e3)
         assert report.reclaimed > 0
         svc.close()
+
+    # -- plan swap: repad + the FIRST post-migration tick, cold vs
+    # PlanCache-warm (what a serving loop actually pauses for) --------
+    def swap_ms(warm: bool) -> float:
+        svc = fresh_service()
+        if warm:
+            warmed = svc.warm_next_layouts([grow_to])
+            assert warmed == [grow_to]
+        graphs_now = [erdos_renyi(n_live, 0.05, seed=s, weighted=True)
+                      for s in range(b)]
+        post = stack_deltas(_random_deltas(graphs_now, rng, k, k_pad=k,
+                                           n_pad=grow_to))
+        t0 = time.perf_counter()
+        svc.repad(grow_to)
+        svc.ingest(post)
+        jax.block_until_ready(svc.poll().scores)
+        dt = (time.perf_counter() - t0) * 1e3
+        svc.close()
+        return dt
+
+    times["cold_swap_ms"] = [swap_ms(False) for _ in range(repeats)]
+    times["warm_swap_ms"] = [swap_ms(True) for _ in range(repeats)]
     cell = {"b": b, "n_pad": n_pad, "grow_to": grow_to,
             "compact_to": int(report.new_n_pad)}
     for key, vals in times.items():
@@ -282,18 +330,27 @@ def bench_migration(b: int, n_pad: int, k: int, method: str,
     emit(f"streams_migrate_compact_b{b}_n{n_pad}",
          cell["compact_ms"] * 1e-3,
          f"reclaimed to n_pad={cell['compact_to']}")
+    emit(f"streams_swap_cold_b{b}_n{n_pad}",
+         cell["cold_swap_ms"] * 1e-3)
+    emit(f"streams_swap_warm_b{b}_n{n_pad}",
+         cell["warm_swap_ms"] * 1e-3,
+         f"{cell['cold_swap_ms'] / max(cell['warm_swap_ms'], 1e-9):.1f}x"
+         " vs cold swap")
     return cell
 
 
 _SWEEP_KEYS = ("b", "n_pad", "k_pad", "method", "loop_tick_latency_us",
-               "tick_latency_us", "throughput_stream_ticks_per_s",
+               "tick_latency_us", "fused_tick_latency_us",
+               "fused_speedup_vs_tick",
+               "throughput_stream_ticks_per_s",
                "speedup_vs_loop")
 _OVERLAP_KEYS = ("b", "n_pad", "k_pad", "ticks", "t_sync_s",
                  "t_double_buffered_s", "overlap_fraction")
 _MIXED_KEYS = ("b", "n_pad", "ratio_mixed_over_uniform",
                "jit_cache_entries", "compiles_once")
 _MIGRATION_KEYS = ("b", "n_pad", "grow_to", "compact_to",
-                   "host_repad_ms", "device_grow_ms", "compact_ms")
+                   "host_repad_ms", "device_grow_ms", "compact_ms",
+                   "cold_swap_ms", "warm_swap_ms")
 
 
 def _require(mapping, keys, where: str) -> None:

@@ -114,7 +114,11 @@ def main():
     ap.add_argument("--churn", type=int, default=16, help="edges/tick")
     ap.add_argument("--dos-frac", type=float, default=0.25)
     ap.add_argument("--method", default="dense",
-                    choices=["dense", "compact"])
+                    choices=["dense", "compact", "fused_tick"],
+                    help="update path; fused_tick runs the whole "
+                         "batched tick as one Pallas kernel launch "
+                         "(interpret mode off TPU — see the perf-"
+                         "tuning notes in examples/README.md)")
     ap.add_argument("--placement", default="local",
                     choices=["local", "sharded", "multipod"])
     ap.add_argument("--ingestion", default="double_buffered",

@@ -36,8 +36,14 @@ paths (``method=`` on every update entry point):
 - ``dense``    — scatter-add into a dense (n,) Δs vector; O(n) per step
   but branch-free and fastest under jit for the moderate n of the
   paper's pipelines.
+- ``fused_tick`` — the compact statistics through the fused Pallas
+  reduction (`repro.kernels.delta_stats`) on this per-stream entry
+  point; the batched serving engines additionally fuse the *entire*
+  tick — gating, node slots, statistics, state update, JSdist — into
+  one kernel launch per tick under this method
+  (`repro.kernels.stream_tick`).
 
-Both produce identical statistics (tested to 1e-5 over randomized
+All paths produce identical statistics (tested to 1e-5 over randomized
 add/delete/re-weight streams, including deletions at the argmax node).
 """
 from __future__ import annotations
@@ -229,8 +235,13 @@ def update_state(
     ``exact_smax=True`` recomputes max over the carried strength vector —
     an O(n) beyond-paper fix that keeps H̃ exact under deletions.
 
-    ``method`` selects the Δ-statistics path: ``"dense"`` (O(n) scatter)
-    or ``"compact"`` (sorted-endpoint segment sum, O(Δn + Δm)).
+    ``method`` selects the Δ-statistics path: ``"dense"`` (O(n) scatter),
+    ``"compact"`` (sorted-endpoint segment sum, O(Δn + Δm)), or
+    ``"fused_tick"`` — the compact statistics through the fused
+    `repro.kernels.delta_stats` Pallas reduction (interpret mode off
+    TPU). All three produce identical statistics; the batched serving
+    engines additionally fuse the *whole* tick into one kernel under
+    ``"fused_tick"`` (`repro.kernels.stream_tick`).
 
     Mask-aware layout: when the state carries a ``node_mask``, joins
     from the delta's node slots activate before the edge changes, edge
@@ -261,6 +272,15 @@ def update_state(
     elif method == "compact":
         delta_s_total, delta_q_term, max_new_s = \
             delta_stats_compact(state, delta)
+        strengths_new = _apply_delta_strengths(state.strengths, delta)
+    elif method == "fused_tick":
+        # Single-stream spelling of the fused path: the one-pass Pallas
+        # delta-statistics kernel + the O(Δm) scatter carry-forward.
+        # Imported lazily (kernels import this module at load time).
+        from repro.kernels.delta_stats.ops import delta_stats_fused
+
+        delta_s_total, delta_q_term, max_new_s = delta_stats_fused(
+            state, delta, pre_gated=True)
         strengths_new = _apply_delta_strengths(state.strengths, delta)
     else:
         raise ValueError(f"unknown delta-stats method {method!r}")

@@ -165,6 +165,8 @@ def stack_deltas(deltas: Sequence[GraphDelta]) -> GraphDelta:
                       (d.n_nodes for d in deltas))
     _check_consistent("stack_deltas", "node-slot presence",
                       (d.node_ids is not None for d in deltas))
+    _check_consistent("stack_deltas", "layout_generation",
+                      (d.layout_generation for d in deltas))
     if deltas[0].node_ids is not None:
         _check_consistent("stack_deltas", "j_pad",
                           (d.node_ids.shape[-1] for d in deltas))
@@ -178,24 +180,47 @@ class StreamEngine:
     ----------
     exact_smax : recompute s_max exactly after deletions (O(n) per
         stream; the paper's eq. (3) never decreases s_max).
-    method : Δ-statistics path, ``"dense"`` or ``"compact"`` (see
-        `core.incremental`).
+    method : Δ-statistics path, ``"dense"``, ``"compact"``, or
+        ``"fused_tick"`` (see `core.incremental`). Under
+        ``"fused_tick"`` the whole batched tick — mask gating, node
+        join/leave updates, delta statistics, state update, JSdist —
+        runs as ONE Pallas kernel launch gridded over the B stream
+        slots (`repro.kernels.stream_tick`; interpret mode off TPU,
+        with the VMEM size guard routing oversized (k_pad, n_pad)
+        tiles back to this class's vmapped op chain).
     """
 
     def __init__(self, exact_smax: bool = False, method: str = "dense"):
         self.exact_smax = exact_smax
         self.method = method
 
+        # The per-stream step keeps a non-batched spelling for scan /
+        # compatibility callers; the megakernel is a whole-tick fusion,
+        # so its closest single-stream analog is the compact path.
+        step_method = "compact" if method == "fused_tick" else method
+
         def step(state: FingerState, delta: GraphDelta):
             return jsdist_incremental(state, delta,
                                       exact_smax=exact_smax,
-                                      method=method)
+                                      method=step_method)
 
         self._step = step
         self._vstep = jax.vmap(step)
+        if method == "fused_tick":
+            from repro.kernels.stream_tick.ops import stream_tick_fused
+
+            def tick_body(states: FingerState, deltas: GraphDelta):
+                return stream_tick_fused(states, deltas,
+                                         exact_smax=exact_smax)
+        else:
+            tick_body = self._vstep
+        # The one batched-tick computation every entry point executes:
+        # `tick` jits it, `run` scans it, and the serving plans wrap it
+        # in shard_map (each shard runs it on its resident streams).
+        self._tick_body = tick_body
         # Donate the stacked state: the engine owns it and a serving tick
         # should update the (B, n) strengths in place, not copy them.
-        self._tick = jax.jit(self._vstep, donate_argnums=(0,))
+        self._tick = jax.jit(self._tick_body, donate_argnums=(0,))
         self._run = jax.jit(self._scan_run, donate_argnums=(0,))
 
     # -- construction ----------------------------------------------------
@@ -290,7 +315,7 @@ class StreamEngine:
 
     def _scan_run(self, states: FingerState, delta_seq: GraphDelta):
         def body(carry, delta_t):
-            dists, new_carry = self._vstep(carry, delta_t)
+            dists, new_carry = self._tick_body(carry, delta_t)
             return new_carry, dists
 
         final, dists = jax.lax.scan(body, states, delta_seq)
@@ -316,7 +341,7 @@ class StreamEngine:
         """
         spec = P(axis)
         sharded = shard_map(
-            self._vstep, mesh=mesh,
+            self._tick_body, mesh=mesh,
             in_specs=(spec, spec), out_specs=(spec, spec),
         )
         return jax.jit(sharded, donate_argnums=(0,))

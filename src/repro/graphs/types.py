@@ -326,7 +326,7 @@ class EdgeList:
         )
 
 
-@_pytree_dataclass(static_fields=("n_nodes",))
+@_pytree_dataclass(static_fields=("n_nodes", "layout_generation"))
 class GraphDelta:
     """Padded set of undirected edge-weight deltas (Theorem 2's ΔG).
 
@@ -340,6 +340,18 @@ class GraphDelta:
     join-before-edges / leave-after-edges ordering and the isolated-leave
     contract). Joins of isolated nodes change no FINGER statistic, so a
     node-only delta is a zero-cost mask update.
+
+    ``layout_generation`` (optional) names the *migration generation* of
+    the `NodeLayout` the delta is addressed in — stamped by passing
+    ``layout=`` to `from_arrays`. A raw delta only carries a layout
+    *size* (``n_nodes``), which is ambiguous across size-reusing
+    migration chains (grow 128, compact to 96, grow back to 128: two
+    distinct layouts of size 128); the generation makes the serving
+    ingestion remap exact — a generation-stamped delta is renumbered
+    through precisely the migrations since *its* layout, or rejected by
+    name when that chain is unknown. Ingestion strips the field before
+    anything reaches a compiled tick, so it never fragments the jit
+    cache.
     """
 
     senders: jax.Array  # (k_pad,) int32
@@ -350,6 +362,7 @@ class GraphDelta:
     n_nodes: int
     node_ids: Optional[jax.Array] = None  # (j_pad,) int32
     node_flag: Optional[jax.Array] = None  # (j_pad,) float +1/-1/0
+    layout_generation: Optional[int] = None  # static; None = unstamped
 
     @property
     def n(self) -> int:
@@ -361,9 +374,10 @@ class GraphDelta:
 
     @property
     def layout(self) -> NodeLayout:
-        """The node layout this delta is addressed in (generation 0 —
-        a delta itself carries no migration history)."""
-        return NodeLayout(self.n_nodes)
+        """The node layout this delta is addressed in (generation 0
+        when unstamped — a raw delta carries no migration history)."""
+        return NodeLayout(self.n_nodes,
+                          generation=self.layout_generation or 0)
 
     @property
     def has_node_slots(self) -> bool:
@@ -384,6 +398,7 @@ class GraphDelta:
             senders=self.senders, receivers=self.receivers,
             dw=self.dw * factor, w_old=self.w_old, mask=self.mask,
             n_nodes=self.n_nodes, node_ids=self.node_ids, node_flag=flag,
+            layout_generation=self.layout_generation,
         )
 
     def delta_strengths(self, n: Optional[int] = None) -> jax.Array:
@@ -469,6 +484,7 @@ class GraphDelta:
             n_nodes=n_layout,
             node_ids=node_ids,
             node_flag=node_flag,
+            layout_generation=None if layout is None else layout.generation,
         )
 
 
@@ -501,6 +517,7 @@ def gate_delta_by_nodes(delta: GraphDelta,
         mask=delta.mask * gate.astype(delta.mask.dtype),
         n_nodes=delta.n_nodes,
         node_ids=delta.node_ids, node_flag=delta.node_flag,
+        layout_generation=delta.layout_generation,
     )
 
 

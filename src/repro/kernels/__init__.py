@@ -4,6 +4,9 @@
 - ``bsr_spmv``      : block-sparse Laplacian matvec (λ_max power iteration)
 - ``entropy_probe`` : attention-graph VNGE stats from logits, A never in HBM
 - ``delta_stats``   : fused Theorem-2 ΔS/ΔQ/Δs_max over sorted endpoints
+- ``stream_tick``   : the single-pass batched serving tick — mask
+  gating, node join/leave, delta statistics, state update and JSdist
+  for B streams in one kernel launch (``method="fused_tick"``)
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with CPU interpret fallback) and ref.py (pure-jnp oracle).
@@ -21,6 +24,10 @@ from repro.kernels.entropy_probe.ops import (
 from repro.kernels.delta_stats.ops import (
     delta_stats_fused,
     prepare_sorted_delta,
+)
+from repro.kernels.stream_tick.ops import (
+    fits_fused_tick,
+    stream_tick_fused,
 )
 from repro.kernels.vnge_q.ops import (
     quadratic_q_dense,

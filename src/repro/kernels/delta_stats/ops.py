@@ -68,15 +68,20 @@ def delta_stats_fused(
     delta: GraphDelta,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    pre_gated: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(ΔS, ΔQ, max_{ΔV}(s_i + Δs_i)) via the fused one-pass kernel.
 
     Mask-aware: delta edges touching nodes inactive under the state's
     post-join node mask are gated to zero before the reduction, so
     padded node slots contribute exactly nothing (same gating as
-    `core.incremental.update_state`).
+    `core.incremental.update_state`). ``pre_gated=True`` skips that step
+    for callers that already hold the gated delta (the
+    ``method="fused_tick"`` branch of `update_state`; the gate is
+    idempotent, so skipping only saves the duplicate work).
     """
-    delta, _ = gate_delta_for_update(state.node_mask, delta)
+    if not pre_gated:
+        delta, _ = gate_delta_for_update(state.node_mask, delta)
     prep = prepare_sorted_delta(state.strengths, delta)
     if not use_pallas or prep[0].shape[0] > _MAX_FUSED_ENDPOINTS:
         stats = delta_stats_sorted_ref(*prep)

@@ -1,0 +1,162 @@
+"""Public op: the single-pass batched serving tick (``method="fused_tick"``).
+
+`stream_tick_fused` is the drop-in replacement for the vmapped
+per-stream op chain a serving tick used to execute (mask gating →
+join/leave scatters → delta statistics → state update → H̃/JSdist): one
+Pallas kernel launch gridded over the B stream slots, with every
+intermediate resident in VMEM. Dispatch policy:
+
+- Pallas on TPU, interpret mode elsewhere (CPU CI) — same contract as
+  the other kernel packages;
+- the VMEM size guard routes oversized (k_pad, n_pad) tiles to the
+  vmapped XLA reference path (`ref.stream_tick_ref`), as does a legacy
+  mask-less stacked state (the kernel's gating needs the node mask to
+  be part of the carried state);
+- numerics match the vmapped reference to 1e-5 on every path (see
+  `tests/test_stream_tick.py`).
+
+Preparation is pure elementwise XLA: lane-align the edge/node axes and
+tile the per-edge payloads onto the 2k endpoint slots — no argsort, no
+(n,)-sized temporaries (the kernel's segment contraction is
+order-independent, unlike the `delta_stats` sorted-endpoint form).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import FingerState
+from repro.graphs.types import GraphDelta
+from repro.kernels.stream_tick.kernel import (
+    MAX_ENDPOINTS,
+    stream_tick_pallas,
+)
+from repro.kernels.stream_tick.ref import stream_tick_ref
+
+_LANE = 128
+_SUBLANE = 8
+# Conservative per-grid-step VMEM budget for the fused tick's
+# temporaries (the dominant (2k, 2k) indicator matrices plus the
+# (2k, n) one-hot and the (j, n) node-slot indicators).
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((max(int(x), 1) + m - 1) // m) * m
+
+
+def _pad_last(x: jax.Array, width: int, value=0) -> jax.Array:
+    pad = width - x.shape[-1]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def fused_tick_vmem_bytes(n_pad: int, k_pad: int,
+                          j_pad: Optional[int]) -> int:
+    """Estimated VMEM footprint of one fused-tick grid step."""
+    two_k = 2 * _ceil_to(k_pad, _LANE)
+    n = _ceil_to(n_pad, _LANE)
+    j = _ceil_to(j_pad or 1, _SUBLANE)
+    # 4 x (2k, 2k) f32 (same/partner/iota pair) + (2k, n) one-hot
+    # + 2 x (j, n) indicators + the O(2k) / O(n) vectors.
+    return 4 * (4 * two_k * two_k + two_k * n + 2 * j * n
+                + 10 * two_k + 8 * n)
+
+
+def fits_fused_tick(n_pad: int, k_pad: int,
+                    j_pad: Optional[int]) -> bool:
+    """Whether a (k_pad, n_pad, j_pad) tile fits the fused kernel; the
+    caller falls back to the vmapped XLA tick otherwise."""
+    if 2 * _ceil_to(k_pad, _LANE) > MAX_ENDPOINTS:
+        return False
+    return fused_tick_vmem_bytes(n_pad, k_pad, j_pad) \
+        <= _VMEM_BUDGET_BYTES
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def prepare_stream_tick(states: FingerState, deltas: GraphDelta):
+    """Stacked (state, delta) → the kernel's lane-aligned input arrays.
+
+    Pads the edge axis to the lane multiple (mask 0), the node axis to
+    the lane multiple (inactive, zero-strength slots — exact by padding
+    invariance), the node-slot axis to the sublane multiple (flag 0),
+    and tiles the per-edge payloads onto the concatenated
+    [senders | receivers] endpoint slots.
+    """
+    b, n = states.strengths.shape
+    k = deltas.dw.shape[-1]
+    k_al = _ceil_to(k, _LANE)
+    n_al = _ceil_to(n, _LANE)
+
+    snd = _pad_last(deltas.senders.astype(jnp.int32), k_al)
+    rcv = _pad_last(deltas.receivers.astype(jnp.int32), k_al)
+    dw = _pad_last(deltas.dw, k_al)
+    wold = _pad_last(deltas.w_old, k_al)
+    emask = _pad_last(deltas.mask, k_al)
+    ep_ids = jnp.concatenate([snd, rcv], axis=-1)
+    ep_dw = jnp.concatenate([dw, dw], axis=-1)
+    ep_wold = jnp.concatenate([wold, wold], axis=-1)
+    ep_mask = jnp.concatenate([emask, emask], axis=-1)
+
+    if deltas.node_ids is not None:
+        j_al = _ceil_to(deltas.node_ids.shape[-1], _SUBLANE)
+        nid = _pad_last(deltas.node_ids.astype(jnp.int32), j_al)
+        nflag = _pad_last(deltas.node_flag, j_al)
+    else:
+        nid = jnp.zeros((b, _SUBLANE), jnp.int32)
+        nflag = jnp.zeros((b, _SUBLANE), jnp.float32)
+
+    return (states.q.reshape(b, 1), states.s_total.reshape(b, 1),
+            states.s_max.reshape(b, 1),
+            _pad_last(states.strengths, n_al),
+            _pad_last(states.node_mask, n_al),
+            ep_ids, ep_dw, ep_wold, ep_mask, nid, nflag)
+
+
+def stream_tick_fused(
+    states: FingerState,
+    deltas: GraphDelta,
+    exact_smax: bool = False,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, FingerState]:
+    """One batched serving tick: (B,) JSdist scores + updated states.
+
+    Fused single-kernel path when the stacked state is mask-aware and
+    the (k_pad, n_pad, j_pad) tile fits VMEM; the vmapped XLA reference
+    otherwise. Same trace-time larger-layout-delta rejection as
+    `core.incremental.update_state`.
+    """
+    if states.layout is not None \
+            and deltas.n_nodes > states.layout.n_pad:
+        raise ValueError(
+            f"stream_tick_fused: delta is addressed in an n_pad="
+            f"{deltas.n_nodes} layout but the state's layout is n_pad="
+            f"{states.layout.n_pad} (generation "
+            f"{states.layout.generation}); migrate the state first "
+            "(FingerService.repad / serving.migrate.grow_stacked)")
+    n = int(states.strengths.shape[-1])
+    k = int(deltas.dw.shape[-1])
+    j = None if deltas.node_ids is None \
+        else int(deltas.node_ids.shape[-1])
+    if states.node_mask is None or not use_pallas \
+            or not fits_fused_tick(n, k, j):
+        return stream_tick_ref(states, deltas, exact_smax=exact_smax,
+                               method="dense")
+    if interpret is None:
+        interpret = not _on_tpu()
+    prep = prepare_stream_tick(states, deltas)
+    dist, q2, s2, smax2, str2, mask2 = stream_tick_pallas(
+        *prep, exact_smax=exact_smax, interpret=interpret)
+    new_states = FingerState(
+        q=q2[:, 0], s_total=s2[:, 0], s_max=smax2[:, 0],
+        strengths=str2[..., :n], node_mask=mask2[..., :n],
+        layout=states.layout)
+    return dist[:, 0], new_states

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused batched serving tick.
+
+The reference semantics of one serving tick have one home —
+`core.jsdist.jsdist_incremental` (two Theorem-2 updates: ΔG/2 for the
+averaged graph Ḡ and ΔG for G') — and the batched form is its vmap over
+the leading stream axis, exactly what `StreamEngine`'s vmapped tick has
+always executed. The Pallas megakernel in kernel.py must match this
+function to tolerance on every path: mixed-n masks, join/leave node
+slots, graph-emptying and reviving deltas, and empty (all-masked) ticks.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core.jsdist import jsdist_incremental
+from repro.core.state import FingerState
+from repro.graphs.types import GraphDelta
+
+__all__ = ["stream_tick_ref"]
+
+
+def stream_tick_ref(
+    states: FingerState,
+    deltas: GraphDelta,
+    exact_smax: bool = False,
+    method: str = "dense",
+) -> Tuple[jax.Array, FingerState]:
+    """Vmapped Algorithm-2 tick: (B,) JSdist scores + updated states.
+
+    ``method`` selects the per-stream Δ-statistics path ("dense" or
+    "compact" — both produce identical statistics); the fused kernel is
+    compared against this regardless of which the caller deploys.
+    """
+    return jax.vmap(
+        lambda s, d: jsdist_incremental(
+            s, d, exact_smax=exact_smax, method=method)
+    )(states, deltas)

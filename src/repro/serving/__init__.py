@@ -16,6 +16,7 @@ open a `FingerService` (see `examples/serve_streams.py` and
 """
 from repro.serving.config import (
     CheckpointPolicy,
+    PlanCachePolicy,
     ServiceConfig,
     ServiceConfigError,
     TopKSpec,
@@ -29,6 +30,7 @@ from repro.serving.plans import (
     ExecutionPlan,
     LocalPlan,
     MultiPodPlan,
+    PlanCache,
     ShardedPlan,
     build_plan,
 )
@@ -47,6 +49,8 @@ __all__ = [
     "LayoutMigrationError",
     "LocalPlan",
     "MultiPodPlan",
+    "PlanCache",
+    "PlanCachePolicy",
     "ServiceConfig",
     "ServiceConfigError",
     "ServiceLifecycleError",

@@ -22,7 +22,7 @@ from repro.train.checkpoint import PrunePolicy
 
 PLACEMENTS = ("local", "sharded", "multipod")
 INGESTIONS = ("sync", "double_buffered")
-METHODS = ("dense", "compact")
+METHODS = ("dense", "compact", "fused_tick")
 
 
 class ServiceConfigError(ValueError):
@@ -72,6 +72,40 @@ def _validate_prune_policy(policy: PrunePolicy) -> None:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlanCachePolicy:
+    """Knobs of the warm `serving.plans.PlanCache` (pre-compiled plans
+    for predicted next layouts, so `repad`/`compact` swap without a
+    compile pause).
+
+    ``enabled``       : migrations consult the cache at all (disabling
+        restores the always-cold `build_plan` path).
+    ``growth_factor`` : the predicted next *grow* target is
+        ``round(n_pad * growth_factor)`` — `warm_next_layouts` compiles
+        the tick and the grow transform for that layout ahead of time.
+        Predicting the repad schedule only pays off when producers grow
+        geometrically (the default doubling matches the usual
+        amortized-growth policy); an exact target can always be passed
+        to `FingerService.warm_next_layouts` explicitly.
+    ``warm_compact``  : also pre-compile the *pending compaction*
+        target (the current live-slot count). The device-side
+        compaction's renumbering is dynamic, so the compiled transform
+        is valid no matter which slots die — only the target size must
+        match at `compact()` time.
+    """
+
+    enabled: bool = True
+    growth_factor: float = 2.0
+    warm_compact: bool = True
+
+    def validate(self) -> None:
+        if self.growth_factor <= 1.0:
+            raise ServiceConfigError(
+                f"PlanCachePolicy.growth_factor must exceed 1.0 "
+                f"(a grow prediction must grow), got "
+                f"{self.growth_factor}")
+
+
+@dataclasses.dataclass(frozen=True)
 class TopKSpec:
     """Default shape of `top_anomalies` queries.
 
@@ -101,7 +135,12 @@ class ServiceConfig:
     k_pad : delta-edge slots per stream per tick.
     j_pad : node join/leave slots per delta (None = deltas carry no
         node slots).
-    method : Δ-statistics path, ``"dense"`` or ``"compact"``.
+    method : update path — ``"dense"`` / ``"compact"`` Δ-statistics
+        through the vmapped op chain, or ``"fused_tick"`` for the
+        single-pass batched Pallas megakernel
+        (`repro.kernels.stream_tick`; one kernel launch per tick,
+        interpret mode off TPU, oversized tiles fall back to the
+        vmapped chain).
     exact_smax : recompute s_max exactly after deletions (O(n)/stream).
     placement : ``"local"`` (single-device vmap), ``"sharded"``
         (shard_map over ``(data_axis,)``), or ``"multipod"``
@@ -114,6 +153,9 @@ class ServiceConfig:
     max_queue : ingestion queue depth before `ingest` raises.
     checkpoint : CheckpointPolicy (directory, prune policy, cadence).
     topk : TopKSpec for `top_anomalies` queries.
+    plan_cache : PlanCachePolicy — warm pre-compiled plans for
+        predicted next layouts (`FingerService.warm_next_layouts`), so
+        `repad`/`compact` swap without a compile pause.
     data_axis / pod_axis : mesh axis names the sharded placements bind.
     """
 
@@ -128,6 +170,7 @@ class ServiceConfig:
     max_queue: int = 2
     checkpoint: CheckpointPolicy = CheckpointPolicy()
     topk: TopKSpec = TopKSpec()
+    plan_cache: PlanCachePolicy = PlanCachePolicy()
     data_axis: str = "data"
     pod_axis: str = "pod"
 
@@ -165,6 +208,7 @@ class ServiceConfig:
                 f"{self.pod_axis!r} for both")
         self.checkpoint.validate()
         self.topk.validate()
+        self.plan_cache.validate()
         if num_shards is not None:
             if self.batch_size % num_shards != 0:
                 raise ServiceConfigError(

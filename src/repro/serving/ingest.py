@@ -19,14 +19,32 @@ host memory.
 
 Layout migrations: after a `FingerService.compact`, producers may still
 emit deltas addressed in a pre-compaction layout for a grace period.
-The ingestor holds the layout-owned old→new index-map table and remaps
-those deltas on ``put`` (`serving.migrate.remap_delta`) before
+The ingestor holds TWO layout-owned old→new index-map tables and remaps
+such deltas on ``put`` (`serving.migrate.remap_delta`) before
 validation — a delta addressing a *dropped* slot is a lossy remap and
-raises. ``take_all`` hands the in-flight queue back to the service so a
-migration can re-lay-out prefetched ticks instead of refusing to run.
+raises:
+
+- **generation-keyed** (exact): a delta stamped with its layout's
+  migration generation (``GraphDelta.from_arrays(..., layout=...)``)
+  is renumbered through precisely the journaled migrations since that
+  generation — exact across size-reusing chains (grow 128 → compact
+  96 → grow 128 keeps generation 0 and generation 2 distinct) and
+  across pure grows. An unknown generation raises by name.
+- **size-keyed** (legacy best effort): a raw delta only declares a
+  layout *size*; the newest migration from that size wins (a
+  size-reusing chain shadows older same-size layouts), and grows
+  reject old-size raw deltas outright.
+
+The generation stamp is consumed HERE, host-side: it is stripped before
+the delta is queued, so compiled ticks always see
+``layout_generation=None`` and the jit cache never fragments across
+migration generations. ``take_all`` hands the in-flight queue back to
+the service so a migration can re-lay-out prefetched ticks instead of
+refusing to run.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from typing import Dict, Optional
 
@@ -90,24 +108,63 @@ class SyncIngestor:
     blocks until the transfer lands, serializing it before the tick."""
 
     def __init__(self, config: ServiceConfig, plan: ExecutionPlan,
-                 remaps: Optional[Dict[int, np.ndarray]] = None):
+                 remaps: Optional[Dict[int, np.ndarray]] = None,
+                 remaps_by_gen: Optional[Dict[int, np.ndarray]] = None,
+                 generation: int = 0):
         self.config = config
         self.plan = plan
         # old n_pad -> old→current index map (installed by compact()).
         self.remaps: Dict[int, np.ndarray] = dict(remaps or {})
+        # old layout generation -> old→current index map (every
+        # journaled migration; exact across size-reusing chains).
+        self.remaps_by_gen: Dict[int, np.ndarray] = \
+            dict(remaps_by_gen or {})
+        self.generation = int(generation)
         self._queue: deque = deque()
 
     def __len__(self) -> int:
         return len(self._queue)
 
     def _maybe_remap(self, deltas: GraphDelta) -> GraphDelta:
-        """Renumber a delta still addressed in a pre-compaction layout
-        (the migration grace path; steady-state deltas pass through)."""
+        """Renumber a delta still addressed in a pre-migration layout
+        (the grace path; steady-state deltas pass through). The
+        generation stamp, when present, is consumed and stripped here —
+        compiled ticks never see it."""
+        from repro.serving.migrate import remap_delta
+
+        gen = deltas.layout_generation
+        if gen is not None:
+            if gen == self.generation:
+                if deltas.n_nodes != self.config.n_pad:
+                    raise IngestError(
+                        f"delta declares layout generation {gen} (the "
+                        f"current one) but n_pad={deltas.n_nodes} != "
+                        f"the layout's n_pad={self.config.n_pad} — a "
+                        "mis-stamped delta")
+                return dataclasses.replace(deltas,
+                                           layout_generation=None)
+            imap = self.remaps_by_gen.get(gen)
+            if imap is None:
+                raise IngestError(
+                    f"delta is addressed in layout generation {gen} "
+                    f"but the service is at generation "
+                    f"{self.generation} and holds no remap for it "
+                    f"(known: {sorted(self.remaps_by_gen)}); the "
+                    "grace window for that layout has lapsed — "
+                    "rebuild deltas against the current layout")
+            if deltas.n_nodes != imap.shape[0]:
+                # Without this, a wrong-size stamp would either escape
+                # as a raw IndexError from the remap gather or be
+                # silently renumbered as if addressed in the old layout.
+                raise IngestError(
+                    f"delta declares layout generation {gen} but "
+                    f"n_pad={deltas.n_nodes} != that generation's "
+                    f"n_pad={imap.shape[0]} — a mis-stamped delta")
+            out = remap_delta(deltas, imap, self.config.n_pad)
+            return dataclasses.replace(out, layout_generation=None)
         if deltas.n_nodes == self.config.n_pad \
                 or deltas.n_nodes not in self.remaps:
             return deltas
-        from repro.serving.migrate import remap_delta
-
         return remap_delta(deltas, self.remaps[deltas.n_nodes],
                            self.config.n_pad)
 
@@ -156,7 +213,8 @@ class DoubleBufferedIngestor(SyncIngestor):
 
 def make_ingestor(config: ServiceConfig, plan: ExecutionPlan,
                   remaps: Optional[Dict[int, np.ndarray]] = None,
-                  ) -> SyncIngestor:
-    if config.ingestion == "double_buffered":
-        return DoubleBufferedIngestor(config, plan, remaps)
-    return SyncIngestor(config, plan, remaps)
+                  remaps_by_gen: Optional[Dict[int, np.ndarray]] = None,
+                  generation: int = 0) -> SyncIngestor:
+    cls = DoubleBufferedIngestor \
+        if config.ingestion == "double_buffered" else SyncIngestor
+    return cls(config, plan, remaps, remaps_by_gen, generation)

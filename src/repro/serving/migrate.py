@@ -8,16 +8,28 @@ device-side transforms of the stacked ``(B, n_pad)`` `FingerState`:
   zero strength — padding is exact for every FINGER statistic). With
   ``out_shardings`` the same call reshards in place under the sharded/
   multipod placements; the stacked state never leaves the devices.
-- ``compact_stacked`` : drop permanently-left slots (inactive in every
-  stream) and renumber the survivors to a packed prefix. Dropped slots
-  carry exactly zero strength and zero mask, so S, Σs², Σ_E w² and
-  s_max are all invariant — only the *addressing* changes, which is why
-  the migration owns an old→new ``index_map`` that ingestion applies to
-  `GraphDelta`s still addressed in the old layout (``remap_delta``).
+- ``compact_stacked_auto`` : drop permanently-left slots (inactive in
+  every stream) and renumber the survivors to a packed prefix — with
+  the occupancy reduction, the prefix-sum renumbering AND the gather
+  all on device. Dropped slots carry exactly zero strength and zero
+  mask, so S, Σs², Σ_E w² and s_max are all invariant — only the
+  *addressing* changes, which is why the migration returns the old→new
+  ``index_map`` (a small (n_pad,) device array; the only thing that
+  ever reaches the host, for the journal and the ingestion grace
+  table) that ingestion applies to `GraphDelta`s still addressed in
+  the old layout (``remap_delta``). Because the renumbering is a
+  *dynamic* gather, the transform compiles once per (old, new) shape
+  pair — independent of WHICH slots died — which is what lets
+  `serving.plans.PlanCache` pre-compile a pending compaction before
+  knowing the surviving slot set.
+- ``truncate_stacked``    : the tail-only shrink (`repad` downward): a
+  device-side slice, identity renumbering over the kept prefix.
 
-Both are one-shot migrations, not serving-tick hot paths: each call
-jit-compiles for its (old, new) shape pair, and that compile is part of
-the migration pause the benchmarks measure.
+All three transforms go through module-cached jit wrappers (keyed by
+``out_shardings``), so repeated migrations of the same shape pair — and
+`PlanCache.warm`-ed predictions — reuse one compiled program instead of
+paying a fresh trace+compile per call; the first-use compile is the
+migration pause the benchmarks measure (cold vs warm).
 
 Checkpoint interplay: every migration appends a record to
 ``layout_log.json`` in the checkpoint directory (when one is
@@ -29,6 +41,7 @@ restoring config declares (``migrate_host_arrays``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Dict, List, Optional, Tuple
@@ -68,6 +81,18 @@ def _grow_impl(states: FingerState, new_layout: NodeLayout) -> FingerState:
         layout=new_layout)
 
 
+@functools.lru_cache(maxsize=None)
+def _grow_jit(out_shardings):
+    """One persistent jit per out_shardings, so every grow of a given
+    shape pair after the first (including a `PlanCache.warm` dry run)
+    hits the compiled program instead of re-tracing."""
+    kwargs = {} if out_shardings is None \
+        else {"out_shardings": out_shardings}
+    # No donation: every (B, n_pad) leaf changes size, so XLA could
+    # never reuse the buffers anyway (it would only warn about it).
+    return jax.jit(_grow_impl, static_argnames=("new_layout",), **kwargs)
+
+
 def grow_stacked(states: FingerState, new_layout: NodeLayout,
                  out_shardings=None) -> FingerState:
     """Embed the stacked state into a larger layout, entirely on device.
@@ -83,58 +108,144 @@ def grow_stacked(states: FingerState, new_layout: NodeLayout,
         raise LayoutMigrationError(
             f"grow_stacked: new layout n_pad={new_layout.n_pad} does "
             f"not grow the current n_pad={old_n_pad}")
+    return _grow_jit(out_shardings)(states, new_layout=new_layout)
+
+
+def _stacked_mask(states: FingerState) -> jax.Array:
+    """The node mask with the legacy mask-less (= fully live) default."""
+    mask = states.node_mask
+    return jnp.ones_like(states.strengths) if mask is None else mask
+
+
+def _occupancy_device(mask: jax.Array) -> jax.Array:
+    """(n_pad,) slot-live-in-any-stream reduction, on device."""
+    axes = tuple(range(mask.ndim - 1))
+    return (jnp.max(mask, axis=axes) if axes else mask) > 0
+
+
+def _compact_auto_impl(states: FingerState, new_layout: NodeLayout):
+    mask = _stacked_mask(states)
+    old_n_pad = states.strengths.shape[-1]
+    new_n_pad = new_layout.n_pad
+    occ = _occupancy_device(mask)
+    # Order-preserving prefix-sum renumbering: live slot i -> number of
+    # live slots strictly before it.
+    new_idx = jnp.cumsum(occ.astype(jnp.int32)) - 1
+    index_map = jnp.where(occ, new_idx, -1).astype(jnp.int32)
+    n_live = jnp.sum(occ.astype(jnp.int32))
+    # Invert the map: old slot feeding each new slot j. Live slots carry
+    # their (distinct) new ids as sort keys; dead slots sort last.
+    keys = jnp.where(occ, new_idx, jnp.int32(old_n_pad))
+    old_of = jnp.argsort(keys)[:new_n_pad]
+    valid = jnp.arange(new_n_pad, dtype=jnp.int32) < n_live
+
+    def gather(x):
+        return jnp.where(valid, x[..., old_of], 0.0)
+
+    out = FingerState(
+        q=states.q, s_total=states.s_total, s_max=states.s_max,
+        strengths=gather(states.strengths), node_mask=gather(mask),
+        layout=new_layout)
+    return out, index_map
+
+
+@functools.lru_cache(maxsize=None)
+def _compact_auto_jit(out_shardings):
     kwargs = {}
     if out_shardings is not None:
-        kwargs["out_shardings"] = out_shardings
-    # No donation: every (B, n_pad) leaf changes size, so XLA could
-    # never reuse the buffers anyway (it would only warn about it).
-    fn = jax.jit(_grow_impl, static_argnames=("new_layout",), **kwargs)
-    return fn(states, new_layout=new_layout)
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        # The (old_n_pad,) index map is replicated; only the stacked
+        # state reshards over the stream axis.
+        imap_sharding = NamedSharding(out_shardings.mesh,
+                                      PartitionSpec())
+        kwargs["out_shardings"] = (out_shardings, imap_sharding)
+    return jax.jit(_compact_auto_impl, static_argnames=("new_layout",),
+                   **kwargs)
 
 
-def compact_stacked(states: FingerState, compaction: LayoutCompaction,
-                    out_shardings=None) -> FingerState:
-    """Gather the surviving slots into the compacted layout (device-side;
-    the only host-side input is the small static ``keep`` index vector
-    baked into the compiled gather).
+def compact_stacked_auto(
+        states: FingerState, new_layout: NodeLayout,
+        out_shardings=None) -> Tuple[FingerState, jax.Array]:
+    """Compact to ``new_layout`` with occupancy, renumbering and gather
+    all computed ON DEVICE (prefix-sum over the stacked node masks).
 
-    Dropped slots are inactive in every stream — zero strength, zero
-    mask — so the scalar statistics (Q, S, s_max) pass through
-    untouched and the gathered strengths equal the old ones up to pure
-    renumbering.
+    Returns ``(compacted_states, index_map)`` — the index map is an
+    (old_n_pad,) device array (old slot id → new slot id, -1 dropped)
+    the caller transfers for the journal/ingestion table; the stacked
+    (B, n_pad) state itself never touches the host (transfer-guard
+    tested). Dropped slots are inactive in every stream — zero
+    strength, zero mask — so Q/S/s_max pass through untouched and the
+    gathered strengths equal the old ones up to pure renumbering.
+
+    The gather indices are *dynamic*, so the compiled transform depends
+    only on the (old, new) shape pair — not on which slots survive —
+    making it pre-compilable by `serving.plans.PlanCache` before the
+    final occupancy is known. The caller is responsible for having
+    validated that ``new_layout.n_pad`` fits every live slot (a smaller
+    target silently truncating would be lossy — `FingerService.compact`
+    checks against the live-slot count first).
     """
-    keep = compaction.keep
-    n_live = int(keep.shape[0])
-    tail = compaction.new.n_pad - n_live
+    old_n_pad = int(states.strengths.shape[-1])
+    if new_layout.n_pad > old_n_pad:
+        raise LayoutMigrationError(
+            f"compact_stacked_auto: new layout n_pad="
+            f"{new_layout.n_pad} exceeds the current n_pad="
+            f"{old_n_pad} (grow_stacked grows)")
+    return _compact_auto_jit(out_shardings)(states,
+                                            new_layout=new_layout)
 
-    def impl(st: FingerState) -> FingerState:
-        idx = jnp.asarray(keep)
-        pad = [(0, 0)] * (st.strengths.ndim - 1) + [(0, tail)]
-        mask = st.node_mask
-        if mask is None:
-            mask = jnp.ones_like(st.strengths)
-        return FingerState(
-            q=st.q, s_total=st.s_total, s_max=st.s_max,
-            strengths=jnp.pad(st.strengths[..., idx], pad),
-            node_mask=jnp.pad(mask[..., idx], pad),
-            layout=compaction.new)
 
-    kwargs = {}
-    if out_shardings is not None:
-        kwargs["out_shardings"] = out_shardings
-    return jax.jit(impl, **kwargs)(states)
+def _truncate_impl(states: FingerState,
+                   new_layout: NodeLayout) -> FingerState:
+    n_new = new_layout.n_pad
+    mask = _stacked_mask(states)
+    return FingerState(
+        q=states.q, s_total=states.s_total, s_max=states.s_max,
+        strengths=states.strengths[..., :n_new],
+        node_mask=mask[..., :n_new], layout=new_layout)
+
+
+@functools.lru_cache(maxsize=None)
+def _truncate_jit(out_shardings):
+    kwargs = {} if out_shardings is None \
+        else {"out_shardings": out_shardings}
+    return jax.jit(_truncate_impl, static_argnames=("new_layout",),
+                   **kwargs)
+
+
+def truncate_stacked(states: FingerState, new_layout: NodeLayout,
+                     out_shardings=None) -> FingerState:
+    """Tail-only shrink (the `repad` downward path): a device-side
+    slice. Slots [0, new_n_pad) keep their ids; the caller must have
+    verified the cut tail is inactive in every stream."""
+    old_n_pad = int(states.strengths.shape[-1])
+    if new_layout.n_pad >= old_n_pad:
+        raise LayoutMigrationError(
+            f"truncate_stacked: new layout n_pad={new_layout.n_pad} "
+            f"does not shrink the current n_pad={old_n_pad}")
+    return _truncate_jit(out_shardings)(states, new_layout=new_layout)
+
+
+def live_slot_count(states: FingerState) -> int:
+    """Number of slots live in *any* stream — ONE scalar device
+    reduction + host readback (the only transfer `compact()` needs
+    before its device-side transform fixes the static target size)."""
+    if states.node_mask is None:
+        return int(states.strengths.shape[-1])
+    return int(jnp.sum(
+        _occupancy_device(states.node_mask).astype(jnp.int32)))
 
 
 def occupancy(states: FingerState) -> np.ndarray:
     """(n_pad,) bool: slot live in *any* stream. One small device
     reduction + host transfer of an (n_pad,) vector — never the stacked
-    state. Unmasked states are fully occupied by definition."""
+    state. Unmasked states are fully occupied by definition. Used by
+    the `repad` shrink validity check; `compact()` itself stays on
+    device (`compact_stacked_auto`)."""
     if states.node_mask is None:
         return np.ones((int(states.strengths.shape[-1]),), bool)
-    mask = states.node_mask
-    axes = tuple(range(mask.ndim - 1))
-    return np.asarray(jnp.max(mask, axis=axes) > 0) if axes \
-        else np.asarray(mask > 0)
+    return np.asarray(_occupancy_device(states.node_mask))
 
 
 # -- delta remapping (the ingestion-side half of a compaction) ------------
@@ -331,6 +442,34 @@ def remaps_from_records(records: List[dict]) -> Dict[int, np.ndarray]:
                  for k, m in table.items()}
         if rec["index_map"] is not None:
             table[rec["old_n_pad"]] = imap
+    return table
+
+
+def remaps_by_generation(records: List[dict]) -> Dict[int, np.ndarray]:
+    """Compose the migration records into the *generation-keyed* remap
+    table: one entry per past layout generation, mapping its slot ids
+    to the current layout. Unlike the size-keyed table, nothing ever
+    shadows — a size-reusing chain (grow 128 → compact 96 → grow 128)
+    keeps distinct exact maps for generation 0 and generation 2, so a
+    generation-stamped `GraphDelta` is renumbered through precisely the
+    migrations since *its* layout. Grows contribute identity
+    injections, so generation-stamped deltas also survive pure growth
+    chains (size-keyed raw deltas are rejected there by design — a raw
+    old-size delta after a grow is indistinguishable from a malformed
+    one)."""
+    from repro.graphs.layout import (
+        compose_index_maps,
+        identity_index_map,
+    )
+
+    table: Dict[int, np.ndarray] = {}
+    for rec in sorted(records, key=lambda r: r["from_generation"]):
+        imap = identity_index_map(rec["old_n_pad"]) \
+            if rec["index_map"] is None \
+            else np.asarray(rec["index_map"], np.int32)
+        table = {g: compose_index_maps(m, imap)
+                 for g, m in table.items()}
+        table[int(rec["from_generation"])] = imap
     return table
 
 

@@ -21,12 +21,22 @@ vector itself is never materialized on one device. Per-pod queries
 all-gather candidates over the data axis only (n_data·k values per
 pod).
 
-`StreamEngine` is the plan-internal executor: plans reuse its vmapped
-step and state sharding helpers rather than re-deriving them.
+`StreamEngine` is the plan-internal executor: plans reuse its batched
+tick body (the vmapped step chain, or the `kernels.stream_tick` fused
+megakernel under ``method="fused_tick"``) and state sharding helpers
+rather than re-deriving them — all three placements run the same body
+inside their `shard_map`.
+
+`PlanCache` is the warm pool behind pause-free migrations: it holds
+plans pre-compiled (`ExecutionPlan.warm_tick`) for *predicted next
+layouts* — the repad growth schedule plus the pending compaction
+target — so `FingerService.repad`/`compact` swap to an
+already-compiled tick instead of paying a fresh trace+compile while
+serving is stalled.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.state import FingerState
 from repro.distributed.sharding import shard_map
 from repro.engine.stream import StreamEngine
+from repro.graphs.layout import NodeLayout
 from repro.graphs.types import GraphDelta
 from repro.serving.config import ServiceConfig, ServiceConfigError
 
@@ -123,6 +134,43 @@ class ExecutionPlan:
         donated — rebind to the returned one."""
         raise NotImplementedError
 
+    def warm_tick(self, layout: NodeLayout) -> None:
+        """Compile this plan's tick (and default top-k query) ahead of
+        serving by running them once on zero-filled dummy state/deltas
+        of the declared shapes.
+
+        The dummy tick populates exactly the jit cache entry the real
+        tick will hit — same shapes, same static `NodeLayout`
+        (generation included), same shardings (the dummies go through
+        `shard_states`/`put_deltas`) — so a migration that installs
+        this plan pays no compile pause. Called by `PlanCache.warm`
+        with the *predicted* post-migration layout.
+        """
+        c = self.config
+        if layout.n_pad != c.n_pad:
+            raise ServiceConfigError(
+                f"warm_tick: layout n_pad={layout.n_pad} != this "
+                f"plan's config.n_pad={c.n_pad}")
+        b, n, k, j = c.batch_size, layout.n_pad, c.k_pad, c.j_pad
+        f32, i32 = jnp.float32, jnp.int32
+        states = FingerState(
+            q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
+            s_max=jnp.zeros((b,), f32),
+            strengths=jnp.zeros((b, n), f32),
+            node_mask=jnp.zeros((b, n), f32), layout=layout)
+        deltas = GraphDelta(
+            senders=jnp.zeros((b, k), i32),
+            receivers=jnp.zeros((b, k), i32),
+            dw=jnp.zeros((b, k), f32), w_old=jnp.zeros((b, k), f32),
+            mask=jnp.zeros((b, k), f32), n_nodes=n,
+            node_ids=None if j is None else jnp.zeros((b, j), i32),
+            node_flag=None if j is None else jnp.zeros((b, j), f32))
+        states = self.shard_states(states)
+        deltas = self.put_deltas(deltas)
+        dists, _ = self.tick(states, deltas)
+        self.topk(dists, c.topk.k)
+        jax.block_until_ready(dists)
+
     # -- queries ---------------------------------------------------------
     def _validate_k(self, k: int) -> None:
         if k <= 0:
@@ -178,7 +226,10 @@ class _ShardedPlanBase(ExecutionPlan):
             _mesh_axis_size(mesh, ax)  # named error before any compile
         config.validate(num_shards=self.num_shards)
         spec = self._spec()
-        body = self.engine._vstep
+        # The engine's batched tick body: the vmapped step chain, or the
+        # fused stream_tick megakernel (each shard launches it over its
+        # resident B/p streams) under method="fused_tick".
+        body = self.engine._tick_body
         self._tick = jax.jit(
             shard_map(body, mesh=mesh, in_specs=(spec, spec),
                       out_specs=(spec, spec), check_rep=False),
@@ -273,6 +324,58 @@ class MultiPodPlan(_ShardedPlanBase):
         fn = shard_map(body, mesh=self.mesh, in_specs=(spec,),
                        out_specs=(out_spec, out_spec), check_rep=False)
         return jax.jit(fn)
+
+
+class PlanCache:
+    """Warm pool of pre-compiled `ExecutionPlan`s for layout migrations.
+
+    Keyed by the compilation-relevant `ServiceConfig` fields plus the
+    mesh identity. ``warm`` builds a plan for a *predicted* next config
+    and compiles its tick for the predicted post-migration
+    `NodeLayout` (generation included — the layout is a static part of
+    the compiled program); ``get`` is what `FingerService` swaps
+    through: a cache hit returns the already-compiled plan (popped —
+    one migration consumes one warm plan), a miss falls back to the
+    cold `build_plan` path.
+    """
+
+    def __init__(self):
+        self._plans: Dict[tuple, Tuple[ExecutionPlan, NodeLayout]] = {}
+
+    @staticmethod
+    def _key(config: ServiceConfig, mesh: Optional[Mesh]) -> tuple:
+        return (config.batch_size, config.n_pad, config.k_pad,
+                config.j_pad, config.method, config.exact_smax,
+                config.placement, config.data_axis, config.pod_axis,
+                None if mesh is None else id(mesh))
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    @property
+    def warmed_layouts(self) -> Tuple[NodeLayout, ...]:
+        """The layouts currently held warm (introspection/tests)."""
+        return tuple(layout for _, layout in self._plans.values())
+
+    def warm(self, config: ServiceConfig, mesh: Optional[Mesh],
+             layout: NodeLayout) -> ExecutionPlan:
+        """Build + fully compile a plan for ``config`` at ``layout``."""
+        plan = build_plan(config, mesh)
+        plan.warm_tick(layout)
+        self._plans[self._key(config, mesh)] = (plan, layout)
+        return plan
+
+    def get(self, config: ServiceConfig, mesh: Optional[Mesh],
+            layout: NodeLayout) -> ExecutionPlan:
+        """The plan to install for ``config``: warm if predicted
+        correctly, freshly built (cold) otherwise. A warm plan whose
+        predicted layout generation disagrees is still *valid* for the
+        config (compilation correctness only depends on the config);
+        its first tick just compiles cold."""
+        hit = self._plans.pop(self._key(config, mesh), None)
+        if hit is not None and hit[0].config == config:
+            return hit[0]
+        return build_plan(config, mesh)
 
 
 def build_plan(config: ServiceConfig,

@@ -32,7 +32,11 @@ Both migrations re-lay-out any prefetched ticks still in the ingestion
 queue (a double-buffered tick laid out for the old `n_pad` would
 otherwise be applied against the wrong layout), bump the layout
 generation, and journal themselves into the checkpoint directory so
-`restore` can walk an old-generation checkpoint forward.
+`restore` can walk an old-generation checkpoint forward. They swap
+through the warm `PlanCache` when the target layout was predicted
+(`warm_next_layouts` — the repad growth schedule plus the pending
+compaction target, knobs in `ServiceConfig.plan_cache`), installing an
+already-compiled plan with no compile pause.
 
 All placement/ingestion/query policy lives in the `ServiceConfig`; the
 compiled execution comes from `plans.build_plan`. `StreamEngine` remains
@@ -58,15 +62,19 @@ from repro.engine.stream import (
 from repro.graphs.layout import (
     NodeLayout,
     compose_index_maps,
-    plan_compaction,
-    truncation_plan,
+    identity_index_map,
 )
 from repro.graphs.types import GraphDelta
 from repro.serving import migrate
 from repro.serving.config import ServiceConfig, ServiceConfigError
 from repro.serving.ingest import make_ingestor
 from repro.serving.migrate import CompactionReport, LayoutMigrationError
-from repro.serving.plans import ExecutionPlan, MultiPodPlan, build_plan
+from repro.serving.plans import (
+    ExecutionPlan,
+    MultiPodPlan,
+    PlanCache,
+    build_plan,
+)
 from repro.train.checkpoint import save_checkpoint
 
 # One on-disk format with StreamEngine.save: a FingerService checkpoint
@@ -98,7 +106,8 @@ class FingerService:
 
     def __init__(self, config: ServiceConfig, plan: ExecutionPlan,
                  states: FingerState, step: int = 0,
-                 remaps: Optional[Dict[int, np.ndarray]] = None):
+                 remaps: Optional[Dict[int, np.ndarray]] = None,
+                 remaps_gen: Optional[Dict[int, np.ndarray]] = None):
         self._config = config
         self._plan = plan
         self._states = states
@@ -109,11 +118,23 @@ class FingerService:
             raise ServiceConfigError(
                 f"FingerService: state layout n_pad="
                 f"{self._layout.n_pad} != config.n_pad={config.n_pad}")
-        # old n_pad -> composed old→current index map (compact() grace).
+        # old n_pad -> composed old→current index map (compact() grace,
+        # legacy size-keyed best effort) ...
         self._remaps: Dict[int, np.ndarray] = dict(remaps or {})
-        self._ingestor = make_ingestor(config, plan, self._remaps)
+        # ... and old generation -> old→current map (exact; every
+        # migration adds an entry, grows as identity injections).
+        self._remaps_gen: Dict[int, np.ndarray] = dict(remaps_gen or {})
+        # Warm pool of pre-compiled plans for predicted next layouts
+        # (see warm_next_layouts / PlanCachePolicy).
+        self._plan_cache = PlanCache()
+        self._ingestor = self._make_ingestor()
         self._last_scores: Optional[jax.Array] = None
         self._closed = False
+
+    def _make_ingestor(self):
+        return make_ingestor(self._config, self._plan, self._remaps,
+                             self._remaps_gen,
+                             generation=self._layout.generation)
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -193,8 +214,9 @@ class FingerService:
         recs = sorted((r for r in log if r["to_generation"] <= gen),
                       key=lambda r: r["from_generation"])
         remaps = migrate.remaps_from_records(recs)
+        remaps_gen = migrate.remaps_by_generation(recs)
         return cls(config, plan, plan.shard_states(states), step=step,
-                   remaps=remaps)
+                   remaps=remaps, remaps_gen=remaps_gen)
 
     # -- introspection ---------------------------------------------------
     @property
@@ -334,13 +356,23 @@ class FingerService:
         """Common tail of repad/compact: swap config/plan/layout, rebuild
         the ingestor, and re-enqueue the prefetched ticks (already
         migrated into the new layout by the caller — applying them
-        as-is after the migration would scatter into the wrong slots)."""
+        as-is after the migration would scatter into the wrong slots).
+
+        The plan comes from the warm `PlanCache` when this layout was
+        predicted (`warm_next_layouts`): the swap then installs an
+        already-compiled tick and serving resumes without a compile
+        pause; a cache miss falls back to the cold `build_plan` path.
+        """
         self._config = self._config.with_(n_pad=new_layout.n_pad)
-        self._plan = build_plan(self._config, self._plan.mesh)
+        if self._config.plan_cache.enabled:
+            self._plan = self._plan_cache.get(self._config,
+                                              self._plan.mesh,
+                                              new_layout)
+        else:
+            self._plan = build_plan(self._config, self._plan.mesh)
         self._layout = new_layout
         self._states = states
-        self._ingestor = make_ingestor(self._config, self._plan,
-                                       self._remaps)
+        self._ingestor = self._make_ingestor()
         for deltas in pending:
             self._ingestor.put(deltas)
 
@@ -358,22 +390,22 @@ class FingerService:
                 self._ingestor.put(d)
             raise
 
-    def _apply_compaction(self, plan) -> None:
-        """One shrinking migration (`LayoutCompaction`), shared by the
-        repad truncation path and `compact`: migrate the prefetched
-        queue first (clean abort), then the state, then install + journal."""
-        migrate.check_journalable(self._config.checkpoint.directory,
-                                  self._layout.generation)
+    def _commit_shrink(self, new_layout: NodeLayout,
+                       states_new: FingerState,
+                       index_map: np.ndarray) -> None:
+        """Common commit of a shrinking migration (compact / repad
+        truncation) whose new state has ALREADY been computed (the
+        transforms are pure and non-donating, so nothing is mutated
+        yet): migrate the prefetched queue first (clean abort path —
+        a queued tick addressing a dropped slot raises with the
+        service untouched), then install + journal."""
         pending = self._take_pending_migrated(
-            lambda d: migrate.remap_delta(d, plan.index_map,
-                                          plan.new.n_pad))
-        states = migrate.compact_stacked(
-            self._states, plan,
-            out_shardings=self._plan.state_sharding())
-        self._absorb_index_map(plan.index_map)
+            lambda d: migrate.remap_delta(d, index_map,
+                                          new_layout.n_pad))
         record = migrate.migration_record(
-            "compact", plan.old, plan.new, plan.index_map)
-        self._install_migration(states, plan.new, pending)
+            "compact", self._layout, new_layout, index_map)
+        self._absorb_index_map(index_map)
+        self._install_migration(states_new, new_layout, pending)
         self._journal(record)
 
     def repad(self, new_n_pad: int) -> None:
@@ -410,6 +442,10 @@ class FingerService:
                 out_shardings=self._plan.state_sharding())
             record = migrate.migration_record(
                 "grow", self._layout, new_layout, index_map=None)
+            # Generation-stamped deltas survive a grow exactly (slot
+            # ids are unchanged — an identity injection); raw old-size
+            # deltas stay rejected (ambiguous by size alone).
+            self._absorb_generation_map(identity_index_map(old))
             self._install_migration(states, new_layout, pending)
             self._journal(record)
             return
@@ -424,18 +460,37 @@ class FingerService:
                 f"active node slot(s) {lost[:8].tolist()} — a lossy "
                 "migration; grow instead, or compact() after the "
                 "tenants holding those slots leave")
-        self._apply_compaction(truncation_plan(occ, self._layout,
-                                               new_n_pad))
+        migrate.check_journalable(self._config.checkpoint.directory,
+                                  self._layout.generation)
+        new_layout = self._layout.compacted(new_n_pad)
+        states = migrate.truncate_stacked(
+            self._states, new_layout,
+            out_shardings=self._plan.state_sharding())
+        index_map = np.full((old,), -1, np.int32)
+        index_map[:new_n_pad] = np.arange(new_n_pad, dtype=np.int32)
+        self._commit_shrink(new_layout, states, index_map)
+
+    def _absorb_generation_map(self, index_map: np.ndarray) -> None:
+        """Chain the generation-keyed grace table through one more
+        migration and give the just-retired generation a direct entry.
+        Keys are migration generations, so nothing ever shadows — the
+        table stays exact across size-reusing chains."""
+        self._remaps_gen = {g: compose_index_maps(m, index_map)
+                            for g, m in self._remaps_gen.items()}
+        self._remaps_gen[self._layout.generation] = \
+            np.asarray(index_map, np.int32)
 
     def _absorb_index_map(self, index_map: np.ndarray) -> None:
-        """Compose a fresh old→new map into the ingestion grace table
-        (existing entries chain through it; the just-retired layout
-        gains a direct entry, keyed by its n_pad — the only address a
-        raw `GraphDelta` carries, so a later migration re-using a size
-        shadows the older generation of that size)."""
+        """Compose a fresh old→new map into the ingestion grace tables.
+        In the legacy size-keyed table, existing entries chain through
+        it and the just-retired layout gains a direct entry keyed by
+        its n_pad — the only address a *raw* `GraphDelta` carries, so a
+        later migration re-using a size shadows the older generation of
+        that size; the generation-keyed table has no such ambiguity."""
         self._remaps = {k: compose_index_maps(m, index_map)
                         for k, m in self._remaps.items()}
         self._remaps[self._layout.n_pad] = np.asarray(index_map, np.int32)
+        self._absorb_generation_map(index_map)
 
     def compact(self, new_n_pad: Optional[int] = None) -> CompactionReport:
         """Drop permanently-left node slots and renumber the survivors.
@@ -448,6 +503,15 @@ class FingerService:
         checkpoint directory's layout log records the migration so
         old-generation checkpoints restore through it.
 
+        Transfer-free state path: slot occupancy, the prefix-sum
+        renumbering and the survivor gather all run ON DEVICE
+        (`migrate.compact_stacked_auto` — transfer-guard-tested like
+        `grow_stacked`). The only host readbacks are one scalar (the
+        live-slot count, which fixes the static target size) and the
+        small (n_pad,) index map the journal and ingestion grace table
+        need host-side anyway; the stacked (B, n_pad) state never
+        leaves the devices.
+
         ``new_n_pad`` defaults to exactly the live-slot count; passing a
         larger value leaves headroom for future joins, and a value below
         the live count raises `LayoutMigrationError`. Prefetched queue
@@ -457,8 +521,7 @@ class FingerService:
         untouched with ``reclaimed == 0``.
         """
         self._check_open("compact")
-        occ = migrate.occupancy(self._states)
-        n_live = int(occ.sum())
+        n_live = migrate.live_slot_count(self._states)
         target = max(n_live, 1) if new_n_pad is None else int(new_n_pad)
         if target < n_live:
             raise LayoutMigrationError(
@@ -477,12 +540,88 @@ class FingerService:
             raise LayoutMigrationError(
                 f"compact: new_n_pad={target} does not shrink the "
                 f"current n_pad={self._layout.n_pad} (repad() grows)")
-        plan = plan_compaction(occ, self._layout, new_n_pad=target)
-        self._apply_compaction(plan)
+        migrate.check_journalable(self._config.checkpoint.directory,
+                                  self._layout.generation)
+        new_layout = self._layout.compacted(target)
+        # Pure device-side transform — nothing installed yet, so the
+        # lossy-queued-tick abort below leaves the service untouched.
+        states, imap_device = migrate.compact_stacked_auto(
+            self._states, new_layout,
+            out_shardings=self._plan.state_sharding())
+        index_map = np.asarray(jax.device_get(imap_device), np.int32)
+        self._commit_shrink(new_layout, states, index_map)
         return CompactionReport(
-            old_n_pad=plan.old.n_pad, new_n_pad=plan.new.n_pad,
-            n_live=n_live, generation=plan.new.generation,
-            index_map=plan.index_map)
+            old_n_pad=int(index_map.shape[0]),
+            new_n_pad=new_layout.n_pad,
+            n_live=n_live, generation=new_layout.generation,
+            index_map=index_map)
+
+    def warm_next_layouts(self, targets: Optional[Sequence[int]] = None
+                          ) -> list:
+        """Pre-compile execution plans (and migration transforms) for
+        predicted next layouts, so a later `repad`/`compact` swaps to
+        an already-compiled plan without a compile pause.
+
+        Call it from serving idle time (between polls) — warming costs
+        the compiles the migration would otherwise pay while stalled.
+        ``targets`` is a list of n_pad values; the default prediction
+        comes from `ServiceConfig.plan_cache`:
+
+        - the repad growth schedule: ``round(n_pad * growth_factor)``;
+        - the pending compaction target (``warm_compact``): the current
+          live-slot count. The device-side compaction renumbers
+          dynamically, so the warmed transform stays valid no matter
+          which slots die — only the target size must still match when
+          `compact()` runs.
+
+        For each target this compiles (a) the post-migration tick +
+        default top-k via `ExecutionPlan.warm_tick` and (b) the
+        device-side state transform (`grow_stacked` /
+        `compact_stacked_auto`) on zero dummies of the current shapes.
+        Returns the list of warmed n_pad targets.
+        """
+        self._check_open("warm_next_layouts")
+        policy = self._config.plan_cache
+        if not policy.enabled:
+            return []
+        n_pad = self._layout.n_pad
+        if targets is None:
+            targets = []
+            grow = int(round(n_pad * policy.growth_factor))
+            if grow > n_pad:
+                targets.append(grow)
+            if policy.warm_compact:
+                n_live = migrate.live_slot_count(self._states)
+                if 0 < n_live < n_pad:
+                    targets.append(n_live)
+        warmed = []
+        for target in targets:
+            target = int(target)
+            if target == n_pad or target <= 0:
+                continue
+            new_layout = self._layout.grown(target) if target > n_pad \
+                else self._layout.compacted(target)
+            cfg = self._config.with_(n_pad=target)
+            plan = self._plan_cache.warm(cfg, self._plan.mesh,
+                                         new_layout)
+            # Dummies with the live state's shapes/layout/sharding
+            # populate exactly the jit cache entry the migration hits.
+            dummy = jax.tree_util.tree_map(jnp.zeros_like, self._states)
+            if target > n_pad:
+                migrate.grow_stacked(
+                    dummy, new_layout,
+                    out_shardings=plan.state_sharding())
+            else:
+                migrate.compact_stacked_auto(
+                    dummy, new_layout,
+                    out_shardings=plan.state_sharding())
+            warmed.append(target)
+        return warmed
+
+    @property
+    def plan_cache(self) -> PlanCache:
+        """The warm plan pool (introspection: `len`, warmed layouts)."""
+        return self._plan_cache
 
     # -- teardown --------------------------------------------------------
     def close(self) -> None:

@@ -606,6 +606,318 @@ class TestLifecycle:
         svc2.close()
 
 
+class TestDeviceCompaction:
+    """The transfer-free compact(): occupancy + renumbering + gather on
+    device (`migrate.compact_stacked_auto`), transfer-guard-tested like
+    `grow_stacked`."""
+
+    def _left_states(self, b=3, n0=12, n_pad=16):
+        from repro.engine import StreamEngine
+
+        graphs = _graphs(b, n0, seed=21)
+        states = StreamEngine.init_states(graphs, n_pad=n_pad)
+        # deactivate slots {3, 7} in every stream, zeroing strengths
+        # (the compactable pattern: interior holes + inactive tail)
+        mask = np.asarray(states.node_mask).copy()
+        strengths = np.asarray(states.strengths).copy()
+        mask[:, [3, 7]] = 0.0
+        strengths[:, [3, 7]] = 0.0
+        from repro.core.state import FingerState
+
+        return FingerState(
+            q=states.q, s_total=states.s_total, s_max=states.s_max,
+            strengths=jnp.asarray(strengths),
+            node_mask=jnp.asarray(mask), layout=states.layout)
+
+    def test_transfer_guard_state_never_touches_host(self):
+        from repro.serving import migrate
+
+        states = self._left_states()
+        new_layout = NodeLayout(10, generation=1)
+        with jax.transfer_guard("disallow"):
+            out, imap_dev = migrate.compact_stacked_auto(states,
+                                                         new_layout)
+            jax.block_until_ready(out.strengths)
+        # the small (n_pad,) index map transfers OUTSIDE the guard —
+        # that is the journal/ingestion readback, not state movement
+        imap = np.asarray(jax.device_get(imap_dev))
+        assert imap.shape == (16,)
+
+    def test_device_renumbering_matches_host_plan(self):
+        """The on-device prefix-sum renumbering equals the host-side
+        `plan_compaction` index map, and the gathered state equals the
+        static-keep gather."""
+        from repro.graphs.layout import plan_compaction
+        from repro.serving import migrate
+
+        states = self._left_states()
+        occ = migrate.occupancy(states)
+        host_plan = plan_compaction(occ, states.layout, new_n_pad=10)
+        out, imap_dev = migrate.compact_stacked_auto(
+            states, NodeLayout(10, generation=1))
+        np.testing.assert_array_equal(np.asarray(imap_dev),
+                                      host_plan.index_map)
+        keep = host_plan.keep
+        np.testing.assert_allclose(
+            np.asarray(out.strengths),
+            np.asarray(states.strengths)[:, keep], atol=0)
+        np.testing.assert_allclose(
+            np.asarray(out.node_mask),
+            np.asarray(states.node_mask)[:, keep], atol=0)
+
+    def test_compile_once_across_occupancy_patterns(self):
+        """The dynamic renumbering compiles per (old, new) SHAPE pair,
+        not per surviving-slot set — what makes a pending compaction
+        pre-compilable before the final occupancy is known."""
+        from repro.serving import migrate
+
+        migrate._compact_auto_jit.cache_clear()
+        base = self._left_states()
+        mask2 = np.asarray(base.node_mask).copy()
+        mask2[:, [3, 7]] = 1.0
+        mask2[:, [1, 14]] = 0.0  # a different hole pattern
+        from repro.core.state import FingerState
+
+        other = FingerState(
+            q=base.q, s_total=base.s_total, s_max=base.s_max,
+            strengths=base.strengths * jnp.asarray(mask2 > 0,
+                                                   jnp.float32),
+            node_mask=jnp.asarray(mask2), layout=base.layout)
+        new_layout = NodeLayout(14, generation=1)
+        migrate.compact_stacked_auto(base, new_layout)
+        fn = migrate._compact_auto_jit(None)
+        n_compiles = fn._cache_size()
+        migrate.compact_stacked_auto(other, new_layout)
+        assert fn._cache_size() == n_compiles, \
+            "compaction recompiled for a different occupancy pattern"
+
+    def test_truncate_stacked_is_a_device_slice(self):
+        from repro.serving import migrate
+
+        states = self._left_states()
+        # slots 12..15 are an inactive tail? no — _graphs fills n0=12,
+        # so 12..15 are inactive by construction
+        with jax.transfer_guard("disallow"):
+            out = migrate.truncate_stacked(states,
+                                           NodeLayout(12, generation=1))
+            jax.block_until_ready(out.strengths)
+        np.testing.assert_allclose(np.asarray(out.strengths),
+                                   np.asarray(states.strengths)[:, :12])
+
+
+class TestPlanCache:
+    def _open(self, b=3, n0=10, n_pad=12, **kw):
+        graphs = _graphs(b, n0, seed=31)
+        kw.setdefault("k_pad", 3)
+        cfg = ServiceConfig(batch_size=b, n_pad=n_pad,
+                            topk=TopKSpec(k=2), **kw)
+        return FingerService.open(cfg, graphs), graphs
+
+    def test_warm_then_repad_installs_the_warmed_plan(self):
+        svc, graphs = self._open()
+        rng = np.random.default_rng(31)
+        svc.ingest(_tick_deltas(graphs, rng, 3, n_pad=12))
+        svc.poll()
+        warmed = svc.warm_next_layouts()  # growth_factor=2 -> 24
+        assert 24 in warmed
+        assert len(svc.plan_cache) >= 1
+        assert NodeLayout(24, generation=1) in \
+            svc.plan_cache.warmed_layouts
+        warm_plans = {id(p) for p, _ in svc.plan_cache._plans.values()}
+        svc.repad(24)
+        assert id(svc.plan) in warm_plans, \
+            "repad built a cold plan despite the warmed prediction"
+        # the swapped-in plan serves correctly
+        svc.ingest(_tick_deltas(graphs, rng, 3, n_pad=24))
+        assert svc.poll() is not None
+        assert np.isfinite(svc.scores()).all()
+        svc.close()
+
+    def test_warm_compact_prediction(self):
+        svc, graphs = self._open(j_pad=2, exact_smax=True, k_pad=12)
+        # node 4 leaves everywhere -> live-slot count drops to 9
+        svc.ingest([_leave_delta(g, 4, 12, 12, 2) for g in graphs])
+        svc.poll()
+        warmed = svc.warm_next_layouts()
+        assert 9 in warmed  # the pending compaction target
+        warm_plans = {id(p) for p, _ in svc.plan_cache._plans.values()}
+        report = svc.compact()
+        assert report.new_n_pad == 9
+        assert id(svc.plan) in warm_plans
+        svc.close()
+
+    def test_explicit_targets_and_mispredict_falls_back_cold(self):
+        svc, graphs = self._open()
+        assert svc.warm_next_layouts([20]) == [20]
+        svc.repad(18)  # NOT the warmed target: cold path, still correct
+        assert svc.config.n_pad == 18
+        rng = np.random.default_rng(5)
+        svc.ingest(_tick_deltas(graphs, rng, 3, n_pad=18))
+        assert svc.poll() is not None
+        svc.close()
+
+    def test_disabled_policy_warms_nothing(self):
+        from repro.serving import PlanCachePolicy
+
+        svc, _ = self._open(plan_cache=PlanCachePolicy(enabled=False))
+        assert svc.warm_next_layouts() == []
+        assert len(svc.plan_cache) == 0
+        svc.close()
+
+    def test_policy_validation(self):
+        from repro.serving import PlanCachePolicy
+
+        with pytest.raises(ServiceConfigError, match="growth_factor"):
+            ServiceConfig(batch_size=2, n_pad=8, k_pad=2,
+                          plan_cache=PlanCachePolicy(growth_factor=0.5)
+                          ).validate()
+
+
+class TestGenerationGrace:
+    """The `layout_generation` stamp on deltas: exact ingestion remap
+    across size-reusing migration chains (keys are generations, so
+    nothing shadows), grows included."""
+
+    def _chain(self, tmp_path=None):
+        """16 → compact(11) → repad(16): a size-reusing chain. Returns
+        (svc, graphs, index_map of the compaction)."""
+        b = 3
+        graphs = _graphs(b, 12, seed=41)
+        kw = {}
+        if tmp_path is not None:
+            kw["checkpoint"] = CheckpointPolicy(str(tmp_path))
+        cfg = ServiceConfig(batch_size=b, n_pad=16, k_pad=12, j_pad=2,
+                            exact_smax=True, topk=TopKSpec(k=2), **kw)
+        svc = FingerService.open(cfg, graphs)
+        svc.ingest([_leave_delta(g, 3, 16, 12, 2) for g in graphs])
+        svc.poll()
+        report = svc.compact()           # generation 0 -> 1, n_pad 11
+        svc.repad(16)                    # generation 1 -> 2, n_pad 16
+        assert svc.layout == NodeLayout(16, generation=2)
+        return svc, graphs, report.index_map
+
+    def test_gen0_delta_remaps_exactly_through_size_reuse(self):
+        """A delta stamped with the ORIGINAL generation-0 layout of
+        size 16 must renumber through the compaction map — the
+        size-keyed legacy table cannot distinguish the two 16-slot
+        layouts."""
+        from repro.core import finger_state, jsdist_incremental
+        from repro.graphs.types import DenseGraph
+
+        svc, graphs, index_map = self._chain()
+        gen0 = NodeLayout(16, generation=0)
+        old_i, old_j = 4, 7
+        deltas = [GraphDelta.from_arrays(
+            [old_i], [old_j], [0.7],
+            [float(np.asarray(g.weights)[old_i, old_j])],
+            n_nodes=12, k_pad=12, j_pad=2, layout=gen0)
+            for g in graphs]
+        assert deltas[0].layout_generation == 0
+        svc.ingest(deltas)
+        svc.poll()
+        scores = svc.scores()
+        keep = np.nonzero(index_map >= 0)[0]
+        ni, nj = int(index_map[old_i]), int(index_map[old_j])
+        for i, g in enumerate(graphs):
+            w = np.asarray(g.weights).copy()
+            w[3, :] = 0.0
+            w[:, 3] = 0.0
+            renum = w[np.ix_(keep, keep)]
+            st = finger_state(DenseGraph.from_weights(
+                jnp.asarray(renum), n_pad=16))
+            ref, _ = jsdist_incremental(
+                st, GraphDelta.from_arrays(
+                    [ni], [nj], [0.7], [renum[ni, nj]], n_nodes=16,
+                    k_pad=12, j_pad=2), exact_smax=True)
+            assert abs(float(ref) - scores[i]) < 1e-5, i
+
+    def test_current_generation_passes_and_mis_stamp_raises(self):
+        svc, graphs, _ = self._chain()
+        cur = svc.layout  # generation 2, n_pad 16
+        ok = [GraphDelta.from_arrays(
+            [0], [1], [0.2], [0.0], n_nodes=16, k_pad=12, j_pad=2,
+            layout=cur) for _ in graphs]
+        svc.ingest(ok)
+        assert svc.poll() is not None
+        # current generation but wrong size: a mis-stamped delta
+        bad = [GraphDelta.from_arrays(
+            [0], [1], [0.2], [0.0], n_nodes=12, k_pad=12, j_pad=2,
+            layout=NodeLayout(12, generation=2)) for _ in graphs]
+        with pytest.raises(IngestError, match="mis-stamped"):
+            svc.ingest(bad)
+        # stale generation with the wrong size must also raise by name,
+        # not escape as an IndexError from the remap gather (or worse,
+        # silently renumber through the wrong-size map)
+        bad0 = [GraphDelta.from_arrays(
+            [0], [20], [0.2], [0.0], n_nodes=32, k_pad=12, j_pad=2,
+            layout=NodeLayout(32, generation=0)) for _ in graphs]
+        with pytest.raises(IngestError, match="mis-stamped"):
+            svc.ingest(bad0)
+        svc.close()
+
+    def test_unknown_generation_rejected_by_name(self):
+        svc, graphs, _ = self._chain()
+        bad = [GraphDelta.from_arrays(
+            [0], [1], [0.2], [0.0], n_nodes=16, k_pad=12, j_pad=2,
+            layout=NodeLayout(16, generation=9)) for _ in graphs]
+        with pytest.raises(IngestError, match="generation 9"):
+            svc.ingest(bad)
+        svc.close()
+
+    def test_gen_stamped_delta_survives_a_pure_grow(self):
+        """Grows contribute identity injections to the generation
+        table, so a stamped old-layout delta keeps working where a raw
+        old-size delta is rejected."""
+        b = 3
+        graphs = _graphs(b, 10, seed=43)
+        cfg = ServiceConfig(batch_size=b, n_pad=10, k_pad=3,
+                            topk=TopKSpec(k=2))
+        svc = FingerService.open(cfg, graphs)
+        svc.repad(20)
+        stamped = [GraphDelta.from_arrays(
+            [0], [1], [0.2], [float(np.asarray(g.weights)[0, 1])],
+            n_nodes=10, k_pad=3, layout=NodeLayout(10, generation=0))
+            for g in graphs]
+        svc.ingest(stamped)
+        assert svc.poll() is not None
+        raw = [GraphDelta.from_arrays(
+            [0], [1], [0.2], [0.0], n_nodes=10, k_pad=3)
+            for _ in graphs]
+        with pytest.raises(IngestError, match="repad"):
+            svc.ingest(raw)
+        svc.close()
+
+    def test_restore_rebuilds_generation_table(self, tmp_path):
+        """A restored service accepts the same generation-stamped
+        old-layout deltas the live one did (table rebuilt from the
+        journal)."""
+        svc, graphs, index_map = self._chain(tmp_path)
+        svc.save()
+        cfg_now = svc.config
+        svc.close()
+        svc2 = FingerService.restore(cfg_now, directory=str(tmp_path))
+        assert svc2.layout.generation == 2
+        gen0 = NodeLayout(16, generation=0)
+        deltas = [GraphDelta.from_arrays(
+            [4], [7], [0.7],
+            [float(np.asarray(g.weights)[4, 7])],
+            n_nodes=12, k_pad=12, j_pad=2, layout=gen0)
+            for g in graphs]
+        svc2.ingest(deltas)
+        assert svc2.poll() is not None
+        assert np.isfinite(svc2.scores()).all()
+        svc2.close()
+
+    def test_stack_deltas_validates_generation_consistency(self):
+        d1 = GraphDelta.from_arrays([0], [1], [1.0], [0.0], n_nodes=8,
+                                    k_pad=4,
+                                    layout=NodeLayout(8, generation=1))
+        d2 = GraphDelta.from_arrays([0], [1], [1.0], [0.0], n_nodes=8,
+                                    k_pad=4)
+        with pytest.raises(ValueError, match="layout_generation"):
+            stack_deltas([d1, d1, d2])
+
+
 _SHARDED_TOPK_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

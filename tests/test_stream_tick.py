@@ -1,0 +1,341 @@
+"""Fused batched serving tick (`kernels.stream_tick`) vs the vmapped
+reference, in interpret mode on CPU.
+
+Acceptance anchors (ISSUE 5):
+- interpret-mode parity to 1e-5 against the vmapped Algorithm-2 tick
+  across mixed-n batches, join/leave node slots, graph-emptying and
+  reviving deltas, and empty (all-masked) ticks (property tests);
+- the fused tick compiles ONCE across mixed-n batches (jit-cache
+  assertion on the `StreamEngine(method="fused_tick")` tick);
+- the VMEM size guard routes oversized tiles to the vmapped path with
+  identical numerics, and `method="fused_tick"` flows through
+  `update_state`/`jsdist_incremental`/`ServiceConfig` end to end.
+"""
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import finger_state, jsdist_incremental, update_state
+from repro.engine import StreamEngine, stack_deltas
+from repro.graphs import DenseGraph, GraphDelta
+from repro.graphs.generators import erdos_renyi
+from repro.kernels.stream_tick import ops as stops
+from repro.kernels.stream_tick.ops import (
+    fits_fused_tick,
+    stream_tick_fused,
+)
+from repro.kernels.stream_tick.ref import stream_tick_ref
+
+
+def _assert_tick_matches(states, stacked, exact_smax, atol=1e-5,
+                         label=""):
+    d_ref, s_ref = stream_tick_ref(states, stacked,
+                                   exact_smax=exact_smax)
+    d_f, s_f = stream_tick_fused(states, stacked,
+                                 exact_smax=exact_smax)
+    np.testing.assert_allclose(np.asarray(d_f), np.asarray(d_ref),
+                               atol=atol, err_msg=f"{label}: dist")
+    for field in ("q", "s_total", "s_max", "strengths", "node_mask"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(s_f, field)),
+            np.asarray(getattr(s_ref, field)),
+            atol=atol, err_msg=f"{label}: {field}")
+    return s_f
+
+
+class _Stream:
+    """One tenant over its own node universe, emitting identical deltas
+    to the fused engine and the per-stream unpadded oracle."""
+
+    def __init__(self, n0, n_reserve, seed):
+        self.n_total = n0 + n_reserve
+        rng = np.random.default_rng(seed)
+        w = np.zeros((self.n_total, self.n_total), np.float32)
+        upper = np.triu(rng.random((n0, n0)) < 0.3, k=1)
+        w[:n0, :n0] = upper * rng.uniform(0.5, 1.5, (n0, n0))
+        w[:n0, :n0] += w[:n0, :n0].T
+        self.w = w
+        self.active = list(range(n0))
+        self.reserve = list(range(n0, self.n_total))
+        self.joined = []
+
+    def random_tick(self, rng, k, k_pad, j_pad, n_pad):
+        join, leave, ii, jj = [], [], [], []
+        if self.reserve and rng.random() < 0.4:
+            v = self.reserve.pop(0)
+            join.append(v)
+            self.joined.append(v)
+            self.active.append(v)
+            for u in rng.choice(
+                    [a for a in self.active if a != v],
+                    size=min(2, len(self.active) - 1), replace=False):
+                ii.append(min(v, int(u)))
+                jj.append(max(v, int(u)))
+        elif self.joined and rng.random() < 0.4:
+            v = self.joined.pop(0)
+            leave.append(v)
+            self.active.remove(v)
+            for u in np.flatnonzero(self.w[v]):
+                ii.append(min(v, int(u)))
+                jj.append(max(v, int(u)))
+        pairs = {(a, b) for a, b in zip(ii, jj)}
+        while len(pairs) < k and len(self.active) >= 2:
+            a, b = rng.choice(self.active, size=2, replace=False)
+            a, b = min(int(a), int(b)), max(int(a), int(b))
+            if a != b:
+                pairs.add((a, b))
+        ii = np.array([p[0] for p in pairs], np.int32)
+        jj = np.array([p[1] for p in pairs], np.int32)
+        w_old = self.w[ii, jj]
+        dw = np.where(
+            np.isin(ii, leave) | np.isin(jj, leave) | (w_old > 0),
+            -w_old, rng.uniform(0.2, 1.5, len(ii)).astype(np.float32))
+        dw = dw.astype(np.float32)
+        keep = np.abs(dw) > 1e-12
+        ii, jj, dw, w_old = ii[keep], jj[keep], dw[keep], w_old[keep]
+        self.w[ii, jj] += dw
+        self.w[jj, ii] += dw
+        return GraphDelta.from_arrays(
+            ii, jj, dw, w_old, n_nodes=self.n_total, n_pad=n_pad,
+            k_pad=k_pad, join=join, leave=leave, j_pad=j_pad)
+
+    def engine_graph(self, n_pad):
+        n0 = len(self.active)
+        return DenseGraph.from_weights(
+            jnp.asarray(self.w[:n0, :n0]), n_pad=n_pad)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), exact=st.booleans())
+def test_property_fused_matches_reference_mixed_n_join_leave(seed, exact):
+    """Ticks over a heterogeneous batch with joins/leaves: the fused
+    kernel must match the vmapped reference to 1e-5 every tick."""
+    rng = np.random.default_rng(seed)
+    n_pad, k_pad, j_pad, ticks = 40, 8, 2, 4
+    streams = [_Stream(n0=int(rng.integers(5, 24)), n_reserve=3,
+                       seed=seed * 11 + i) for i in range(4)]
+    states = StreamEngine.init_states(
+        [s.engine_graph(n_pad) for s in streams], n_pad=n_pad)
+    for t in range(ticks):
+        stacked = stack_deltas([
+            s.random_tick(rng, k=4, k_pad=k_pad, j_pad=j_pad,
+                          n_pad=n_pad) for s in streams])
+        states = _assert_tick_matches(states, stacked, exact,
+                                      label=f"tick {t}")
+
+
+class TestEdgeCases:
+    def _dead_live_states(self):
+        dead = DenseGraph.from_weights(
+            jnp.zeros((4, 4)), n_pad=16,
+            node_mask=np.zeros(4, np.float32))
+        live = erdos_renyi(12, 0.3, seed=0, weighted=True)
+        return StreamEngine.init_states([dead, live], n_pad=16)
+
+    def test_empty_delta_tick(self):
+        states = self._dead_live_states()
+        empty = GraphDelta.from_arrays([], [], [], [], n_nodes=16,
+                                       k_pad=4, j_pad=2)
+        out = _assert_tick_matches(states,
+                                   stack_deltas([empty, empty]),
+                                   exact_smax=True, label="empty")
+        # the dead stream keeps emitting finite zero scores
+        d, _ = stream_tick_fused(states, stack_deltas([empty, empty]))
+        assert float(d[0]) == 0.0
+        assert np.isfinite(np.asarray(d)).all()
+        assert float(out.q[0]) == 1.0
+
+    def test_graph_emptying_then_reviving(self):
+        """Deleting every edge snaps to the canonical empty state; a
+        join + first-edges delta revives it — both matching the
+        reference exactly."""
+        states = self._dead_live_states()
+        live = erdos_renyi(12, 0.3, seed=0, weighted=True)
+        w = np.asarray(live.weights)
+        iu, ju = np.nonzero(np.triu(w, 1))
+        kill = GraphDelta.from_arrays(
+            iu, ju, -w[iu, ju], w[iu, ju], n_nodes=12, n_pad=16,
+            k_pad=64, j_pad=2)
+        empty = GraphDelta.from_arrays([], [], [], [], n_nodes=16,
+                                       k_pad=64, j_pad=2)
+        after = _assert_tick_matches(states,
+                                     stack_deltas([empty, kill]),
+                                     exact_smax=True, label="emptying")
+        assert float(after.s_total[1]) == 0.0
+        assert float(after.q[1]) == 1.0
+        revive = GraphDelta.from_arrays(
+            [0], [1], [2.0], [0.0], n_nodes=16, k_pad=4,
+            join=[0, 1], j_pad=2)
+        empty4 = GraphDelta.from_arrays([], [], [], [], n_nodes=16,
+                                        k_pad=4, j_pad=2)
+        out = _assert_tick_matches(after,
+                                   stack_deltas([revive, empty4]),
+                                   exact_smax=True, label="revive")
+        # revive-from-empty is exact: c' = 1/ΔS, so H̃ matches a fresh
+        # two-node graph bit-for-bit up to f32
+        ref = finger_state(DenseGraph.from_weights(
+            2.0 * jnp.eye(2)[::-1], n_pad=16))
+        got = jax.tree_util.tree_map(lambda x: x[0], out)
+        assert abs(float(got.h_tilde()) - float(ref.h_tilde())) < 1e-6
+
+    def test_stray_edges_into_padding_are_gated(self):
+        """Delta edges pointing at inactive node slots contribute
+        exactly zero — the in-kernel gate matches `update_state`'s."""
+        g = erdos_renyi(30, 0.2, seed=2, weighted=True).pad_to(48)
+        states = StreamEngine.init_states([g.pad_to(48)], n_pad=48)
+        stray = GraphDelta.from_arrays(
+            [0, 2, 40], [5, 9, 45], [0.5, -0.1, 9.9], [0.0, 0.3, 0.0],
+            n_nodes=48, k_pad=4)
+        clean = GraphDelta.from_arrays(
+            [0, 2], [5, 9], [0.5, -0.1], [0.0, 0.3], n_nodes=48,
+            k_pad=4)
+        d_s, st_s = stream_tick_fused(states, stack_deltas([stray]))
+        d_c, st_c = stream_tick_fused(states, stack_deltas([clean]))
+        assert abs(float(d_s[0]) - float(d_c[0])) < 1e-6
+        assert abs(float(st_s.q[0]) - float(st_c.q[0])) < 1e-6
+
+    def test_duplicate_edge_slots_share_a_segment(self):
+        """The same (i, j) pair in two delta slots must sum into one
+        node segment, exactly as the reference's segment sum does."""
+        g = erdos_renyi(10, 0.4, seed=4, weighted=True)
+        states = StreamEngine.init_states([g], n_pad=16)
+        w01 = float(np.asarray(g.weights)[0, 1])
+        dup = GraphDelta.from_arrays(
+            [0, 0], [1, 1], [0.3, 0.2], [w01, w01 + 0.3], n_nodes=10,
+            n_pad=16, k_pad=4)
+        _assert_tick_matches(states, stack_deltas([dup]),
+                             exact_smax=True, label="dup-edge")
+
+
+class TestDispatch:
+    def test_vmem_guard_routes_oversized_tiles_to_reference(self):
+        assert fits_fused_tick(128, 16, 2)
+        assert not fits_fused_tick(128, 4096, 2)  # endpoint ceiling
+        assert not fits_fused_tick(200_000, 16, 2)  # one-hot blowup
+        g = erdos_renyi(12, 0.3, seed=0, weighted=True)
+        states = StreamEngine.init_states([g], n_pad=12)
+        d = GraphDelta.from_arrays(
+            [0], [1], [0.4], [float(np.asarray(g.weights)[0, 1])],
+            n_nodes=12, k_pad=4096)  # > MAX_ENDPOINTS after padding
+        d_f, _ = stream_tick_fused(states, stack_deltas([d]))
+        d_r, _ = stream_tick_ref(states, stack_deltas([d]))
+        np.testing.assert_allclose(np.asarray(d_f), np.asarray(d_r),
+                                   atol=1e-6)
+
+    def test_maskless_state_falls_back(self):
+        """A legacy mask-less stacked state routes to the vmapped path
+        (the kernel's gating needs the mask in the carried state)."""
+        graphs = [erdos_renyi(8, 0.3, seed=s, weighted=True)
+                  for s in range(2)]
+        states = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[finger_state(g) for g in graphs])
+        assert states.node_mask is None
+        d = stack_deltas([GraphDelta.from_arrays(
+            [0], [1], [0.3], [float(np.asarray(g.weights)[0, 1])],
+            n_nodes=8, k_pad=2) for g in graphs])
+        d_f, _ = stream_tick_fused(states, d)
+        d_r, _ = stream_tick_ref(states, d)
+        np.testing.assert_allclose(np.asarray(d_f), np.asarray(d_r),
+                                   atol=1e-6)
+
+    def test_larger_layout_delta_rejected_at_trace_time(self):
+        g = erdos_renyi(8, 0.3, seed=0, weighted=True)
+        states = StreamEngine.init_states([g], n_pad=8)
+        d = stack_deltas([GraphDelta.from_arrays(
+            [0], [9], [0.3], [0.0], n_nodes=12, k_pad=2)])
+        with pytest.raises(ValueError, match="migrate the state first"):
+            stream_tick_fused(states, d)
+
+
+class TestEngineWiring:
+    def _mixed(self, b=6, n_pad=32, k_pad=4, seed=0):
+        rng = np.random.default_rng(seed)
+        ns = [int(n) for n in np.linspace(8, n_pad, b).astype(int)]
+        graphs = [erdos_renyi(n, 0.2, seed=s, weighted=True)
+                  for s, n in enumerate(ns)]
+        states = StreamEngine.init_states(graphs, n_pad=n_pad)
+
+        def mk():
+            ds = []
+            for g in graphs:
+                n = g.n_nodes
+                i = int(rng.integers(0, n - 1))
+                w_old = float(np.asarray(g.weights)[i, i + 1])
+                ds.append(GraphDelta.from_arrays(
+                    [i], [i + 1], [0.4 if w_old == 0 else -w_old],
+                    [w_old], n_nodes=n, n_pad=n_pad, k_pad=k_pad))
+            return stack_deltas(ds)
+
+        return states, mk
+
+    def test_fused_engine_compiles_once_across_mixed_n(self):
+        """The jit-cache assertion: mixed-n batches (distinct masks,
+        same shapes) reuse ONE compiled fused tick."""
+        states, mk = self._mixed()
+        engine = StreamEngine(method="fused_tick")
+        for _ in range(3):
+            dists, states = engine.tick(states, mk())
+        assert engine._tick._cache_size() == 1, \
+            "fused tick recompiled across mixed-n batches"
+        assert np.isfinite(np.asarray(dists)).all()
+
+    def test_fused_engine_matches_dense_engine(self):
+        states_f, mk = self._mixed(seed=3)
+        states_d = jax.tree_util.tree_map(jnp.copy, states_f)
+        fused = StreamEngine(method="fused_tick")
+        dense = StreamEngine(method="dense")
+        for _ in range(3):
+            d = mk()
+            df, states_f = fused.tick(states_f, d)
+            dd, states_d = dense.tick(states_d, d)
+            np.testing.assert_allclose(np.asarray(df), np.asarray(dd),
+                                       atol=1e-5)
+
+    def test_fused_engine_run_scans_the_fused_body(self):
+        states, mk = self._mixed(seed=5)
+        seq = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[mk() for _ in range(3)])
+        fused = StreamEngine(method="fused_tick")
+        dists, final = fused.run(states, seq)
+        assert dists.shape == (3, 6)
+        assert np.isfinite(np.asarray(dists)).all()
+
+    def test_update_state_fused_tick_method(self):
+        """`method="fused_tick"` on the per-stream entry points routes
+        through the fused delta-stats kernel with identical numbers."""
+        g = erdos_renyi(20, 0.2, seed=5, weighted=True).pad_to(32)
+        state = finger_state(g)
+        d = GraphDelta.from_arrays(
+            [20, 20], [3, 7], [0.8, 0.6], [0.0, 0.0], n_nodes=32,
+            k_pad=4, join=[20], j_pad=2)
+        ref = update_state(state, d, exact_smax=True, method="dense")
+        got = update_state(state, d, exact_smax=True,
+                           method="fused_tick")
+        for field in ("q", "s_total", "s_max"):
+            assert abs(float(getattr(got, field))
+                       - float(getattr(ref, field))) < 1e-5, field
+        r_ref, _ = jsdist_incremental(state, d, method="dense")
+        r_got, _ = jsdist_incremental(state, d, method="fused_tick")
+        assert abs(float(r_got) - float(r_ref)) < 1e-5
+
+    def test_unknown_method_still_raises(self):
+        g = erdos_renyi(8, 0.3, seed=0, weighted=True)
+        d = GraphDelta.from_arrays([0], [1], [0.2], [0.0], n_nodes=8)
+        with pytest.raises(ValueError, match="unknown delta-stats"):
+            update_state(finger_state(g), d, method="bogus")
+
+
+class TestPreparation:
+    def test_lane_alignment_and_vmem_estimate(self):
+        assert stops._ceil_to(1, 128) == 128
+        assert stops._ceil_to(128, 128) == 128
+        assert stops._ceil_to(129, 128) == 256
+        # the estimate is monotone in every tile dimension
+        assert stops.fused_tick_vmem_bytes(256, 64, 2) \
+            <= stops.fused_tick_vmem_bytes(512, 64, 2)
+        assert stops.fused_tick_vmem_bytes(256, 64, 2) \
+            <= stops.fused_tick_vmem_bytes(256, 256, 2)
