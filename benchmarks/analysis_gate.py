@@ -1,0 +1,75 @@
+# Static-analysis gate as a benchmark suite: lint / audit / vmem /
+# sentinel, timed and emitted as CSV rows. Any unsuppressed violation
+# raises, which fails the harness (same contract as the parity suite).
+"""Run with::
+
+    PYTHONPATH=src python -m benchmarks.run --only analysis
+
+This is the CI entry point for `repro.analysis`: the full lint pass
+over ``src/``, the compiled-HLO plan audit (all three placements + the
+migration transforms), the Pallas VMEM static checker, and the
+zero-compile migration-chain sentinel. The CLI form
+(``python -m repro.analysis``) prints the same checks with
+per-violation detail and a ``--json`` report.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+
+
+class AnalysisGateError(AssertionError):
+    """An analysis check reported unsuppressed violations."""
+
+
+def _timed(name: str, fn):
+    t0 = time.perf_counter()
+    ok, detail = fn()
+    emit(f"analysis/{name}", time.perf_counter() - t0, detail)
+    if not ok:
+        raise AnalysisGateError(f"analysis check '{name}' failed: {detail}")
+
+
+def run() -> None:
+    from repro.analysis.hlo_audit import audit_repo
+    from repro.analysis.lint import lint_tree
+    from repro.analysis.sanitize import CompileBudgetExceeded
+    from repro.analysis.sentinel import run_migration_chain
+    from repro.analysis.vmem import collect_footprints
+
+    src_root = Path(__file__).resolve().parents[1] / "src"
+
+    def _lint():
+        report = lint_tree(src_root)
+        bad = report.unsuppressed
+        return not bad, (f"{len(bad)} unsuppressed violation(s)" if bad
+                         else f"0 violations ({len(report.violations)} "
+                              "suppressed)")
+
+    def _audit():
+        report = audit_repo()
+        return report.ok, (f"{len(report.violations)} violation(s)" if
+                           not report.ok else
+                           f"{len(report.targets)} targets clean")
+
+    def _vmem():
+        report = collect_footprints()
+        return report.ok, (f"{len(report.violations)} violation(s)" if
+                           not report.ok else
+                           f"{len(report.footprints)} launches within "
+                           f"{report.budget_bytes} B")
+
+    def _sentinel():
+        try:
+            result = run_migration_chain()
+        except CompileBudgetExceeded as exc:
+            return False, str(exc)
+        return result["ok"], (f"{result['generations']} generations at "
+                              f"{result['budget_per_phase']} compiles")
+
+    _timed("lint", _lint)
+    _timed("hlo_audit", _audit)
+    _timed("vmem", _vmem)
+    _timed("sentinel", _sentinel)

@@ -5,13 +5,15 @@ The kernel packages dispatch to interpret mode off-TPU, so this suite
 exercises the exact code path CPU CI serves — a kernel/ref drift (a
 changed reduction, a stale gating rule, a broken BlockSpec) fails the
 harness here instead of surfacing as a silent numerical skew on the
-first TPU run. One small-input check per kernel:
+first TPU run.
 
-- ``vnge_q``        : fused Lemma-1 statistics over dense W
-- ``bsr_spmv``      : block-sparse matvec
-- ``entropy_probe`` : attention-graph VNGE stats from logits
-- ``delta_stats``   : fused Theorem-2 sorted-endpoint reduction
-- ``stream_tick``   : the single-pass batched serving tick (megakernel)
+Kernel packages are auto-discovered via
+`repro.kernels.parity.discover_parity_checks`: every package under
+``src/repro/kernels/`` must ship a ``parity.py`` with
+``check_parity(record=None)``, so a new kernel can never silently skip
+CPU-CI parity coverage — a missing registration is a hard error naming
+the kernel (and the `repro.analysis.lint` ``kernel-package-triple``
+rule catches the same omission statically).
 
 Each check raises on mismatch (benchmarks/run.py turns that into a
 failed suite) and emits its interpret-path latency as the usual CSV —
@@ -21,131 +23,20 @@ structural only on CPU, not a timing proxy.
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.engine import StreamEngine, stack_deltas
-from repro.graphs.generators import erdos_renyi, random_geometric_community
-from repro.graphs.types import GraphDelta
-from repro.core.state import finger_state
-
-
-def _check(name: str, got, want, atol: float, rtol: float = 1e-5):
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               atol=atol, rtol=rtol,
-                               err_msg=f"{name}: interpret path "
-                                       "drifted from its jnp oracle")
-
-
-def _vnge_q() -> None:
-    from repro.kernels.vnge_q.ops import vnge_q_stats
-    from repro.kernels.vnge_q.ref import vnge_q_stats_ref
-
-    rng = np.random.default_rng(0)
-    w = rng.random((256, 256)).astype(np.float32)
-    w = np.triu(w, 1)
-    w = jnp.asarray(w + w.T)
-    _check("vnge_q", vnge_q_stats(w, use_pallas=True),
-           vnge_q_stats_ref(w), atol=1e-4)
-    emit("kernels_interpret/vnge_q_n256",
-         time_fn(lambda: jax.block_until_ready(
-             vnge_q_stats(w, use_pallas=True)), iters=3), "parity OK")
-
-
-def _bsr_spmv() -> None:
-    from repro.kernels.bsr_spmv.ops import bsr_matvec, dense_to_bsr
-    from repro.kernels.bsr_spmv.ref import bsr_matvec_ref
-
-    rng = np.random.default_rng(1)
-    g = random_geometric_community(256, 4, 0.3, 0.01, seed=2)
-    m = dense_to_bsr(np.asarray(g.weights), b=128)
-    x = jnp.asarray(rng.random(m.n).astype(np.float32))
-    _check("bsr_spmv", bsr_matvec(m, x, use_pallas=True),
-           bsr_matvec_ref(m, x), atol=1e-4)
-    emit("kernels_interpret/bsr_spmv_n256",
-         time_fn(lambda: jax.block_until_ready(
-             bsr_matvec(m, x, use_pallas=True)), iters=3), "parity OK")
-
-
-def _entropy_probe() -> None:
-    from repro.kernels.entropy_probe.ops import attention_graph_stats
-    from repro.kernels.entropy_probe.ref import attention_graph_stats_ref
-
-    rng = np.random.default_rng(2)
-    logits = jnp.asarray(
-        rng.normal(0, 1.5, (2, 128, 128)).astype(np.float32))
-    _check("entropy_probe", attention_graph_stats(logits),
-           attention_graph_stats_ref(logits), atol=1e-4, rtol=5e-4)
-    emit("kernels_interpret/entropy_probe_bh2_s128",
-         time_fn(lambda: jax.block_until_ready(
-             attention_graph_stats(logits)), iters=3), "parity OK")
-
-
-def _delta_stats() -> None:
-    from repro.kernels.delta_stats.ops import delta_stats_fused
-
-    rng = np.random.default_rng(3)
-    g = erdos_renyi(48, 0.2, seed=3, weighted=True).pad_to(64)
-    state = finger_state(g)
-    iu, ju = np.triu_indices(48, k=1)
-    pick = rng.choice(len(iu), size=12, replace=False)
-    ii, jj = iu[pick], ju[pick]
-    w_old = np.asarray(g.weights)[ii, jj]
-    dw = np.where(w_old > 0, -w_old, 0.6).astype(np.float32)
-    delta = GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=64,
-                                   k_pad=16)
-    got = jnp.stack(delta_stats_fused(state, delta, use_pallas=True))
-    want = jnp.stack(delta_stats_fused(state, delta, use_pallas=False))
-    _check("delta_stats", got, want, atol=1e-5)
-    emit("kernels_interpret/delta_stats_k16",
-         time_fn(lambda: jax.block_until_ready(jnp.stack(
-             delta_stats_fused(state, delta, use_pallas=True))),
-             iters=3), "parity OK")
-
-
-def _stream_tick() -> None:
-    from repro.kernels.stream_tick.ops import stream_tick_fused
-    from repro.kernels.stream_tick.ref import stream_tick_ref
-
-    rng = np.random.default_rng(4)
-    n_pad, k_pad, b = 32, 8, 8
-    ns = [int(n) for n in np.linspace(10, n_pad, b).astype(int)]
-    graphs = [erdos_renyi(n, 0.2, seed=s, weighted=True)
-              for s, n in enumerate(ns)]
-    states = StreamEngine.init_states(graphs, n_pad=n_pad)
-    ds = []
-    for g in graphs:
-        n = g.n_nodes
-        iu, ju = np.triu_indices(n, k=1)
-        pick = rng.choice(len(iu), size=4, replace=False)
-        ii, jj = iu[pick], ju[pick]
-        w_old = np.asarray(g.weights)[ii, jj]
-        dw = np.where(w_old > 0, -w_old, 0.8).astype(np.float32)
-        ds.append(GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n,
-                                         n_pad=n_pad, k_pad=k_pad,
-                                         join=[n - 1], j_pad=2))
-    stacked = stack_deltas(ds)
-    d_got, s_got = stream_tick_fused(states, stacked, exact_smax=True)
-    d_want, s_want = stream_tick_ref(states, stacked, exact_smax=True)
-    _check("stream_tick dist", d_got, d_want, atol=1e-5)
-    for field in ("q", "s_total", "s_max", "strengths", "node_mask"):
-        _check(f"stream_tick {field}", getattr(s_got, field),
-               getattr(s_want, field), atol=1e-5)
-    emit("kernels_interpret/stream_tick_b8_n32",
-         time_fn(lambda: jax.block_until_ready(
-             stream_tick_fused(states, stacked, exact_smax=True)[0]),
-             iters=3), "parity OK")
+from repro.kernels.parity import discover_parity_checks
 
 
 def run() -> None:
-    _vnge_q()
-    _bsr_spmv()
-    _entropy_probe()
-    _delta_stats()
-    _stream_tick()
+    def record(metric: str, thunk) -> None:
+        emit(f"kernels_interpret/{metric}",
+             time_fn(lambda: jax.block_until_ready(thunk()), iters=3),
+             "parity OK")
+
+    for name, check in discover_parity_checks().items():
+        check(record)
 
 
 if __name__ == "__main__":

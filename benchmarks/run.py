@@ -12,6 +12,7 @@ import time
 import traceback
 
 from benchmarks import (
+    analysis_gate,
     fig1_degree,
     fig2_size,
     fig4_bifurcation,
@@ -38,6 +39,10 @@ SUITES = {
     # Serving-path suite; also writes the machine-readable
     # BENCH_streams.json tracked across PRs.
     "streams": streams_bench.run,
+    # Static-analysis gate (lint / HLO audit / VMEM / compile-budget
+    # sentinel); any unsuppressed violation fails the harness. Same
+    # checks as `python -m repro.analysis`.
+    "analysis": analysis_gate.run,
 }
 
 # Suites that publish a machine-readable artifact get it schema-checked

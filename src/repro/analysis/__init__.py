@@ -1,0 +1,35 @@
+"""Static + runtime analysis gates for the FINGER serving stack.
+
+Four layers, one CLI (``python -m repro.analysis``):
+
+- `repro.analysis.hlo_audit` — audits the compiled HLO of every
+  `ExecutionPlan` tick and migration transform (all three placements)
+  for forbidden ops: host transfers inside the tick, missing
+  input-output buffer donation on the stacked state, unexpected
+  collectives per placement, dtype-upcast blowups.
+- `repro.analysis.sanitize` — runtime sanitizers as reusable context
+  managers: compile-count budgets (a jit-cache-miss sentinel),
+  `jax.transfer_guard` enforcement, and a debug-NaN tick mode.
+- `repro.analysis.vmem` — static VMEM checker: derives per-grid-step
+  footprints for every Pallas kernel from its actual BlockSpecs and
+  cross-validates the hand-maintained guards in ``kernels/*/ops.py``
+  against the shared `repro.kernels.dispatch` budget.
+- `repro.analysis.lint` — an AST linter over ``src/`` with named,
+  suppressible rules for this repo's recurring JAX hazard classes.
+
+The repo ships clean: CI runs the whole stack via the ``analysis``
+suite in ``benchmarks/run.py`` and fails on any unsuppressed violation.
+"""
+from repro.analysis.sanitize import (
+    CompileBudgetExceeded,
+    compile_budget,
+    debug_nan_checks,
+    no_transfers,
+)
+
+__all__ = [
+    "CompileBudgetExceeded",
+    "compile_budget",
+    "debug_nan_checks",
+    "no_transfers",
+]

@@ -1,0 +1,145 @@
+"""``python -m repro.analysis`` — the repo's static-analysis gate.
+
+Subcommands (default: run all four and fail on any violation):
+
+- ``lint``     — AST hazard rules over ``src/`` (see
+  `repro.analysis.lint` for the rule list and the inline
+  ``# lint: disable=<rule>`` pragma).
+- ``audit``    — compile every placement's tick + the migration
+  transforms and audit the optimized HLO (host transfers, donation,
+  collectives, dtype upcasts).
+- ``vmem``     — derive every Pallas kernel's per-grid-step footprint
+  from its BlockSpecs and validate it against the shared VMEM budget.
+- ``sentinel`` — run the mixed-n migration-chain serving scenario
+  under a zero-compile budget (the pause-free-migration proof).
+
+``--json`` prints the machine-readable report; the exit code is 0 iff
+every selected check passed. ``--devices N`` forces N host CPU devices
+(before the JAX backend initializes) so the audit's collective checks
+see a real multi-device mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def _src_root() -> Path:
+    # .../src/repro/analysis/__main__.py → .../src
+    return Path(__file__).resolve().parents[2]
+
+
+def _run_lint(json_mode: bool) -> tuple:
+    from repro.analysis.lint import lint_tree
+
+    report = lint_tree(_src_root())
+    if not json_mode:
+        for v in report.violations:
+            print(f"  {v}")
+        n = len(report.unsuppressed)
+        print(f"lint: {'OK' if report.ok else 'FAIL'} "
+              f"({n} unsuppressed violation(s), "
+              f"{len(report.violations) - n} suppressed)")
+    return report.ok, report.to_dict()
+
+
+def _run_audit(json_mode: bool) -> tuple:
+    from repro.analysis.hlo_audit import audit_repo
+
+    report = audit_repo()
+    if not json_mode:
+        for t in report.targets:
+            mark = "OK " if t.ok else "FAIL"
+            print(f"  [{mark}] {t.target}: donated="
+                  f"{t.donated_params or '-'} "
+                  f"host_transfers={len(t.host_transfers)} "
+                  f"upcasts={len(t.upcasts)}")
+            for v in t.violations:
+                print(f"         {v.rule}: {v.message}")
+        print(f"audit: {'OK' if report.ok else 'FAIL'} "
+              f"({len(report.violations)} violation(s) across "
+              f"{len(report.targets)} compiled targets)")
+    return report.ok, report.to_dict()
+
+
+def _run_vmem(json_mode: bool) -> tuple:
+    from repro.analysis.vmem import collect_footprints
+
+    report = collect_footprints()
+    if not json_mode:
+        for f in report.footprints:
+            print(f"  {f.package}.{f.kernel_name}: grid={f.grid} "
+                  f"step={f.step_bytes} B")
+        for v in report.violations:
+            print(f"  {v.rule} [{v.kernel}]: {v.message}")
+        print(f"vmem: {'OK' if report.ok else 'FAIL'} "
+              f"(budget {report.budget_bytes} B, "
+              f"{len(report.footprints)} launches)")
+    return report.ok, report.to_dict()
+
+
+def _run_sentinel(json_mode: bool) -> tuple:
+    from repro.analysis.sanitize import CompileBudgetExceeded
+    from repro.analysis.sentinel import run_migration_chain
+
+    try:
+        result = run_migration_chain()
+    except CompileBudgetExceeded as exc:
+        result = {"ok": False, "error": str(exc)}
+    if not json_mode:
+        if result["ok"]:
+            print(f"  phases: {result['phases']}")
+        else:
+            print(f"  {result['error']}")
+        print(f"sentinel: {'OK' if result['ok'] else 'FAIL'}")
+    return result["ok"], result
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-analysis gate: lint / audit / vmem / "
+                    "sentinel")
+    parser.add_argument("checks", nargs="*",
+                        choices=["lint", "audit", "vmem", "sentinel",
+                                 []],
+                        help="checks to run (default: all)")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable report on stdout")
+    parser.add_argument("--devices", type=int, default=None,
+                        help="force N host CPU devices (collective "
+                             "audit needs > 1)")
+    args = parser.parse_args(argv)
+
+    if args.devices:
+        # must land before the first jax operation initializes the
+        # backend (importing jax alone does not)
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+
+    runners = {"lint": _run_lint, "audit": _run_audit,
+               "vmem": _run_vmem, "sentinel": _run_sentinel}
+    selected = args.checks or list(runners)
+
+    results = {}
+    all_ok = True
+    for name in selected:
+        ok, payload = runners[name](args.json)
+        results[name] = payload
+        all_ok = all_ok and ok
+
+    if args.json:
+        print(json.dumps({"ok": all_ok, "checks": results}, indent=2))
+    else:
+        print(f"analysis: {'OK' if all_ok else 'FAIL'} "
+              f"({', '.join(selected)})")
+    return 0 if all_ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,256 @@
+"""HLO plan auditor: forbidden-op checks on the compiled serving paths.
+
+Lowers and compiles every `ExecutionPlan` tick (all three placements —
+multipod via the same 1×N host-mesh trick as the serving smoke tests)
+and every `serving.migrate` device-side transform (grow / compact /
+truncate), then audits the *optimized* HLO for the invariants the
+serving stack's performance claims rest on:
+
+- ``host-transfer-in-tick`` — no infeed/outfeed/send/recv or
+  host-memory-space copies anywhere in a compiled hot path;
+- ``missing-donation`` — the stacked `FingerState` buffers must be
+  donated into the tick (``input_output_alias`` on every state leaf):
+  an undonated tick doubles peak HBM for the state;
+- ``unexpected-collective`` — the tick is per-stream data-parallel in
+  every placement; a collective inside it means a resharding snuck into
+  the hot path (cross-shard reductions belong in the top-k query, not
+  the tick);
+- ``dtype-upcast`` — no f64/c128 anywhere (an accidental weak-type
+  promotion can silently double memory traffic).
+
+Note on collectives: on a single-device mesh XLA elides cross-device
+ops, so the collective check is only load-bearing when the host exposes
+multiple devices (the CLI sets ``--xla_force_host_platform_device_count``
+for exactly this reason; under the default test runner it's a trivially
+green check, documented as such).
+
+The report is machine-readable (`AuditReport.to_dict`); the ``analysis``
+benchmark suite and `python -m repro.analysis audit` fail on any
+violation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import FingerState
+from repro.graphs.layout import NodeLayout
+from repro.graphs.types import GraphDelta
+from repro.launch import hlo_analysis
+from repro.serving.config import ServiceConfig, TopKSpec
+
+PLACEMENTS = ("local", "sharded", "multipod")
+
+
+@dataclasses.dataclass
+class AuditViolation:
+    rule: str
+    target: str
+    message: str
+
+    def to_dict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TargetAudit:
+    """Audit result for one compiled function."""
+    target: str
+    placement: Optional[str]
+    donated_params: List[int]
+    n_state_leaves: int
+    host_transfers: List[Tuple[str, str, str]]
+    collectives: Dict[str, float]
+    upcasts: List[Tuple[str, str, str]]
+    violations: List[AuditViolation]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "target": self.target, "placement": self.placement,
+            "ok": self.ok,
+            "donated_params": self.donated_params,
+            "n_state_leaves": self.n_state_leaves,
+            "host_transfers": [list(h) for h in self.host_transfers],
+            "collectives": {k: v for k, v in self.collectives.items()
+                            if v},
+            "upcasts": [list(u) for u in self.upcasts],
+            "violations": [v.to_dict() for v in self.violations],
+        }
+
+
+@dataclasses.dataclass
+class AuditReport:
+    targets: List[TargetAudit]
+
+    @property
+    def violations(self) -> List[AuditViolation]:
+        return [v for t in self.targets for v in t.violations]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"ok": self.ok,
+                "targets": [t.to_dict() for t in self.targets]}
+
+
+def mesh_for_placement(placement: str):
+    """The 1×N host-mesh trick from the serving smoke tests: multipod
+    runs with a size-1 pod axis, which still exercises the
+    ("pod", "data") shard_map code path on one host."""
+    if placement == "local":
+        return None
+    if placement == "sharded":
+        return jax.make_mesh((jax.device_count(),), ("data",))
+    return jax.make_mesh((1, jax.device_count()), ("pod", "data"))
+
+
+def _dummy_tick_args(config: ServiceConfig,
+                     layout: NodeLayout) -> Tuple[FingerState, GraphDelta]:
+    """Zero-filled (states, deltas) of the plan's declared shapes —
+    the same construction `ExecutionPlan.warm_tick` compiles with."""
+    b, n, k, j = config.batch_size, layout.n_pad, config.k_pad, \
+        config.j_pad
+    f32, i32 = jnp.float32, jnp.int32
+    states = FingerState(
+        q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
+        s_max=jnp.zeros((b,), f32),
+        strengths=jnp.zeros((b, n), f32),
+        node_mask=jnp.zeros((b, n), f32), layout=layout)
+    deltas = GraphDelta(
+        senders=jnp.zeros((b, k), i32),
+        receivers=jnp.zeros((b, k), i32),
+        dw=jnp.zeros((b, k), f32), w_old=jnp.zeros((b, k), f32),
+        mask=jnp.zeros((b, k), f32), n_nodes=n,
+        node_ids=None if j is None else jnp.zeros((b, j), i32),
+        node_flag=None if j is None else jnp.zeros((b, j), f32))
+    return states, deltas
+
+
+def _audit_text(target: str, placement: Optional[str], text: str,
+                n_state_leaves: int,
+                require_donation: bool) -> TargetAudit:
+    comps = hlo_analysis.parse_hlo(text)
+    aliases = hlo_analysis.parse_input_output_aliases(text)
+    donated = sorted({p for p in aliases.values()})
+    transfers = hlo_analysis.host_transfer_ops(comps)
+    upcasts = hlo_analysis.ops_with_dtypes(comps)
+    stats = hlo_analysis.analyze(text)
+    coll = stats.get("collectives", {})
+
+    violations: List[AuditViolation] = []
+    for cname, opname, reason in transfers:
+        violations.append(AuditViolation(
+            "host-transfer-in-tick", target,
+            f"{reason} ({cname}/{opname}) — the compiled hot path "
+            "must stay on device"))
+    if require_donation:
+        missing = [i for i in range(n_state_leaves) if i not in donated]
+        if missing:
+            violations.append(AuditViolation(
+                "missing-donation", target,
+                f"state leaves at parameter indices {missing} are not "
+                "donated (no input_output_alias) — the tick would keep "
+                "two live copies of the stacked state in HBM; jit the "
+                "tick with donate_argnums=(0,)"))
+    for name, v in coll.items():
+        if v:
+            violations.append(AuditViolation(
+                "unexpected-collective", target,
+                f"'{name}' ({v:.0f} B) inside the compiled tick — the "
+                "tick is per-stream data-parallel; collectives belong "
+                "in the query path"))
+    for cname, opname, dt in upcasts:
+        violations.append(AuditViolation(
+            "dtype-upcast", target,
+            f"op {cname}/{opname} produces {dt} — the serving stack "
+            "is f32/i32 end to end; check for a weak-type promotion"))
+
+    return TargetAudit(
+        target=target, placement=placement,
+        donated_params=donated, n_state_leaves=n_state_leaves,
+        host_transfers=transfers, collectives=dict(coll),
+        upcasts=upcasts, violations=violations)
+
+
+def audit_plan_tick(config: ServiceConfig, mesh=None) -> TargetAudit:
+    """Compile one placement's tick on dummy shapes and audit its HLO."""
+    from repro.serving.plans import build_plan
+
+    plan = build_plan(config, mesh)
+    layout = NodeLayout(n_pad=config.n_pad, generation=0)
+    states, deltas = _dummy_tick_args(config, layout)
+    tick = plan.engine._tick if config.placement == "local" \
+        else plan._tick
+    text = tick.lower(states, deltas).compile().as_text()
+    n_leaves = len(jax.tree_util.tree_leaves(states))
+    return _audit_text(f"tick[{config.placement}]", config.placement,
+                       text, n_leaves, require_donation=True)
+
+
+def audit_migrations(n_pad: int = 16, batch_size: int = 4) -> List[TargetAudit]:
+    """Audit the three device-side migration transforms (grow /
+    compact / truncate). Donation is not required here: every leaf
+    changes shape across a migration, so XLA could never alias the
+    buffers (see the note in `serving.migrate._grow_jit`)."""
+    from repro.serving import migrate
+
+    small = NodeLayout(n_pad=n_pad, generation=0)
+    big = NodeLayout(n_pad=2 * n_pad, generation=1)
+    b, f32 = batch_size, jnp.float32
+    states_small = FingerState(
+        q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
+        s_max=jnp.zeros((b,), f32),
+        strengths=jnp.zeros((b, n_pad), f32),
+        node_mask=jnp.zeros((b, n_pad), f32), layout=small)
+    states_big = FingerState(
+        q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
+        s_max=jnp.zeros((b,), f32),
+        strengths=jnp.zeros((b, 2 * n_pad), f32),
+        node_mask=jnp.zeros((b, 2 * n_pad), f32), layout=big)
+    n_leaves = len(jax.tree_util.tree_leaves(states_small))
+
+    targets = []
+    for name, fn, args in (
+            ("migrate.grow", migrate._grow_jit(None),
+             (states_small,), ),
+            ("migrate.compact", migrate._compact_auto_jit(None),
+             (states_big,), ),
+            ("migrate.truncate", migrate._truncate_jit(None),
+             (states_big,), ),
+    ):
+        new_layout = big if name == "migrate.grow" else small
+        text = fn.lower(*args, new_layout=new_layout) \
+            .compile().as_text()
+        targets.append(_audit_text(name, None, text, n_leaves,
+                                   require_donation=False))
+    return targets
+
+
+def audit_repo(batch_size: Optional[int] = None, n_pad: int = 16,
+               k_pad: int = 3) -> AuditReport:
+    """The full audit: every placement's tick + every migration
+    transform, on small dummy shapes (the checks are structural — the
+    compiled program's op mix doesn't depend on the sizes).
+
+    ``batch_size`` defaults to two streams per device so the sharded
+    placements validate on any forced device count."""
+    if batch_size is None:
+        batch_size = max(4, 2 * jax.device_count())
+    targets: List[TargetAudit] = []
+    for placement in PLACEMENTS:
+        config = ServiceConfig(
+            batch_size=batch_size, n_pad=n_pad, k_pad=k_pad,
+            placement=placement, topk=TopKSpec(k=2))
+        mesh = mesh_for_placement(placement)
+        targets.append(audit_plan_tick(config, mesh))
+    targets.extend(audit_migrations())
+    return AuditReport(targets)

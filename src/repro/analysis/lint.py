@@ -1,0 +1,497 @@
+"""AST lint pass: named, suppressible rules for recurring JAX hazards.
+
+Every rule encodes a bug class this repo has actually shipped (and
+fixed by hand in PRs 1–5); the linter makes the fix permanent:
+
+- ``jit-static-unhashable`` — a ``static_argnames`` entry that names a
+  missing parameter, or a static parameter whose default is an
+  unhashable value (list/dict/set/array): both fragment or break the
+  jit cache at call time.
+- ``traced-python-branch`` — an ``if``/``while`` test on a traced
+  argument inside a jit-decorated function: trace-time branching on
+  runtime values raises `TracerBoolConversionError` (or silently bakes
+  in one branch). Shape/dtype/static-field attribute access,
+  ``is None`` checks and ``isinstance`` are exempt.
+- ``numpy-handoff-no-copy`` — a numpy buffer handed to
+  ``jnp.asarray``/``jnp.array``/``jnp.stack``/``jax.device_put`` and
+  then mutated in place in the same scope (the PR-1 race class: the
+  async dispatch may still be reading the aliased host buffer). Hand
+  off a ``.copy()`` instead.
+- ``frozen-dataclass-mutable-default`` — a mutable default on a frozen
+  config dataclass field (shared-state hazard; use
+  ``dataclasses.field(default_factory=...)``).
+- ``kernel-package-triple`` — a kernel package under
+  ``src/repro/kernels/`` missing its ``kernel.py`` / ``ref.py`` /
+  ``parity.py`` companions (the interpret-fallback/parity-registration
+  triple CPU CI depends on).
+
+Suppress a finding with an inline pragma on the flagged line:
+
+    x = risky_thing()  # lint: disable=numpy-handoff-no-copy
+
+(``disable=all`` silences every rule on that line.) Suppressed
+violations stay in the report flagged ``suppressed=True``; CI fails
+only on unsuppressed ones.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "jit-static-unhashable":
+        "static_argnames entry missing from the signature, or a static "
+        "parameter with an unhashable default",
+    "traced-python-branch":
+        "Python if/while on a traced argument inside a jit function",
+    "numpy-handoff-no-copy":
+        "numpy buffer handed to jax then mutated in place (async "
+        "dispatch may alias the host buffer)",
+    "frozen-dataclass-mutable-default":
+        "mutable default on a frozen dataclass field",
+    "kernel-package-triple":
+        "kernel package missing its kernel.py/ref.py/parity.py triple",
+}
+
+_PRAGMA = re.compile(r"#\s*lint:\s*disable=([\w,\-]+)")
+
+# attribute reads on a traced value that are static at trace time
+_SAFE_TRACED_ATTRS_HINT = "shape/dtype/ndim or a pytree static field"
+
+_MUTABLE_CALLS = {"list", "dict", "set", "bytearray"}
+_MUTABLE_ARRAY_ATTRS = {"array", "asarray", "zeros", "ones", "empty",
+                        "full", "arange"}
+_HANDOFF_FUNCS = {("jnp", "asarray"), ("jnp", "array"), ("jnp", "stack"),
+                  ("jax", "device_put"), ("jax.numpy", "asarray"),
+                  ("jax.numpy", "array"), ("jax.numpy", "stack")}
+
+
+@dataclasses.dataclass
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}]{tag} " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass
+class LintReport:
+    violations: List[LintViolation]
+
+    @property
+    def unsuppressed(self) -> List[LintViolation]:
+        return [v for v in self.violations if not v.suppressed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.unsuppressed
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"ok": self.ok,
+                "violations": [v.to_dict() for v in self.violations]}
+
+
+def _pragmas(source: str) -> Dict[int, Set[str]]:
+    """line → set of rule names disabled on that line ('all' wildcard)."""
+    out: Dict[int, Set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type == tokenize.COMMENT:
+                m = _PRAGMA.search(tok.string)
+                if m:
+                    out.setdefault(tok.start[0], set()).update(
+                        m.group(1).split(","))
+    except tokenize.TokenizeError:
+        pass
+    return out
+
+
+def _is_mutable_default(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in _MUTABLE_CALLS:
+            return True
+        if isinstance(fn, ast.Attribute) \
+                and fn.attr in _MUTABLE_ARRAY_ATTRS:
+            return True
+    return False
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _static_argnames(call: ast.Call) -> Optional[List[str]]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                names = []
+                for el in v.elts:
+                    if isinstance(el, ast.Constant) \
+                            and isinstance(el.value, str):
+                        names.append(el.value)
+                return names
+    return None
+
+
+def _jit_decoration(fn: ast.FunctionDef) -> Optional[Tuple[bool, List[str]]]:
+    """(is_jitted, static_names) if the function is jit-decorated."""
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        dotted = _dotted(target) or ""
+        if dotted in ("jax.jit", "jit"):
+            statics = _static_argnames(dec) or [] \
+                if isinstance(dec, ast.Call) else []
+            return True, statics
+        if dotted in ("functools.partial", "partial") \
+                and isinstance(dec, ast.Call) and dec.args:
+            inner = _dotted(dec.args[0]) or ""
+            if inner in ("jax.jit", "jit"):
+                return True, _static_argnames(dec) or []
+    return None
+
+
+def _all_params(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _param_defaults(fn: ast.FunctionDef) -> Dict[str, ast.expr]:
+    a = fn.args
+    out: Dict[str, ast.expr] = {}
+    pos = a.posonlyargs + a.args
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        out[p.arg] = d
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            out[p.arg] = d
+    return out
+
+
+class _Scope(ast.NodeVisitor):
+    """Per-function collector for the handoff/mutation rule."""
+
+    def __init__(self):
+        self.handoffs: List[Tuple[str, int]] = []   # (name, line)
+        self.mutations: List[Tuple[str, int]] = []  # (name, line)
+        self.rebinds: List[Tuple[str, int]] = []    # (name, line)
+        self.loop_spans: List[Tuple[int, int]] = []
+
+    def visit_For(self, node):
+        self.loop_spans.append((node.lineno, max(
+            n.lineno for n in ast.walk(node) if hasattr(n, "lineno"))))
+        self.generic_visit(node)
+
+    visit_While = visit_For
+
+    def visit_Call(self, node: ast.Call):
+        dotted = _dotted(node.func)
+        if dotted:
+            key = tuple(dotted.rsplit(".", 1)) if "." in dotted else None
+            if key in _HANDOFF_FUNCS:
+                for arg in node.args[:1]:
+                    for el in ([arg] if not isinstance(arg, (ast.List,
+                               ast.Tuple)) else list(arg.elts)):
+                        if isinstance(el, ast.Name):
+                            self.handoffs.append((el.id, node.lineno))
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Name):
+                self.mutations.append((tgt.value.id, tgt.lineno))
+            elif isinstance(tgt, ast.Name):
+                # plain rebinding: the old buffer is no longer aliased
+                # by this name
+                self.rebinds.append((tgt.id, node.lineno))
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        tgt = node.target
+        if isinstance(tgt, ast.Subscript) \
+                and isinstance(tgt.value, ast.Name):
+            self.mutations.append((tgt.value.id, tgt.lineno))
+        self.generic_visit(node)
+
+    # don't descend into nested function scopes
+    def visit_FunctionDef(self, node):
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _check_jit_rules(tree: ast.AST, path: str,
+                     out: List[LintViolation]) -> None:
+    module_fns = {n.name: n for n in ast.walk(tree)
+                  if isinstance(n, ast.FunctionDef)}
+
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, ast.FunctionDef)]:
+        jit = _jit_decoration(fn)
+        targets: List[Tuple[ast.FunctionDef, List[str], int]] = []
+        if jit is not None:
+            targets.append((fn, jit[1], fn.lineno))
+        if targets:
+            _check_jit_fn(targets, path, out)
+
+    # jax.jit(fn, static_argnames=...) call form — resolve fn if it's a
+    # Name bound to a function in the same module
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if (_dotted(node.func) or "") not in ("jax.jit", "jit"):
+            continue
+        statics = _static_argnames(node)
+        if statics is None or not node.args:
+            continue
+        ref = node.args[0]
+        if isinstance(ref, ast.Name) and ref.id in module_fns:
+            _check_jit_fn([(module_fns[ref.id], statics, node.lineno)],
+                          path, out)
+
+
+def _check_jit_fn(targets, path: str, out: List[LintViolation]) -> None:
+    for fn, statics, line in targets:
+        params = _all_params(fn)
+        defaults = _param_defaults(fn)
+        for name in statics:
+            if name not in params:
+                out.append(LintViolation(
+                    "jit-static-unhashable", path, line,
+                    f"static_argnames names '{name}' but "
+                    f"{fn.name}() has no such parameter — jit will "
+                    "raise at call time"))
+            elif name in defaults \
+                    and _is_mutable_default(defaults[name]):
+                out.append(LintViolation(
+                    "jit-static-unhashable", path, fn.lineno,
+                    f"static parameter '{name}' of {fn.name}() has an "
+                    "unhashable default — every call with the default "
+                    "raises (static args are cache keys and must "
+                    "hash)"))
+        _check_traced_branches(fn, statics, path, out)
+
+
+def _value_uses_traced(test: ast.expr, traced: Set[str]) -> Optional[str]:
+    """Name of a traced param used *by value* in a branch test, or
+    None. Attribute reads (x.shape, delta.n_nodes), `is None` checks
+    and isinstance() are static at trace time and exempt."""
+
+    def scan(node: ast.expr) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            return node.id if node.id in traced else None
+        if isinstance(node, ast.Attribute):
+            return None  # static field / shape-like access
+        if isinstance(node, ast.Call):
+            fname = _dotted(node.func) or ""
+            if fname in ("isinstance", "len", "callable", "hasattr",
+                         "getattr", "type"):
+                return None
+            hits = [scan(a) for a in node.args]
+            return next((h for h in hits if h), None)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in node.ops):
+                return None
+            hits = [scan(node.left)] + [scan(c) for c in
+                                        node.comparators]
+            return next((h for h in hits if h), None)
+        if isinstance(node, ast.BoolOp):
+            hits = [scan(v) for v in node.values]
+            return next((h for h in hits if h), None)
+        if isinstance(node, ast.UnaryOp):
+            return scan(node.operand)
+        if isinstance(node, ast.BinOp):
+            return scan(node.left) or scan(node.right)
+        if isinstance(node, ast.Subscript):
+            return None  # x.shape[0]-style lookups
+        return None
+
+    return scan(test)
+
+
+def _check_traced_branches(fn: ast.FunctionDef, statics: Sequence[str],
+                           path: str,
+                           out: List[LintViolation]) -> None:
+    traced = {p for p in _all_params(fn)
+              if p not in statics and p != "self"}
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            continue
+        if isinstance(node, (ast.If, ast.While)):
+            hit = _value_uses_traced(node.test, traced)
+            if hit:
+                out.append(LintViolation(
+                    "traced-python-branch", path, node.lineno,
+                    f"branch on traced argument '{hit}' inside jitted "
+                    f"{fn.name}() — trace-time Python control flow on "
+                    "a runtime value; use jnp.where/lax.cond, or mark "
+                    f"'{hit}' static (reads of {_SAFE_TRACED_ATTRS_HINT}"
+                    " are fine)"))
+
+
+def _check_numpy_handoff(tree: ast.AST, path: str,
+                         out: List[LintViolation]) -> None:
+    scopes: List[ast.AST] = [n for n in ast.walk(tree)
+                             if isinstance(n, (ast.FunctionDef,
+                                               ast.AsyncFunctionDef))]
+    for scope in scopes:
+        coll = _Scope()
+        for stmt in scope.body:
+            coll.visit(stmt)
+        if not coll.handoffs or not coll.mutations:
+            continue
+        in_loop = lambda line: any(a <= line <= b
+                                   for a, b in coll.loop_spans)
+
+        def rebound_between(name, lo, hi):
+            return any(rn == name and lo < rl <= hi
+                       for rn, rl in coll.rebinds)
+
+        def rebound_in_loop(name, line):
+            return any(rn == name and any(a <= rl <= b and a <= line <= b
+                                          for a, b in coll.loop_spans)
+                       for rn, rl in coll.rebinds)
+
+        for name, hline in coll.handoffs:
+            for mname, mline in coll.mutations:
+                if mname != name:
+                    continue
+                sequential = mline > hline \
+                    and not rebound_between(name, hline, mline)
+                looped = in_loop(hline) and in_loop(mline) \
+                    and not rebound_in_loop(name, hline)
+                if sequential or looped:
+                    out.append(LintViolation(
+                        "numpy-handoff-no-copy", path, hline,
+                        f"'{name}' is handed to jax here but mutated "
+                        f"in place at line {mline} — the async "
+                        "dispatch may still alias the host buffer "
+                        f"(hand off '{name}.copy()' instead)"))
+                    break
+
+
+def _check_frozen_dataclasses(tree: ast.AST, path: str,
+                              out: List[LintViolation]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        frozen = False
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) \
+                    and (_dotted(dec.func) or "") in (
+                        "dataclasses.dataclass", "dataclass"):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" \
+                            and isinstance(kw.value, ast.Constant) \
+                            and kw.value.value is True:
+                        frozen = True
+        if not frozen:
+            continue
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                    and _is_mutable_default(stmt.value):
+                field = stmt.target.id \
+                    if isinstance(stmt.target, ast.Name) else "?"
+                out.append(LintViolation(
+                    "frozen-dataclass-mutable-default", path,
+                    stmt.lineno,
+                    f"field '{field}' of frozen dataclass "
+                    f"{node.name} has a mutable default — shared "
+                    "across instances; use "
+                    "dataclasses.field(default_factory=...)"))
+
+
+def lint_source(source: str, path: str) -> List[LintViolation]:
+    """Run every AST rule over one file's source."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [LintViolation("syntax-error", path, exc.lineno or 1,
+                              f"could not parse: {exc.msg}")]
+    out: List[LintViolation] = []
+    _check_jit_rules(tree, path, out)
+    _check_numpy_handoff(tree, path, out)
+    _check_frozen_dataclasses(tree, path, out)
+
+    disabled = _pragmas(source)
+    for v in out:
+        rules = disabled.get(v.line, set())
+        if "all" in rules or v.rule in rules:
+            v.suppressed = True
+    return out
+
+
+def _check_kernel_triples(root: Path,
+                          out: List[LintViolation]) -> None:
+    kernels = root / "repro" / "kernels"
+    if not kernels.is_dir():
+        return
+    for child in sorted(kernels.iterdir()):
+        if not child.is_dir() or not (child / "ops.py").is_file():
+            continue
+        for required in ("kernel.py", "ref.py", "parity.py"):
+            if not (child / required).is_file():
+                out.append(LintViolation(
+                    "kernel-package-triple",
+                    str(child / "ops.py"), 1,
+                    f"kernel package '{child.name}' is missing "
+                    f"{required} — every kernel ships the kernel.py/"
+                    "ref.py/parity.py triple so CPU CI covers its "
+                    "interpret path"))
+
+
+def lint_paths(paths: Sequence[Path],
+               src_root: Optional[Path] = None) -> LintReport:
+    """Lint the given python files (plus the filesystem-layout rule
+    when ``src_root`` is given)."""
+    violations: List[LintViolation] = []
+    for p in paths:
+        violations.extend(lint_source(p.read_text(), str(p)))
+    if src_root is not None:
+        _check_kernel_triples(src_root, violations)
+    violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    return LintReport(violations)
+
+
+def lint_tree(src_root: Path) -> LintReport:
+    """Lint every .py under ``src_root`` (the repo's ``src/`` dir)."""
+    files = sorted(src_root.rglob("*.py"))
+    return lint_paths(files, src_root=src_root)

@@ -1,0 +1,117 @@
+"""Runtime sanitizers: compile-count budgets, transfer guards, NaN mode.
+
+Reusable context managers for the invariants the serving stack's perf
+claims rest on, replacing the ad-hoc assertions that used to live
+inline in the tests:
+
+- `compile_budget(n)` — a jit-cache-miss sentinel. Counts XLA backend
+  compiles while the block runs (via JAX's monitoring events) and
+  raises `CompileBudgetExceeded` if more than ``n`` happened — e.g.
+  "mixed-n ticks across a migration chain compile ≤ P plans".
+- `no_transfers()` — `jax.transfer_guard` enforcement: any implicit
+  host↔device transfer inside the block raises.
+- `debug_nan_checks()` — debug-NaN tick mode: jitted computations
+  re-run op-by-op on a NaN result and raise at the producing op.
+
+All three nest with each other and with user code arbitrarily.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Iterator, List, Optional
+
+import jax
+
+# One duration event per XLA backend compile (fires on every jit cache
+# miss that reaches the compiler; cache hits don't).
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompileBudgetExceeded(AssertionError):
+    """More backend compiles happened than the sentinel's budget."""
+
+
+@dataclasses.dataclass
+class CompileCount:
+    """Live view of the sentinel's counter (yielded by
+    `compile_budget`); ``count`` keeps updating inside the block."""
+    budget: Optional[int]
+    what: str = ""
+    count: int = 0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    def _bump(self) -> None:
+        with self._lock:
+            self.count += 1
+
+
+def _unregister_duration_listener(fn) -> None:
+    # jax.monitoring (0.4.x) has no public unregister; the private
+    # helper is stable across the pinned version.
+    from jax._src import monitoring as _m
+
+    _m._unregister_event_duration_listener_by_callback(fn)
+
+
+@contextlib.contextmanager
+def compile_budget(max_compiles: Optional[int],
+                   what: str = "") -> Iterator[CompileCount]:
+    """Assert at most ``max_compiles`` XLA backend compiles in-block.
+
+    ``max_compiles=None`` only counts (never raises) — useful for
+    calibrating a budget before pinning it. Counts *backend* compiles:
+    jit cache hits are free, and auxiliary one-off compiles (a first
+    `jnp.ones`, a host-side argsort) count too, so warm those up before
+    entering the block when the budget is tight.
+    """
+    counter = CompileCount(budget=max_compiles, what=what)
+
+    def _listener(event: str, duration: float, **kwargs) -> None:
+        if event == _COMPILE_EVENT:
+            counter._bump()
+
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+    try:
+        yield counter
+    finally:
+        _unregister_duration_listener(_listener)
+    if max_compiles is not None and counter.count > max_compiles:
+        label = f" ({what})" if what else ""
+        raise CompileBudgetExceeded(
+            f"compile budget exceeded{label}: {counter.count} backend "
+            f"compiles > budget {max_compiles} — a jit cache is "
+            "fragmenting (static-arg churn, layout-keyed retrace, or a "
+            "missing warm plan)")
+
+
+@contextlib.contextmanager
+def no_transfers(level: str = "disallow") -> Iterator[None]:
+    """Forbid implicit host↔device transfers inside the block.
+
+    Thin wrapper over ``jax.transfer_guard`` with the serving-stack
+    default of ``"disallow"`` (explicit `jax.device_put` / `np.asarray`
+    escapes still work — the guard catches *implicit* transfers only,
+    which is exactly the hot-path contract).
+    """
+    with jax.transfer_guard(level):
+        yield
+
+
+@contextlib.contextmanager
+def debug_nan_checks(enable: bool = True) -> Iterator[None]:
+    """Debug-NaN tick mode: NaN-producing jitted ops raise with the op
+    named, instead of the NaN surfacing ticks later in a score."""
+    with jax.debug_nans(enable):
+        yield
+
+
+def assert_compiles_at_most(fn, max_compiles: int, *args,
+                            what: str = "", **kwargs):
+    """One-shot form: run ``fn(*args, **kwargs)`` under a compile
+    budget; returns fn's result."""
+    with compile_budget(max_compiles, what=what or getattr(
+            fn, "__name__", "fn")):
+        return fn(*args, **kwargs)

@@ -1,0 +1,106 @@
+"""The jit-cache-miss sentinel scenario: a mixed-n migration chain.
+
+`run_migration_chain` drives a small local `FingerService` through the
+full serving lifecycle — mixed-n ticks, a warm `repad` grow, more
+ticks, a warm `compact` shrink, more ticks (two migration generations)
+— and proves, via `repro.analysis.sanitize.compile_budget`, that every
+tick and both migrations execute with **zero** XLA compiles outside the
+explicit warm-up calls. This is the mechanical form of the repo's
+pause-free-migration claim: all compilation happens in
+`warm_next_layouts` (serving idle time), never in the serving path.
+
+Run standalone via ``python -m repro.analysis sentinel`` or as part of
+the default ``python -m repro.analysis`` gate.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.analysis.sanitize import compile_budget
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.types import GraphDelta
+from repro.serving import FingerService, ServiceConfig, TopKSpec
+
+_B, _N_PAD, _K_PAD = 4, 16, 3
+_GROW_N_PAD = 32
+
+
+def _graphs():
+    # mixed logical sizes in one padded batch
+    return [erdos_renyi(8 + 2 * (s % 3), 0.3, seed=s, weighted=True)
+            for s in range(_B)]
+
+
+def _tick_deltas(graphs, n_pad: int, seed: int) -> List[GraphDelta]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for g in graphs:
+        n = g.n_nodes
+        i, j = sorted(rng.choice(n, 2, replace=False).tolist())
+        w_old = float(np.asarray(g.weights)[i, j])
+        out.append(GraphDelta.from_arrays(
+            [i], [j], [0.5 if w_old == 0 else -w_old], [w_old],
+            n_nodes=n, n_pad=n_pad, k_pad=_K_PAD))
+    return out
+
+
+def _run_ticks(svc: FingerService, graphs, n_pad: int, seeds) -> None:
+    for seed in seeds:
+        svc.ingest(_tick_deltas(graphs, n_pad, seed))
+        report = svc.poll()
+        assert report is not None
+
+
+def run_migration_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
+    """Run the chain; raises `CompileBudgetExceeded` on any compile in
+    a serving phase. Returns a report of per-phase compile counts."""
+    config = ServiceConfig(batch_size=_B, n_pad=_N_PAD, k_pad=_K_PAD,
+                           placement="local", ingestion="sync",
+                           topk=TopKSpec(k=2))
+    graphs = _graphs()
+    phases: Dict[str, int] = {}
+
+    with FingerService.open(config, graphs) as svc:
+        # Warm-up: first tick compiles the generation-0 plan (plus the
+        # one-off auxiliary kernels — delta stacking, score readback).
+        _run_ticks(svc, graphs, _N_PAD, seeds=[0])
+        # Idle-time warming: generation-1 plan + grow transform.
+        svc.warm_next_layouts([_GROW_N_PAD])
+
+        with compile_budget(0, "mixed-n ticks + warm repad "
+                               "(gen 0 -> 1)") as c1:
+            _run_ticks(svc, graphs, _N_PAD,
+                       seeds=range(1, 1 + ticks_per_phase))
+            svc.repad(_GROW_N_PAD)
+            _run_ticks(svc, graphs, _GROW_N_PAD,
+                       seeds=range(10, 10 + ticks_per_phase))
+        phases["ticks_repad_gen0_to_1"] = c1.count
+
+        # Idle-time warming again: the default call warms the growth
+        # prediction and the live-count compaction target (compiling
+        # the occupancy reduction), the explicit call the actual
+        # compact target's plan + transform.
+        svc.warm_next_layouts()
+        svc.warm_next_layouts([_N_PAD])
+
+        with compile_budget(0, "mixed-n ticks + warm compact "
+                               "(gen 1 -> 2)") as c2:
+            _run_ticks(svc, graphs, _GROW_N_PAD,
+                       seeds=range(20, 20 + ticks_per_phase))
+            svc.compact(_N_PAD)
+            _run_ticks(svc, graphs, _N_PAD,
+                       seeds=range(30, 30 + ticks_per_phase))
+        phases["ticks_compact_gen1_to_2"] = c2.count
+
+        scores = svc.scores()
+        assert scores is not None and scores.shape == (_B,)
+
+    return {
+        "ok": True,
+        "budget_per_phase": 0,
+        "phases": phases,
+        "ticks_per_phase": ticks_per_phase,
+        "generations": 2,
+    }

@@ -9,7 +9,12 @@
   for B streams in one kernel launch (``method="fused_tick"``)
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper with CPU interpret fallback) and ref.py (pure-jnp oracle).
+wrapper with CPU interpret fallback), ref.py (pure-jnp oracle) and
+parity.py (interpret-vs-oracle check, auto-discovered by the
+kernels-interpret CI suite). Shared dispatch policy — backend
+detection, interpret fallback, the configurable VMEM budget — lives in
+`repro.kernels.dispatch`; the layout is enforced by the
+``kernel-package-triple`` lint rule in `repro.analysis.lint`.
 """
 from repro.kernels.bsr_spmv.ops import (
     BsrMatrix,

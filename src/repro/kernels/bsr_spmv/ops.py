@@ -4,18 +4,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.bsr_spmv.kernel import bsr_matvec_pallas
 from repro.kernels.bsr_spmv.ref import BsrMatrix, bsr_matvec_ref, dense_to_bsr
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def bsr_matvec(m: BsrMatrix, x: jax.Array, use_pallas: bool = True) -> jax.Array:
     if not use_pallas:
         return bsr_matvec_ref(m, x)
-    return bsr_matvec_pallas(m.values, m.col_ids, x, interpret=not _on_tpu())
+    return bsr_matvec_pallas(m.values, m.col_ids, x,
+                             interpret=dispatch.default_interpret())
 
 
 def power_iteration_lmax_bsr(

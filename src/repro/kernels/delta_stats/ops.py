@@ -19,10 +19,11 @@ from repro.core.incremental import (
 )
 from repro.core.state import FingerState
 from repro.graphs.types import GraphDelta
+from repro.kernels import dispatch
 from repro.kernels.delta_stats.kernel import delta_stats_sorted_pallas
 from repro.kernels.delta_stats.ref import delta_stats_sorted_ref
 
-_LANE = 128
+_LANE = dispatch.LANE
 # The fused kernel builds (2k, 2k) segment-indicator temporaries in VMEM
 # (~3 × (2k)² × 4 B); past this endpoint count they would blow the ~16 MB
 # per-core budget, so larger deltas take the XLA ref path instead.
@@ -59,10 +60,6 @@ def prepare_sorted_delta(strengths: jax.Array, delta: GraphDelta):
     return (*prep, padded.dw * padded.mask, padded.w_old, padded.mask)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def delta_stats_fused(
     state: FingerState,
     delta: GraphDelta,
@@ -86,8 +83,7 @@ def delta_stats_fused(
     if not use_pallas or prep[0].shape[0] > _MAX_FUSED_ENDPOINTS:
         stats = delta_stats_sorted_ref(*prep)
     else:
-        if interpret is None:
-            interpret = not _on_tpu()
+        interpret = dispatch.default_interpret(interpret)
         stats = delta_stats_sorted_pallas(
             *(x.reshape(1, -1) for x in prep), interpret=interpret)
     return stats[0], stats[1], stats[2]

@@ -1,0 +1,97 @@
+"""Shared kernel dispatch policy: backend detection, interpret-mode
+fallback, lane geometry, and the configurable per-grid-step VMEM budget.
+
+Every kernel package's ``ops.py`` dispatches the same way — Pallas on
+TPU, interpret mode elsewhere (CPU CI), and a size guard that routes
+oversized tiles to the XLA reference path.  This module is the single
+home for that policy, and `repro.analysis.vmem` consumes the same
+budget so the static checker and the runtime guard can never disagree
+on what "fits" means.
+
+The VMEM budget defaults to a conservative 8 MB (half the ~16 MB/core
+TPU VMEM, leaving headroom for the compiler's own temporaries).  It can
+be overridden three ways, in increasing precedence:
+
+- the ``REPRO_VMEM_BUDGET_BYTES`` environment variable (read once at
+  import);
+- ``set_vmem_budget_bytes(n)`` — process-wide override (``None``
+  restores the env/default value);
+- ``vmem_budget(n)`` — a scoped context-manager override.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Iterator, Optional
+
+import jax
+
+# TPU vector-memory lane geometry: the last axis tiles to 128 lanes,
+# the second-to-last to 8 sublanes (f32).
+LANE = 128
+SUBLANE = 8
+
+DEFAULT_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+_env = os.environ.get("REPRO_VMEM_BUDGET_BYTES")
+_BASE_VMEM_BUDGET_BYTES = int(_env) if _env else DEFAULT_VMEM_BUDGET_BYTES
+del _env
+
+_override = threading.local()
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m`` (at least ``m``)."""
+    return ((max(int(x), 1) + m - 1) // m) * m
+
+
+def on_tpu() -> bool:
+    """Whether the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` argument: explicit value
+    wins; ``None`` means Pallas on TPU, interpret mode elsewhere."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)
+
+
+def vmem_budget_bytes() -> int:
+    """The active per-grid-step VMEM budget (innermost override wins)."""
+    stack = getattr(_override, "stack", None)
+    if stack:
+        return stack[-1]
+    if _process_override[0] is not None:
+        return _process_override[0]
+    return _BASE_VMEM_BUDGET_BYTES
+
+
+# one-slot mutable cell so set_vmem_budget_bytes works without `global`
+_process_override: list = [None]
+
+
+def set_vmem_budget_bytes(n: Optional[int]) -> None:
+    """Process-wide VMEM budget override; ``None`` restores the
+    env/default value. Affects every kernel's size guard and the static
+    checker in `repro.analysis.vmem`."""
+    if n is not None and int(n) <= 0:
+        raise ValueError(f"VMEM budget must be positive, got {n}")
+    _process_override[0] = None if n is None else int(n)
+
+
+@contextlib.contextmanager
+def vmem_budget(n: int) -> Iterator[int]:
+    """Scoped VMEM budget override (thread-local, reentrant)."""
+    if int(n) <= 0:
+        raise ValueError(f"VMEM budget must be positive, got {n}")
+    stack = getattr(_override, "stack", None)
+    if stack is None:
+        stack = _override.stack = []
+    stack.append(int(n))
+    try:
+        yield int(n)
+    finally:
+        stack.pop()

@@ -4,15 +4,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.entropy_probe.kernel import attention_graph_stats_pallas
 from repro.kernels.entropy_probe.ref import (
     attention_graph_stats_ref,
     entropy_from_stats,
 )
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def attention_graph_stats(
@@ -24,7 +21,7 @@ def attention_graph_stats(
     if not use_pallas or logits.shape[-1] % bs != 0:
         return attention_graph_stats_ref(logits)
     scal, colsum, diag = attention_graph_stats_pallas(
-        logits, bs=bs, interpret=not _on_tpu())
+        logits, bs=bs, interpret=dispatch.default_interpret())
     sum_a2, cross, sum_d2 = scal[:, 0], scal[:, 1], scal[:, 2]
     r = 1.0 - diag          # row sums of A minus the diagonal
     c = colsum - diag       # column sums minus the diagonal

@@ -1,0 +1,21 @@
+"""Interpret-vs-oracle parity for the ``entropy_probe`` kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.entropy_probe.ops import attention_graph_stats
+from repro.kernels.entropy_probe.ref import attention_graph_stats_ref
+from repro.kernels.parity import assert_close
+
+
+def check_parity(record=None) -> None:
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(
+        rng.normal(0, 1.5, (2, 128, 128)).astype(np.float32))
+    assert_close("entropy_probe", attention_graph_stats(logits),
+                 attention_graph_stats_ref(logits), atol=1e-4, rtol=5e-4)
+    if record is not None:
+        record("entropy_probe_bh2_s128",
+               lambda: attention_graph_stats(logits))

@@ -29,22 +29,16 @@ import jax.numpy as jnp
 
 from repro.core.state import FingerState
 from repro.graphs.types import GraphDelta
+from repro.kernels import dispatch
+from repro.kernels.dispatch import ceil_to as _ceil_to
 from repro.kernels.stream_tick.kernel import (
     MAX_ENDPOINTS,
     stream_tick_pallas,
 )
 from repro.kernels.stream_tick.ref import stream_tick_ref
 
-_LANE = 128
-_SUBLANE = 8
-# Conservative per-grid-step VMEM budget for the fused tick's
-# temporaries (the dominant (2k, 2k) indicator matrices plus the
-# (2k, n) one-hot and the (j, n) node-slot indicators).
-_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((max(int(x), 1) + m - 1) // m) * m
+_LANE = dispatch.LANE
+_SUBLANE = dispatch.SUBLANE
 
 
 def _pad_last(x: jax.Array, width: int, value=0) -> jax.Array:
@@ -69,16 +63,13 @@ def fused_tick_vmem_bytes(n_pad: int, k_pad: int,
 
 def fits_fused_tick(n_pad: int, k_pad: int,
                     j_pad: Optional[int]) -> bool:
-    """Whether a (k_pad, n_pad, j_pad) tile fits the fused kernel; the
-    caller falls back to the vmapped XLA tick otherwise."""
+    """Whether a (k_pad, n_pad, j_pad) tile fits the fused kernel under
+    the active `dispatch.vmem_budget_bytes()` budget; the caller falls
+    back to the vmapped XLA tick otherwise."""
     if 2 * _ceil_to(k_pad, _LANE) > MAX_ENDPOINTS:
         return False
     return fused_tick_vmem_bytes(n_pad, k_pad, j_pad) \
-        <= _VMEM_BUDGET_BYTES
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+        <= dispatch.vmem_budget_bytes()
 
 
 def prepare_stream_tick(states: FingerState, deltas: GraphDelta):
@@ -150,8 +141,7 @@ def stream_tick_fused(
             or not fits_fused_tick(n, k, j):
         return stream_tick_ref(states, deltas, exact_smax=exact_smax,
                                method="dense")
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = dispatch.default_interpret(interpret)
     prep = prepare_stream_tick(states, deltas)
     dist, q2, s2, smax2, str2, mask2 = stream_tick_pallas(
         *prep, exact_smax=exact_smax, interpret=interpret)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.vnge_q.kernel import vnge_q_stats_pallas
 from repro.kernels.vnge_q.ref import q_from_stats, vnge_q_stats_ref
 
@@ -20,10 +21,6 @@ def _pad_to_blocks(w: jax.Array, bm: int, bn: int) -> jax.Array:
     if n_pad == n:
         return w
     return jnp.pad(w, ((0, n_pad - n), (0, n_pad - n)))
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _apply_node_mask(w: jax.Array, node_mask) -> jax.Array:
@@ -47,7 +44,8 @@ def vnge_q_stats(w: jax.Array, bm: int = 128, bn: int = 128,
     if not use_pallas:
         return vnge_q_stats_ref(w)
     wp = _pad_to_blocks(w.astype(jnp.float32), bm, bn)
-    return vnge_q_stats_pallas(wp, bm=bm, bn=bn, interpret=not _on_tpu())
+    return vnge_q_stats_pallas(wp, bm=bm, bn=bn,
+                               interpret=dispatch.default_interpret())
 
 
 def quadratic_q_dense(w: jax.Array, use_pallas: bool = True,

@@ -41,6 +41,16 @@ _SKIP_TRAFFIC = {
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# Opcodes that move data across the host boundary. `S(5)` in a layout
+# marks the TPU host memory space (host-offloaded buffers); custom-call
+# targets that implement host placement are matched by name.
+_HOST_TRANSFER_OPCODES = {
+    "outfeed", "infeed", "send", "recv", "send-done", "recv-done",
+}
+_HOST_CUSTOM_CALL_TARGETS = (
+    "MoveToHost", "MoveToDevice", "annotate_device_placement",
+)
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
@@ -337,3 +347,81 @@ def analyze(text: str, entry_hint: Optional[str] = None) -> Dict[str, float]:
         "collectives": coll,
         "n_computations": len(comps),
     }
+
+
+# -- plan-audit helpers (consumed by repro.analysis.hlo_audit) -------------
+
+def parse_input_output_aliases(text: str) -> Dict[Tuple[int, ...], int]:
+    """The module header's ``input_output_alias`` map: output index
+    tuple → donated parameter number.
+
+    XLA records buffer donation as e.g.
+    ``input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}, ...) }``
+    on the ``HloModule`` line; an empty dict means nothing is donated.
+    """
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return {}
+    i = start + len("input_output_alias=")
+    depth = 0
+    body = []
+    for ch in text[i:]:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        body.append(ch)
+    block = "".join(body)
+    out: Dict[Tuple[int, ...], int] = {}
+    for m in re.finditer(r"\{([\d,\s]*)\}:\s*\((\d+)", block):
+        idx = tuple(int(x) for x in m.group(1).split(",") if x.strip())
+        out[idx] = int(m.group(2))
+    return out
+
+
+def host_transfer_ops(comps: Dict[str, Computation]) \
+        -> List[Tuple[str, str, str]]:
+    """(computation, op, reason) for every op that crosses the host
+    boundary: infeed/outfeed/send/recv, copies into the S(5) host
+    memory space, and host-placement custom-calls."""
+    hits: List[Tuple[str, str, str]] = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        for op in comp.ops.values():
+            if op.opcode in _HOST_TRANSFER_OPCODES:
+                hits.append((cname, op.name,
+                             f"host-boundary opcode '{op.opcode}'"))
+            elif op.opcode in ("copy", "copy-start") \
+                    and "S(5)" in op.attrs:
+                hits.append((cname, op.name,
+                             "copy into host memory space S(5)"))
+            elif op.opcode == "custom-call":
+                m = re.search(r'custom_call_target="([^"]+)"', op.attrs)
+                if m and any(t in m.group(1)
+                             for t in _HOST_CUSTOM_CALL_TARGETS):
+                    hits.append((cname, op.name,
+                                 f"host-placement custom-call "
+                                 f"'{m.group(1)}'"))
+    return hits
+
+
+def ops_with_dtypes(comps: Dict[str, Computation],
+                    dtypes: Tuple[str, ...] = ("f64", "c128")) \
+        -> List[Tuple[str, str, str]]:
+    """(computation, op, dtype) for ops producing any of ``dtypes`` —
+    the audit's dtype-upcast detector (this stack is f32/i32 end to
+    end; an f64 output means an accidental weak-type promotion)."""
+    hits: List[Tuple[str, str, str]] = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        for op in comp.ops.values():
+            for s in op.shapes:
+                dt, _ = _parse_shape(s)
+                if dt in dtypes:
+                    hits.append((cname, op.name, dt))
+                    break
+    return hits

@@ -21,7 +21,7 @@ from repro.serving.config import (
     ServiceConfigError,
     TopKSpec,
 )
-from repro.serving.ingest import IngestError
+from repro.serving.ingest import GraceLapseError, IngestError
 from repro.serving.migrate import (
     CompactionReport,
     LayoutMigrationError,
@@ -45,6 +45,7 @@ __all__ = [
     "CompactionReport",
     "ExecutionPlan",
     "FingerService",
+    "GraceLapseError",
     "IngestError",
     "LayoutMigrationError",
     "LocalPlan",

@@ -156,6 +156,13 @@ class ServiceConfig:
     plan_cache : PlanCachePolicy — warm pre-compiled plans for
         predicted next layouts (`FingerService.warm_next_layouts`), so
         `repad`/`compact` swap without a compile pause.
+    grace_generations : how many past migration generations keep a live
+        old→new remap for grace-period ingestion. A delta stamped with
+        a generation older than ``current - grace_generations`` raises
+        `serving.ingest.GraceLapseError` by name. ``None`` retains
+        every journaled generation (the remap table then grows without
+        bound over the service's migration history — only sensible for
+        short-lived services or tests).
     data_axis / pod_axis : mesh axis names the sharded placements bind.
     """
 
@@ -171,6 +178,7 @@ class ServiceConfig:
     checkpoint: CheckpointPolicy = CheckpointPolicy()
     topk: TopKSpec = TopKSpec()
     plan_cache: PlanCachePolicy = PlanCachePolicy()
+    grace_generations: Optional[int] = 3
     data_axis: str = "data"
     pod_axis: str = "pod"
 
@@ -206,6 +214,11 @@ class ServiceConfig:
             raise ServiceConfigError(
                 f"multipod placement needs distinct pod/data axes, got "
                 f"{self.pod_axis!r} for both")
+        if self.grace_generations is not None \
+                and self.grace_generations < 0:
+            raise ServiceConfigError(
+                f"grace_generations must be >= 0 (or None for "
+                f"unbounded retention), got {self.grace_generations}")
         self.checkpoint.validate()
         self.topk.validate()
         self.plan_cache.validate()

@@ -62,6 +62,14 @@ class IngestError(ValueError):
     the ingestion queue overflowed)."""
 
 
+class GraceLapseError(IngestError):
+    """A generation-stamped delta addresses a layout generation whose
+    grace window has lapsed: the service's retention policy
+    (``ServiceConfig.grace_generations``) has pruned that generation's
+    old→new remap. The producer must rebuild its deltas against the
+    current layout (`FingerService.layout`)."""
+
+
 def validate_stacked_delta(config: ServiceConfig,
                            deltas: GraphDelta) -> None:
     """Layout check before anything touches the device: every mismatch
@@ -145,13 +153,23 @@ class SyncIngestor:
                                            layout_generation=None)
             imap = self.remaps_by_gen.get(gen)
             if imap is None:
+                if 0 <= gen < self.generation:
+                    # A real past generation with no retained remap:
+                    # the retention policy pruned it.
+                    raise GraceLapseError(
+                        f"delta is addressed in layout generation "
+                        f"{gen} but the service is at generation "
+                        f"{self.generation} and its grace window "
+                        f"(grace_generations="
+                        f"{self.config.grace_generations}) retains "
+                        f"only {sorted(self.remaps_by_gen)} — rebuild "
+                        "deltas against the current layout")
                 raise IngestError(
-                    f"delta is addressed in layout generation {gen} "
-                    f"but the service is at generation "
-                    f"{self.generation} and holds no remap for it "
-                    f"(known: {sorted(self.remaps_by_gen)}); the "
-                    "grace window for that layout has lapsed — "
-                    "rebuild deltas against the current layout")
+                    f"delta declares layout generation {gen} but the "
+                    f"service is at generation {self.generation} "
+                    f"(known past generations: "
+                    f"{sorted(self.remaps_by_gen)}) — a mis-stamped "
+                    "delta")
             if deltas.n_nodes != imap.shape[0]:
                 # Without this, a wrong-size stamp would either escape
                 # as a raw IndexError from the remap gather or be

@@ -473,6 +473,22 @@ def remaps_by_generation(records: List[dict]) -> Dict[int, np.ndarray]:
     return table
 
 
+def prune_generation_remaps(table: Dict[int, np.ndarray],
+                            current_generation: int,
+                            grace_generations: Optional[int]
+                            ) -> Dict[int, np.ndarray]:
+    """Apply the `ServiceConfig.grace_generations` retention policy to
+    a generation-keyed remap table: keep only generations within the
+    last ``grace_generations`` migrations of ``current_generation``.
+    Without this the table grows by one composed index map per
+    migration for the life of the service. ``None`` retains everything
+    (explicitly unbounded)."""
+    if grace_generations is None:
+        return dict(table)
+    floor = int(current_generation) - int(grace_generations)
+    return {g: m for g, m in table.items() if g >= floor}
+
+
 @dataclasses.dataclass(frozen=True)
 class CompactionReport:
     """What one `FingerService.compact` did (returned to the caller)."""

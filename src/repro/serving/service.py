@@ -214,7 +214,11 @@ class FingerService:
         recs = sorted((r for r in log if r["to_generation"] <= gen),
                       key=lambda r: r["from_generation"])
         remaps = migrate.remaps_from_records(recs)
-        remaps_gen = migrate.remaps_by_generation(recs)
+        # Same retention policy as the live service: the rebuilt table
+        # covers only the configured grace window, not the full journal.
+        remaps_gen = migrate.prune_generation_remaps(
+            migrate.remaps_by_generation(recs), gen,
+            config.grace_generations)
         return cls(config, plan, plan.shard_states(states), step=step,
                    remaps=remaps, remaps_gen=remaps_gen)
 
@@ -474,11 +478,18 @@ class FingerService:
         """Chain the generation-keyed grace table through one more
         migration and give the just-retired generation a direct entry.
         Keys are migration generations, so nothing ever shadows — the
-        table stays exact across size-reusing chains."""
+        table stays exact across size-reusing chains. Retention: the
+        config's ``grace_generations`` bounds the table (one composed
+        map per migration otherwise accumulates for the service's
+        lifetime); a delta stamped with a pruned generation raises
+        `ingest.GraceLapseError`."""
         self._remaps_gen = {g: compose_index_maps(m, index_map)
                             for g, m in self._remaps_gen.items()}
         self._remaps_gen[self._layout.generation] = \
             np.asarray(index_map, np.int32)
+        self._remaps_gen = migrate.prune_generation_remaps(
+            self._remaps_gen, self._layout.generation + 1,
+            self._config.grace_generations)
 
     def _absorb_index_map(self, index_map: np.ndarray) -> None:
         """Compose a fresh old→new map into the ingestion grace tables.

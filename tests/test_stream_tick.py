@@ -18,6 +18,7 @@ from _propcheck import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitize import compile_budget
 from repro.core import finger_state, jsdist_incremental, update_state
 from repro.engine import StreamEngine, stack_deltas
 from repro.graphs import DenseGraph, GraphDelta
@@ -274,13 +275,14 @@ class TestEngineWiring:
 
     def test_fused_engine_compiles_once_across_mixed_n(self):
         """The jit-cache assertion: mixed-n batches (distinct masks,
-        same shapes) reuse ONE compiled fused tick."""
+        same shapes) reuse ONE compiled fused tick — the first tick
+        compiles, the rest run under a zero-compile budget."""
         states, mk = self._mixed()
         engine = StreamEngine(method="fused_tick")
-        for _ in range(3):
-            dists, states = engine.tick(states, mk())
-        assert engine._tick._cache_size() == 1, \
-            "fused tick recompiled across mixed-n batches"
+        dists, states = engine.tick(states, mk())
+        with compile_budget(0, "fused tick across mixed-n batches"):
+            for _ in range(2):
+                dists, states = engine.tick(states, mk())
         assert np.isfinite(np.asarray(dists)).all()
 
     def test_fused_engine_matches_dense_engine(self):
