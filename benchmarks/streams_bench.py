@@ -8,9 +8,19 @@ tracked across PRs:
   per-stream Python loop (one jitted Algorithm-2 step, B dispatches),
   plus a ``fused_tick`` column — the same tick through the
   `kernels.stream_tick` Pallas megakernel (one kernel launch per tick
-  instead of the vmapped op chain; on the CPU backend it runs in
-  interpret mode, so treat the CPU ratio as structural, not a timing
-  proxy — the HBM-traffic claim needs a real accelerator).
+  instead of the vmapped op chain). On non-TPU backends the kernel
+  runs in **interpret mode**: the fused columns are then structural
+  placeholders, not timing proxies (``fused_speedup_vs_tick < 1`` is
+  expected there), and every sweep row is stamped ``"interpret": true``
+  so downstream consumers can tell placeholder rows from real
+  accelerator timings. The flag is schema-enforced by
+  ``validate_report`` (and hence ``benchmarks/run.py``).
+- **sparse scaling**  : ``method="sparse_tick"`` vs the dense tick at
+  fixed active size / fixed k across virtual n_pad ∈ {1k, 10k, 100k}:
+  the sparse slot-space tick's cost is set by (n_slots, m_pad), not
+  n_pad, so its latency stays flat while the dense (B, n_pad) tick
+  grows — the emitted ``sparse_crossover`` row records the first
+  n_pad where sparse wins.
 - **ingest overlap**  : the same serving loop (host delta synthesis
   every tick) under ``sync`` vs ``double_buffered`` ingestion;
   ``overlap_fraction`` is the fraction of the sync-mode wall time the
@@ -56,6 +66,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 from common import emit, time_fn  # noqa: E402
 
 from repro.core import finger_state, jsdist_incremental  # noqa: E402
+from repro.kernels.dispatch import default_interpret  # noqa: E402
 from repro.engine import StreamEngine, stack_deltas  # noqa: E402
 from repro.graphs.generators import erdos_renyi  # noqa: E402
 from repro.graphs.types import GraphDelta  # noqa: E402
@@ -127,15 +138,23 @@ def bench_sweep_point(b: int, n_pad: int, k: int, method: str,
                       iters=iters)
     svc_f.close()
 
+    # Off-TPU the Pallas kernels execute in interpret mode: the fused
+    # timing is a placeholder row, not a speedup claim. Stamp the row
+    # so BENCH_streams.json consumers (and readers of a CPU-generated
+    # artifact) never mistake fused_speedup_vs_tick < 1 for a real
+    # kernel regression.
+    interpret = default_interpret(None)
     emit(f"streams_loop_b{b}_n{n_pad}_{method}", t_loop,
          f"{b / t_loop:.0f} stream-ticks/s")
     emit(f"streams_service_b{b}_n{n_pad}_{method}", t_svc,
          f"{b / t_svc:.0f} stream-ticks/s")
     emit(f"streams_fused_b{b}_n{n_pad}", t_fused,
          f"{b / t_fused:.0f} stream-ticks/s "
-         f"({t_svc / t_fused:.2f}x vs {method} tick)")
+         f"({t_svc / t_fused:.2f}x vs {method} tick"
+         f"{', interpret-mode placeholder' if interpret else ''})")
     return {
         "b": b, "n_pad": n_pad, "k_pad": k, "method": method,
+        "interpret": interpret,
         "loop_tick_latency_us": t_loop * 1e6,
         "tick_latency_us": t_svc * 1e6,
         "fused_tick_latency_us": t_fused * 1e6,
@@ -339,7 +358,117 @@ def bench_migration(b: int, n_pad: int, k: int, method: str,
     return cell
 
 
-_SWEEP_KEYS = ("b", "n_pad", "k_pad", "method", "loop_tick_latency_us",
+def _toggle_deltas(graphs, rng, k, k_pad, n_pad):
+    """Per-stream (remove, re-add) delta pair over k existing edges.
+
+    Alternating the pair keeps every tick consistent with the evolving
+    graph (w_old is exact on each application), which the sparse path's
+    host-side SlotMap bookkeeping requires — and it exercises slot
+    free/reuse on every other tick."""
+    removes, adds = [], []
+    for g in graphs:
+        w = np.asarray(g.weights)
+        iu, ju = np.triu_indices(g.n_nodes, k=1)
+        on = np.flatnonzero(w[iu, ju] > 0)
+        pick = rng.choice(on, size=min(k, len(on)), replace=False)
+        ii, jj = iu[pick], ju[pick]
+        w_old = w[ii, jj].astype(np.float32)
+        removes.append(GraphDelta.from_arrays(
+            ii, jj, -w_old, w_old, n_nodes=g.n_nodes, k_pad=k_pad,
+            n_pad=n_pad))
+        adds.append(GraphDelta.from_arrays(
+            ii, jj, w_old, np.zeros_like(w_old), n_nodes=g.n_nodes,
+            k_pad=k_pad, n_pad=n_pad))
+    return removes, adds
+
+
+def bench_sparse_scaling(b: int, n_active: int, n_pads, k: int,
+                         n_slots: int, m_pad: int,
+                         iters: int = 10) -> tuple:
+    """Sparse vs dense tick latency across the *virtual* node space.
+
+    Streams hold a fixed n_active-node graph embedded in a growing
+    virtual n_pad. The dense tick's (B, n_pad) state makes its cost
+    grow with the virtual bound even though nothing active changed;
+    the sparse slot-space tick is sized by (n_slots, m_pad) only, so
+    its latency must stay flat — the headline O(k) vs O(k·n_pad)
+    scaling row. Returns (rows, crossover_summary)."""
+    rng = np.random.default_rng(5)
+    graphs = [erdos_renyi(n_active, 0.2, seed=s, weighted=True)
+              for s in range(b)]
+    interpret = default_interpret(None)
+    rows = []
+    for n_pad in n_pads:
+        removes, adds = _toggle_deltas(graphs, rng, k, k_pad=k,
+                                       n_pad=n_pad)
+        stacked = (stack_deltas(removes), stack_deltas(adds))
+
+        dense_cfg = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k,
+                                  method="dense",
+                                  topk=TopKSpec(k=min(8, b)))
+        svc = FingerService.open(dense_cfg, graphs)
+        flip = {"i": 0}
+
+        def dense_tick():
+            svc.ingest(stacked[flip["i"]])
+            flip["i"] ^= 1
+            return svc.poll().scores
+
+        t_dense = time_fn(lambda: jax.block_until_ready(dense_tick()),
+                          iters=iters)
+        svc.close()
+
+        sparse_cfg = ServiceConfig(batch_size=b, n_pad=n_pad, k_pad=k,
+                                   method="sparse_tick",
+                                   n_slots=n_slots, m_pad=m_pad,
+                                   topk=TopKSpec(k=min(8, b)))
+        svc = FingerService.open(sparse_cfg, graphs)
+        pair = (removes, adds)
+        flip_s = {"i": 0}
+
+        def sparse_tick():
+            svc.ingest(pair[flip_s["i"]])
+            flip_s["i"] ^= 1
+            return svc.poll().scores
+
+        t_sparse = time_fn(lambda: jax.block_until_ready(sparse_tick()),
+                           iters=iters)
+        svc.close()
+
+        emit(f"streams_sparse_dense_b{b}_n{n_pad}", t_dense,
+             f"{b / t_dense:.0f} stream-ticks/s")
+        emit(f"streams_sparse_tick_b{b}_n{n_pad}", t_sparse,
+             f"{b / t_sparse:.0f} stream-ticks/s "
+             f"({t_dense / t_sparse:.2f}x vs dense tick)")
+        rows.append({
+            "b": b, "n_pad": n_pad, "k_pad": k,
+            "n_slots": n_slots, "m_pad": m_pad,
+            "interpret": interpret,
+            "dense_tick_latency_us": t_dense * 1e6,
+            "sparse_tick_latency_us": t_sparse * 1e6,
+            "sparse_speedup_vs_dense": t_dense / t_sparse,
+        })
+
+    crossover = next((r["n_pad"] for r in rows
+                      if r["sparse_tick_latency_us"]
+                      < r["dense_tick_latency_us"]), None)
+    summary = {
+        "b": b, "k_pad": k, "n_active": n_active,
+        "crossover_n_pad": crossover,
+        "dense_latency_growth": (rows[-1]["dense_tick_latency_us"]
+                                 / rows[0]["dense_tick_latency_us"]),
+        "sparse_latency_growth": (rows[-1]["sparse_tick_latency_us"]
+                                  / rows[0]["sparse_tick_latency_us"]),
+    }
+    print(f"# sparse crossover: sparse_tick beats dense from n_pad="
+          f"{crossover} (dense grew "
+          f"{summary['dense_latency_growth']:.1f}x over the sweep, "
+          f"sparse {summary['sparse_latency_growth']:.1f}x)")
+    return rows, summary
+
+
+_SWEEP_KEYS = ("b", "n_pad", "k_pad", "method", "interpret",
+               "loop_tick_latency_us",
                "tick_latency_us", "fused_tick_latency_us",
                "fused_speedup_vs_tick",
                "throughput_stream_ticks_per_s",
@@ -351,6 +480,13 @@ _MIXED_KEYS = ("b", "n_pad", "ratio_mixed_over_uniform",
 _MIGRATION_KEYS = ("b", "n_pad", "grow_to", "compact_to",
                    "host_repad_ms", "device_grow_ms", "compact_ms",
                    "cold_swap_ms", "warm_swap_ms")
+_SPARSE_SCALING_KEYS = ("b", "n_pad", "k_pad", "n_slots", "m_pad",
+                        "interpret", "dense_tick_latency_us",
+                        "sparse_tick_latency_us",
+                        "sparse_speedup_vs_dense")
+_SPARSE_CROSSOVER_KEYS = ("b", "k_pad", "n_active", "crossover_n_pad",
+                          "dense_latency_growth",
+                          "sparse_latency_growth")
 
 
 def _require(mapping, keys, where: str) -> None:
@@ -380,7 +516,8 @@ def validate_report(report: dict) -> dict:
     """
     _require(report, ("bench", "method", "quick", "backend",
                       "device_count", "sweep", "ingest_overlap",
-                      "mixed_n", "migration"), "top level")
+                      "mixed_n", "migration", "sparse_scaling",
+                      "sparse_crossover"), "top level")
     if report["bench"] != "streams":
         raise ValueError(
             f"BENCH_streams.json: bench={report['bench']!r} != 'streams'")
@@ -389,6 +526,11 @@ def validate_report(report: dict) -> dict:
                          "non-empty list")
     for i, cell in enumerate(report["sweep"]):
         _require(cell, _SWEEP_KEYS, f"sweep[{i}]")
+        if not isinstance(cell["interpret"], bool):
+            raise ValueError(
+                f"BENCH_streams.json: sweep[{i}].interpret must be a "
+                "boolean (the interpret-mode placeholder stamp), got "
+                f"{cell['interpret']!r}")
     _require(report["ingest_overlap"], _OVERLAP_KEYS, "ingest_overlap")
     _require(report["mixed_n"], _MIXED_KEYS, "mixed_n")
     if not isinstance(report["migration"], list) or not report["migration"]:
@@ -396,6 +538,18 @@ def validate_report(report: dict) -> dict:
                          "non-empty list")
     for i, cell in enumerate(report["migration"]):
         _require(cell, _MIGRATION_KEYS, f"migration[{i}]")
+    if not isinstance(report["sparse_scaling"], list) \
+            or not report["sparse_scaling"]:
+        raise ValueError("BENCH_streams.json: sparse_scaling must be a "
+                         "non-empty list")
+    for i, cell in enumerate(report["sparse_scaling"]):
+        _require(cell, _SPARSE_SCALING_KEYS, f"sparse_scaling[{i}]")
+        if not isinstance(cell["interpret"], bool):
+            raise ValueError(
+                f"BENCH_streams.json: sparse_scaling[{i}].interpret "
+                f"must be a boolean, got {cell['interpret']!r}")
+    _require(report["sparse_crossover"], _SPARSE_CROSSOVER_KEYS,
+             "sparse_crossover")
     return report
 
 
@@ -432,6 +586,8 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
         "ingest_overlap": None,
         "mixed_n": None,
         "migration": [],
+        "sparse_scaling": [],
+        "sparse_crossover": None,
     }
     for n_pad in n_pads:
         for b in batches:
@@ -452,6 +608,14 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
         report["migration"].append(
             bench_migration(mb, mn, k=k, method=method,
                             repeats=2 if quick else 3))
+    # Sparse scaling: fixed active size / fixed k across virtual n_pad
+    # ∈ {1k, 10k, 100k} (cheap enough for the quick CPU cell — the
+    # sparse tick doesn't touch n_pad and the dense states stay small).
+    report["sparse_scaling"], report["sparse_crossover"] = \
+        bench_sparse_scaling(
+            b=4 if quick else 8, n_active=64,
+            n_pads=[1_000, 10_000, 100_000], k=min(k, 8),
+            n_slots=128, m_pad=1024, iters=iters)
     validate_report(report)  # fail fast before clobbering the artifact
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)

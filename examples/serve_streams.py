@@ -114,11 +114,27 @@ def main():
     ap.add_argument("--churn", type=int, default=16, help="edges/tick")
     ap.add_argument("--dos-frac", type=float, default=0.25)
     ap.add_argument("--method", default="dense",
-                    choices=["dense", "compact", "fused_tick"],
+                    choices=["dense", "compact", "fused_tick",
+                             "sparse_tick"],
                     help="update path; fused_tick runs the whole "
                          "batched tick as one Pallas kernel launch "
                          "(interpret mode off TPU — see the perf-"
-                         "tuning notes in examples/README.md)")
+                         "tuning notes in examples/README.md); "
+                         "sparse_tick serves the slot-space path: "
+                         "--nodes becomes the VIRTUAL node bound "
+                         "(millions are free) while device cost is set "
+                         "by --n-slots/--m-pad only")
+    ap.add_argument("--active-nodes", type=int, default=None,
+                    help="sparse_tick: per-stream active graph size "
+                         "(default min(--nodes, 128)); the rest of the "
+                         "--nodes virtual space costs nothing")
+    ap.add_argument("--n-slots", type=int, default=None,
+                    help="sparse_tick: device node-slot capacity "
+                         "(default: the largest active size)")
+    ap.add_argument("--m-pad", type=int, default=None,
+                    help="sparse_tick: device edge-slot capacity "
+                         "(default: 2x the largest initial edge count "
+                         "plus churn headroom)")
     ap.add_argument("--placement", default="local",
                     choices=["local", "sharded", "multipod"])
     ap.add_argument("--ingestion", default="double_buffered",
@@ -140,28 +156,47 @@ def main():
     b, n_pad = args.streams, args.nodes
     rng = np.random.default_rng(0)
     compacting = args.compact_every is not None
+    sparse = args.method == "sparse_tick"
+    if sparse and args.ckpt_dir:
+        ap.error("--method sparse_tick is not checkpointable (the "
+                 "host-side SlotMap assignments are part of the state)")
+    if sparse and compacting:
+        ap.error("--method sparse_tick has no compact(): freed slots "
+                 "are reused by the SlotMap; grow_capacity() is the "
+                 "sparse migration")
     j_pad = 1 if compacting else None
-    k_pad = max(args.churn, int(args.dos_frac * n_pad)) + 1
+
+    # Under sparse_tick the tenants stay small (active-nodes) while
+    # --nodes is only the virtual addressing bound; everything else
+    # (churn, DoS, scoring) is identical.
+    n_base = min(n_pad, args.active_nodes or 128) if sparse else n_pad
+    if args.mixed_n:
+        sizes = [max(8, n_base // 4), max(8, n_base // 2),
+                 max(8, 3 * n_base // 4), n_base]
+        ns = [sizes[s % len(sizes)] for s in range(b)]
+    else:
+        ns = [n_base] * b
+    k_pad = max(args.churn, int(args.dos_frac * max(ns))) + 1
     if compacting:
         # a leaving node's whole incident edge set rides in one delta
         k_pad = max(k_pad, n_pad)
     attack_stream = int(rng.integers(0, b))
     attack_tick = args.ticks // 2
 
-    if args.mixed_n:
-        sizes = [max(8, n_pad // 4), max(8, n_pad // 2),
-                 max(8, 3 * n_pad // 4), n_pad]
-        ns = [sizes[s % len(sizes)] for s in range(b)]
-    else:
-        ns = [n_pad] * b
     graphs = [erdos_renyi(n, 0.08, seed=s, weighted=False)
               for s, n in enumerate(ns)]
     ws = [np.asarray(g.weights).copy() for g in graphs]
     triu = {n: np.triu_indices(n, k=1) for n in set(ns)}
 
+    n_slots = m_pad = None
+    if sparse:
+        n_slots = args.n_slots or max(ns)
+        m0 = max(int(np.count_nonzero(np.triu(w, 1))) for w in ws)
+        m_pad = args.m_pad or 2 * (m0 + k_pad)
     config = ServiceConfig(
         batch_size=b, n_pad=n_pad, k_pad=k_pad, j_pad=j_pad,
-        method=args.method, placement=args.placement,
+        method=args.method, n_slots=n_slots, m_pad=m_pad,
+        placement=args.placement,
         ingestion=args.ingestion,
         checkpoint=CheckpointPolicy(directory=args.ckpt_dir),
         topk=TopKSpec(k=1),
@@ -170,6 +205,11 @@ def main():
     if args.mixed_n:
         print(f"mixed-n tenants: n in {sorted(set(ns))}, "
               f"served at n_pad={n_pad} in one compiled tick")
+    if sparse:
+        print(f"sparse_tick: virtual n_pad={n_pad:,} served from "
+              f"n_slots={n_slots} node slots + m_pad={m_pad} edge "
+              "slots per stream (device cost is capacity-, not "
+              "virtual-, sized)")
 
     restart_tick = args.ticks // 2 if args.ckpt_dir else None
     # Tenants shrink from the top: act[s] tracks the active prefix, so
@@ -195,10 +235,14 @@ def main():
             else:
                 # churn proportional to the tenant's node-pair space, so
                 # a small tenant's background churn is not an anomaly in
-                # itself (edges live in O(n²) pair space)
+                # itself (edges live in O(n²) pair space). The reference
+                # is the largest TENANT, not n_pad: under sparse_tick
+                # the virtual bound is astronomically larger than any
+                # tenant and would zero out all background churn.
                 n_s = act[s] if compacting else ns[s]
+                n_ref = max(ns)
                 churn_k = max(1, args.churn * (n_s * (n_s - 1))
-                              // (n_pad * (n_pad - 1)))
+                              // (n_ref * (n_ref - 1)))
                 deltas.append(churn_delta(ws[s], rng, churn_k, k_pad,
                                           iu, ju, n_pad=n_pad,
                                           j_pad=j_pad))

@@ -83,17 +83,25 @@ def _run_vmem(json_mode: bool) -> tuple:
 
 def _run_sentinel(json_mode: bool) -> tuple:
     from repro.analysis.sanitize import CompileBudgetExceeded
-    from repro.analysis.sentinel import run_migration_chain
+    from repro.analysis.sentinel import (
+        run_migration_chain,
+        run_sparse_chain,
+    )
 
-    try:
-        result = run_migration_chain()
-    except CompileBudgetExceeded as exc:
-        result = {"ok": False, "error": str(exc)}
+    result = {"ok": True, "chains": {}}
+    for name, chain in (("dense", run_migration_chain),
+                        ("sparse", run_sparse_chain)):
+        try:
+            result["chains"][name] = chain()
+        except CompileBudgetExceeded as exc:
+            result["chains"][name] = {"ok": False, "error": str(exc)}
+            result["ok"] = False
     if not json_mode:
-        if result["ok"]:
-            print(f"  phases: {result['phases']}")
-        else:
-            print(f"  {result['error']}")
+        for name, res in result["chains"].items():
+            if res["ok"]:
+                print(f"  {name}: phases {res['phases']}")
+            else:
+                print(f"  {name}: {res['error']}")
         print(f"sentinel: {'OK' if result['ok'] else 'FAIL'}")
     return result["ok"], result
 

@@ -114,25 +114,15 @@ def mesh_for_placement(placement: str):
 
 
 def _dummy_tick_args(config: ServiceConfig,
-                     layout: NodeLayout) -> Tuple[FingerState, GraphDelta]:
+                     layout) -> Tuple[FingerState, GraphDelta]:
     """Zero-filled (states, deltas) of the plan's declared shapes —
-    the same construction `ExecutionPlan.warm_tick` compiles with."""
-    b, n, k, j = config.batch_size, layout.n_pad, config.k_pad, \
-        config.j_pad
-    f32, i32 = jnp.float32, jnp.int32
-    states = FingerState(
-        q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
-        s_max=jnp.zeros((b,), f32),
-        strengths=jnp.zeros((b, n), f32),
-        node_mask=jnp.zeros((b, n), f32), layout=layout)
-    deltas = GraphDelta(
-        senders=jnp.zeros((b, k), i32),
-        receivers=jnp.zeros((b, k), i32),
-        dw=jnp.zeros((b, k), f32), w_old=jnp.zeros((b, k), f32),
-        mask=jnp.zeros((b, k), f32), n_nodes=n,
-        node_ids=None if j is None else jnp.zeros((b, j), i32),
-        node_flag=None if j is None else jnp.zeros((b, j), f32))
-    return states, deltas
+    delegated to `serving.plans.dummy_tick_args`, the single source of
+    dummy-argument truth, so the audit compiles exactly the jit cache
+    entry `ExecutionPlan.warm_tick` populates (dense and slot-space
+    sparse alike)."""
+    from repro.serving.plans import dummy_tick_args
+
+    return dummy_tick_args(config, layout)
 
 
 def _audit_text(target: str, placement: Optional[str], text: str,
@@ -186,13 +176,21 @@ def audit_plan_tick(config: ServiceConfig, mesh=None) -> TargetAudit:
     from repro.serving.plans import build_plan
 
     plan = build_plan(config, mesh)
-    layout = NodeLayout(n_pad=config.n_pad, generation=0)
+    if config.method == "sparse_tick":
+        from repro.core.sparse import SparseLayout
+
+        layout = SparseLayout(n_slots=config.n_slots,
+                              m_pad=config.m_pad)
+        name = f"sparse_tick[{config.placement}]"
+    else:
+        layout = NodeLayout(n_pad=config.n_pad, generation=0)
+        name = f"tick[{config.placement}]"
     states, deltas = _dummy_tick_args(config, layout)
     tick = plan.engine._tick if config.placement == "local" \
         else plan._tick
     text = tick.lower(states, deltas).compile().as_text()
     n_leaves = len(jax.tree_util.tree_leaves(states))
-    return _audit_text(f"tick[{config.placement}]", config.placement,
+    return _audit_text(name, config.placement,
                        text, n_leaves, require_donation=True)
 
 
@@ -232,6 +230,26 @@ def audit_migrations(n_pad: int = 16, batch_size: int = 4) -> List[TargetAudit]:
             .compile().as_text()
         targets.append(_audit_text(name, None, text, n_leaves,
                                    require_donation=False))
+
+    # The sparse capacity growth (grow_capacity's device transform):
+    # same rules — the stacked slot-space state must never touch host.
+    from repro.core.sparse import SparseLayout, SparseStreamState
+
+    sl_small = SparseLayout(n_slots=n_pad, m_pad=2 * n_pad)
+    sl_big = sl_small.grown(n_slots=2 * n_pad, m_pad=4 * n_pad)
+    sparse_states = SparseStreamState(
+        q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
+        s_max=jnp.zeros((b,), f32),
+        strengths=jnp.zeros((b, sl_small.n_slots), f32),
+        node_mask=jnp.zeros((b, sl_small.n_slots), f32),
+        edge_weights=jnp.zeros((b, sl_small.m_pad), f32),
+        layout=sl_small)
+    text = migrate._grow_sparse_jit(None) \
+        .lower(sparse_states, new_layout=sl_big).compile().as_text()
+    targets.append(_audit_text(
+        "migrate.grow_sparse", None, text,
+        len(jax.tree_util.tree_leaves(sparse_states)),
+        require_donation=False))
     return targets
 
 
@@ -247,10 +265,19 @@ def audit_repo(batch_size: Optional[int] = None, n_pad: int = 16,
         batch_size = max(4, 2 * jax.device_count())
     targets: List[TargetAudit] = []
     for placement in PLACEMENTS:
+        mesh = mesh_for_placement(placement)
         config = ServiceConfig(
             batch_size=batch_size, n_pad=n_pad, k_pad=k_pad,
             placement=placement, topk=TopKSpec(k=2))
-        mesh = mesh_for_placement(placement)
         targets.append(audit_plan_tick(config, mesh))
+        # The sparse serving tick, same rules per placement: donation
+        # of every slot-space state leaf (edge store included), no
+        # host transfer, no collective, no upcast.
+        sparse_config = ServiceConfig(
+            batch_size=batch_size, n_pad=1 << 20, k_pad=k_pad,
+            method="sparse_tick", n_slots=n_pad, m_pad=2 * n_pad,
+            placement=placement, topk=TopKSpec(k=2))
+        targets.append(audit_plan_tick(sparse_config,
+                                       mesh_for_placement(placement)))
     targets.extend(audit_migrations())
     return AuditReport(targets)

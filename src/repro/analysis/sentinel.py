@@ -1,4 +1,4 @@
-"""The jit-cache-miss sentinel scenario: a mixed-n migration chain.
+"""The jit-cache-miss sentinel scenarios: warm migration chains.
 
 `run_migration_chain` drives a small local `FingerService` through the
 full serving lifecycle — mixed-n ticks, a warm `repad` grow, more
@@ -8,6 +8,14 @@ tick and both migrations execute with **zero** XLA compiles outside the
 explicit warm-up calls. This is the mechanical form of the repo's
 pause-free-migration claim: all compilation happens in
 `warm_next_layouts` (serving idle time), never in the serving path.
+
+`run_sparse_chain` is the slot-space counterpart: a
+``method="sparse_tick"`` service over a huge *virtual* n_pad runs
+ingest (SlotMap translation) → a free virtual `repad` → a warm
+`grow_capacity` (with a tick prefetched across the migration) → more
+ticks, all at zero compiles — pinning the sparse path's two headline
+migration claims (virtual repads cost nothing; warmed capacity growth
+never pauses serving).
 
 Run standalone via ``python -m repro.analysis sentinel`` or as part of
 the default ``python -m repro.analysis`` gate.
@@ -25,6 +33,8 @@ from repro.serving import FingerService, ServiceConfig, TopKSpec
 
 _B, _N_PAD, _K_PAD = 4, 16, 3
 _GROW_N_PAD = 32
+# sparse chain: a deliberately huge virtual space over tiny capacities
+_S_VIRTUAL, _S_SLOTS, _S_MPAD = 1 << 20, 16, 32
 
 
 def _graphs():
@@ -103,4 +113,56 @@ def run_migration_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
         "phases": phases,
         "ticks_per_phase": ticks_per_phase,
         "generations": 2,
+    }
+
+
+def run_sparse_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
+    """The sparse ingest → virtual repad → warm grow_capacity → tick
+    chain at zero compiles. Returns a report of per-phase counts;
+    raises `CompileBudgetExceeded` on any serving-path compile."""
+    config = ServiceConfig(batch_size=_B, n_pad=_S_VIRTUAL,
+                           k_pad=_K_PAD, method="sparse_tick",
+                           n_slots=_S_SLOTS, m_pad=_S_MPAD,
+                           placement="local", ingestion="sync",
+                           topk=TopKSpec(k=2))
+    graphs = _graphs()
+    phases: Dict[str, int] = {}
+
+    with FingerService.open(config, graphs) as svc:
+        # Warm-up tick (generation-0 compile) + idle-time warming of
+        # the predicted doubled capacity (plan + grow transform).
+        _run_ticks(svc, graphs, _S_VIRTUAL, seeds=[0])
+        svc.warm_next_layouts([(2 * _S_SLOTS, 2 * _S_MPAD)])
+
+        with compile_budget(0, "sparse ingest -> virtual repad -> "
+                               "warm grow_capacity -> ticks") as c1:
+            _run_ticks(svc, graphs, _S_VIRTUAL,
+                       seeds=range(1, 1 + ticks_per_phase))
+            # A virtual repad is a host-side bound bump: no device
+            # array, compiled program or queued slot-space delta
+            # depends on n_pad, so it must compile (and copy) nothing.
+            svc.repad(2 * _S_VIRTUAL)
+            _run_ticks(svc, graphs, 2 * _S_VIRTUAL,
+                       seeds=range(10, 10 + ticks_per_phase))
+            # Prefetch one tick ACROSS the capacity migration: the
+            # queued slot-space delta is re-embedded by a static size
+            # swap, then served by the pre-warmed grown plan.
+            svc.ingest(_tick_deltas(graphs, 2 * _S_VIRTUAL, seed=99))
+            svc.grow_capacity(n_slots=2 * _S_SLOTS,
+                              m_pad=2 * _S_MPAD)
+            assert svc.poll() is not None
+            _run_ticks(svc, graphs, 2 * _S_VIRTUAL,
+                       seeds=range(20, 20 + ticks_per_phase))
+        phases["sparse_ingest_repad_grow"] = c1.count
+
+        scores = svc.scores()
+        assert scores is not None and scores.shape == (_B,)
+
+    return {
+        "ok": True,
+        "budget_per_phase": 0,
+        "phases": phases,
+        "ticks_per_phase": ticks_per_phase,
+        "capacity": [svc.capacity.n_slots, svc.capacity.m_pad],
+        "virtual_n_pad": svc.layout.n_pad,
     }

@@ -20,6 +20,15 @@ from repro.core.jsdist import (
     jsdist_stream,
     jsdist_tilde,
 )
+from repro.core.sparse import (
+    SlotMap,
+    SparseCapacityError,
+    SparseLayout,
+    SparseStreamState,
+    sparse_jsdist_tick,
+    sparse_state_from_graph,
+    sparse_states_from_graphs,
+)
 from repro.core.state import FingerState, finger_state
 from repro.core.vnge import (
     exact_vnge,
@@ -36,4 +45,7 @@ __all__ = [
     "average_graph", "js_distance", "jsdist_fast",
     "jsdist_exact", "jsdist_tilde", "jsdist_incremental", "jsdist_stream",
     "theorem1_bounds", "scaled_approximation_error",
+    "SparseLayout", "SparseStreamState", "SlotMap",
+    "SparseCapacityError", "sparse_jsdist_tick",
+    "sparse_state_from_graph", "sparse_states_from_graphs",
 ]

@@ -167,6 +167,8 @@ def stack_deltas(deltas: Sequence[GraphDelta]) -> GraphDelta:
                       (d.node_ids is not None for d in deltas))
     _check_consistent("stack_deltas", "layout_generation",
                       (d.layout_generation for d in deltas))
+    _check_consistent("stack_deltas", "edge_slots presence",
+                      (d.edge_slots is not None for d in deltas))
     if deltas[0].node_ids is not None:
         _check_consistent("stack_deltas", "j_pad",
                           (d.node_ids.shape[-1] for d in deltas))
@@ -195,14 +197,25 @@ class StreamEngine:
         self.method = method
 
         # The per-stream step keeps a non-batched spelling for scan /
-        # compatibility callers; the megakernel is a whole-tick fusion,
-        # so its closest single-stream analog is the compact path.
-        step_method = "compact" if method == "fused_tick" else method
+        # compatibility callers; the megakernels are whole-tick fusions,
+        # so their closest single-stream analog is the compact path.
+        step_method = "compact" if method in ("fused_tick",
+                                              "sparse_tick") else method
 
-        def step(state: FingerState, delta: GraphDelta):
-            return jsdist_incremental(state, delta,
-                                      exact_smax=exact_smax,
-                                      method=step_method)
+        if method == "sparse_tick":
+            # Slot-space streams: the state is a SparseStreamState and
+            # deltas are SlotMap-translated (see `repro.core.sparse`).
+            from repro.core.sparse import sparse_jsdist_tick
+
+            def step(state, delta: GraphDelta):
+                return sparse_jsdist_tick(state, delta,
+                                          exact_smax=exact_smax,
+                                          method="compact")
+        else:
+            def step(state: FingerState, delta: GraphDelta):
+                return jsdist_incremental(state, delta,
+                                          exact_smax=exact_smax,
+                                          method=step_method)
 
         self._step = step
         self._vstep = jax.vmap(step)
@@ -211,6 +224,12 @@ class StreamEngine:
 
             def tick_body(states: FingerState, deltas: GraphDelta):
                 return stream_tick_fused(states, deltas,
+                                         exact_smax=exact_smax)
+        elif method == "sparse_tick":
+            from repro.kernels.sparse_tick.ops import sparse_tick_fused
+
+            def tick_body(states, deltas: GraphDelta):
+                return sparse_tick_fused(states, deltas,
                                          exact_smax=exact_smax)
         else:
             tick_body = self._vstep
@@ -237,6 +256,14 @@ class StreamEngine:
         (B, n_pad) program. Uniform batches get an all-ones mask — the
         compiled tick is identical either way, so mixed-`n` serving
         costs nothing extra.
+
+        The state is computed on the *unpadded* graph and only the
+        node-space arrays (strengths, mask) are embedded into the
+        layout: padding commutes with the FINGER statistics (padded
+        slots carry zero strength, contributing nothing to S, Q or
+        s_max), and padding the graph itself would materialize an
+        (n_pad, n_pad) weights matrix — 40 GB per stream at the sparse
+        path's n_pad = 1e5 virtual bound.
         """
         graphs = list(graphs)
         if layout is None:
@@ -252,8 +279,33 @@ class StreamEngine:
             raise ValueError(
                 f"init_states: stream(s) {too_big} have n_nodes > "
                 f"n_pad={layout.n_pad}")
-        return stack_states([finger_state(g.pad_to(layout), layout=layout)
-                             for g in graphs])
+
+        def embed(g) -> FingerState:
+            st = finger_state(g)
+            n = g.n_nodes
+            strengths = jnp.pad(st.strengths, (0, layout.n_pad - n))
+            mask = layout.embed_mask(g.node_mask, n,
+                                     dtype=strengths.dtype)
+            return FingerState(q=st.q, s_total=st.s_total,
+                               s_max=st.s_max, strengths=strengths,
+                               node_mask=mask, layout=layout)
+
+        return stack_states([embed(g) for g in graphs])
+
+    @staticmethod
+    def init_sparse_states(graphs, layout, n_virtual: int):
+        """Initial stacked `SparseStreamState` + per-stream `SlotMap`s.
+
+        The slot-space counterpart of `init_states` for
+        ``method="sparse_tick"``: every graph's active nodes/edges are
+        assigned device slots in a shared `SparseLayout` capacity, and
+        the returned host-side slot maps own all future virtual-id →
+        slot translation (serving ingestion calls them per delta).
+        """
+        from repro.core.sparse import sparse_states_from_graphs
+
+        return sparse_states_from_graphs(list(graphs), layout,
+                                         n_virtual=int(n_virtual))
 
     # -- persistence -----------------------------------------------------
     def save(self, ckpt_dir: str, states: FingerState, step: int = 0,
@@ -270,6 +322,14 @@ class StreamEngine:
         (int / ``("keep_every_n", n, k)`` / callable); ``keep_last`` is
         the legacy int spelling.
         """
+        if not isinstance(states, FingerState):
+            raise NotImplementedError(
+                "StreamEngine.save: checkpointing sparse slot-space "
+                "states is not supported yet — the host SlotMap "
+                "assignments are part of the stream state and the "
+                "stream_engine_state manifest has no home for them; "
+                "rebuild sparse streams from their source graphs on "
+                "restart instead")
         # Reserved keys win over caller metadata: restore() depends on
         # them to rebuild the pytree and validate the engine config.
         meta = dict(metadata or {})

@@ -352,6 +352,13 @@ class GraphDelta:
     name when that chain is unknown. Ingestion strips the field before
     anything reaches a compiled tick, so it never fragments the jit
     cache.
+
+    ``edge_slots`` (optional) is the sparse-path edge-store addressing:
+    for a delta already translated into *slot space* by a
+    `repro.core.sparse.SlotMap`, ``edge_slots[k]`` names the slot of
+    edge k in the stream's padded (m_pad,) edge-weight store (the
+    `EDGE_SLOT_SENTINEL` value on padding/gated lanes, which every
+    ``mode="drop"`` scatter ignores). Dense-path deltas leave it None.
     """
 
     senders: jax.Array  # (k_pad,) int32
@@ -363,6 +370,7 @@ class GraphDelta:
     node_ids: Optional[jax.Array] = None  # (j_pad,) int32
     node_flag: Optional[jax.Array] = None  # (j_pad,) float +1/-1/0
     layout_generation: Optional[int] = None  # static; None = unstamped
+    edge_slots: Optional[jax.Array] = None  # (k_pad,) int32; sparse only
 
     @property
     def n(self) -> int:
@@ -399,6 +407,7 @@ class GraphDelta:
             dw=self.dw * factor, w_old=self.w_old, mask=self.mask,
             n_nodes=self.n_nodes, node_ids=self.node_ids, node_flag=flag,
             layout_generation=self.layout_generation,
+            edge_slots=self.edge_slots,
         )
 
     def delta_strengths(self, n: Optional[int] = None) -> jax.Array:
@@ -518,6 +527,7 @@ def gate_delta_by_nodes(delta: GraphDelta,
         n_nodes=delta.n_nodes,
         node_ids=delta.node_ids, node_flag=delta.node_flag,
         layout_generation=delta.layout_generation,
+        edge_slots=delta.edge_slots,
     )
 
 

@@ -1,0 +1,52 @@
+"""Interpret-vs-oracle parity for the ``sparse_tick`` kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sparse import SparseLayout, sparse_states_from_graphs
+from repro.engine import stack_deltas
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.types import GraphDelta
+from repro.kernels.parity import assert_close
+from repro.kernels.sparse_tick.ops import sparse_tick_fused
+from repro.kernels.sparse_tick.ref import sparse_tick_ref
+
+
+def check_parity(record=None) -> None:
+    rng = np.random.default_rng(11)
+    n_virtual, k_pad, b = 4096, 8, 8
+    ns = [int(n) for n in np.linspace(10, 30, b).astype(int)]
+    graphs = [erdos_renyi(n, 0.2, seed=s, weighted=True)
+              for s, n in enumerate(ns)]
+    layout = SparseLayout(n_slots=64, m_pad=256)
+    states, slot_maps = sparse_states_from_graphs(
+        graphs, layout, n_virtual=n_virtual)
+    ds = []
+    for g, sm in zip(graphs, slot_maps):
+        n = g.n_nodes
+        iu, ju = np.triu_indices(n, k=1)
+        pick = rng.choice(len(iu), size=4, replace=False)
+        ii, jj = iu[pick], ju[pick]
+        w_old = np.asarray(g.weights)[ii, jj]
+        dw = np.where(w_old > 0, -w_old, 0.8).astype(np.float32)
+        # a join deep inside the virtual space no dense n_pad=64 layout
+        # could address, plus its first edge
+        ii = np.concatenate([ii, [n_virtual - 1]])
+        jj = np.concatenate([jj, [0]])
+        dw = np.concatenate([dw, [0.6]]).astype(np.float32)
+        w_old = np.concatenate([w_old, [0.0]]).astype(np.float32)
+        virt = GraphDelta.from_arrays(
+            ii, jj, dw, w_old, n_nodes=n_virtual, k_pad=k_pad,
+            join=[n_virtual - 1], j_pad=2)
+        ds.append(sm.translate(virt))
+    stacked = stack_deltas(ds)
+    d_got, s_got = sparse_tick_fused(states, stacked, exact_smax=True)
+    d_want, s_want = sparse_tick_ref(states, stacked, exact_smax=True)
+    assert_close("sparse_tick dist", d_got, d_want, atol=1e-5)
+    for field in ("q", "s_total", "s_max", "strengths", "node_mask",
+                  "edge_weights"):
+        assert_close(f"sparse_tick {field}", getattr(s_got, field),
+                     getattr(s_want, field), atol=1e-5)
+    if record is not None:
+        record("sparse_tick_b8_s64", lambda: sparse_tick_fused(
+            states, stacked, exact_smax=True)[0])

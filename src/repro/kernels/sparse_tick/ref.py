@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused sparse batched serving tick.
+
+The reference semantics of one sparse serving tick have one home —
+`core.sparse.sparse_jsdist_tick` (two Theorem-2 updates through the
+slot-universe view plus the edge-store scatter) — and the batched form
+is its vmap over the leading stream axis. The Pallas kernel in
+kernel.py must match this function to tolerance on every path:
+join/leave node slots, edge-store allocation/free lanes, graph-emptying
+and reviving deltas, and empty (all-masked) ticks. Because the
+slot-space state carries exactly the virtual graph's FINGER statistics
+(relabeling invariance), matching this oracle also means matching the
+dense `stream_tick` path on any graph both layouts can hold — the
+property `tests/test_sparse_tick.py` checks directly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core.sparse import SparseStreamState, sparse_jsdist_tick
+from repro.graphs.types import GraphDelta
+
+__all__ = ["sparse_tick_ref"]
+
+
+def sparse_tick_ref(
+    states: SparseStreamState,
+    deltas: GraphDelta,
+    exact_smax: bool = False,
+    method: str = "compact",
+) -> Tuple[jax.Array, SparseStreamState]:
+    """Vmapped sparse Algorithm-2 tick: (B,) JSdist + updated states.
+
+    ``method`` selects the per-stream Δ-statistics path ("compact" is
+    the O(Δm) production default; "dense" here means an O(n_slots)
+    scatter — still independent of the virtual n_pad).
+    """
+    return jax.vmap(
+        lambda s, d: sparse_jsdist_tick(
+            s, d, exact_smax=exact_smax, method=method)
+    )(states, deltas)

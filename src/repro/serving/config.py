@@ -22,7 +22,7 @@ from repro.train.checkpoint import PrunePolicy
 
 PLACEMENTS = ("local", "sharded", "multipod")
 INGESTIONS = ("sync", "double_buffered")
-METHODS = ("dense", "compact", "fused_tick")
+METHODS = ("dense", "compact", "fused_tick", "sparse_tick")
 
 
 class ServiceConfigError(ValueError):
@@ -136,11 +136,21 @@ class ServiceConfig:
     j_pad : node join/leave slots per delta (None = deltas carry no
         node slots).
     method : update path — ``"dense"`` / ``"compact"`` Δ-statistics
-        through the vmapped op chain, or ``"fused_tick"`` for the
+        through the vmapped op chain, ``"fused_tick"`` for the
         single-pass batched Pallas megakernel
         (`repro.kernels.stream_tick`; one kernel launch per tick,
         interpret mode off TPU, oversized tiles fall back to the
-        vmapped chain).
+        vmapped chain), or ``"sparse_tick"`` for the slot-space sparse
+        path (`repro.kernels.sparse_tick`): per-stream state is sized
+        by the ``n_slots``/``m_pad`` capacities while ``n_pad`` becomes
+        a purely *virtual* addressing bound — no device array scales
+        with it, so `repad` is a free host-side bump and tick cost is
+        flat in n_pad.
+    n_slots : sparse only — active-node slot capacity per stream
+        (device arrays are (B, n_slots), grown via
+        `FingerService.grow_capacity`). Must be None for dense methods.
+    m_pad : sparse only — edge-store slot capacity per stream. Must be
+        None for dense methods.
     exact_smax : recompute s_max exactly after deletions (O(n)/stream).
     placement : ``"local"`` (single-device vmap), ``"sharded"``
         (shard_map over ``(data_axis,)``), or ``"multipod"``
@@ -170,6 +180,8 @@ class ServiceConfig:
     n_pad: int
     k_pad: int
     j_pad: Optional[int] = None
+    n_slots: Optional[int] = None
+    m_pad: Optional[int] = None
     method: str = "dense"
     exact_smax: bool = False
     placement: str = "local"
@@ -201,6 +213,30 @@ class ServiceConfig:
         if self.method not in METHODS:
             raise ServiceConfigError(
                 f"method {self.method!r} not in {METHODS}")
+        if self.method == "sparse_tick":
+            if self.n_slots is None or self.n_slots <= 0:
+                raise ServiceConfigError(
+                    f"method='sparse_tick' needs a positive n_slots "
+                    f"slot capacity, got {self.n_slots}")
+            if self.m_pad is None or self.m_pad <= 0:
+                raise ServiceConfigError(
+                    f"method='sparse_tick' needs a positive m_pad "
+                    f"edge-store capacity, got {self.m_pad}")
+            if self.checkpoint.directory is not None:
+                raise ServiceConfigError(
+                    "method='sparse_tick' does not support "
+                    "checkpointing (the host-side SlotMap assignments "
+                    "are part of the stream state and are not "
+                    "serialized); set checkpoint.directory=None and "
+                    "rebuild sparse streams from their source graphs "
+                    "on restart")
+        else:
+            if self.n_slots is not None or self.m_pad is not None:
+                raise ServiceConfigError(
+                    f"n_slots/m_pad are sparse-only capacities; "
+                    f"method={self.method!r} sizes its state by n_pad "
+                    f"alone (got n_slots={self.n_slots}, "
+                    f"m_pad={self.m_pad})")
         if self.placement not in PLACEMENTS:
             raise ServiceConfigError(
                 f"placement {self.placement!r} not in {PLACEMENTS}")

@@ -91,7 +91,35 @@ def validate_stacked_delta(config: ServiceConfig,
             f"stacked delta k_pad {k_pad} != config.k_pad="
             f"{config.k_pad}; a different edge-slot width would "
             "recompile the serving tick")
-    if deltas.n_nodes != config.n_pad:
+    if config.method == "sparse_tick":
+        if deltas.edge_slots is None:
+            raise IngestError(
+                "sparse serving queues hold slot-space deltas, but "
+                "this one carries no edge_slots (it is still addressed "
+                "in the virtual space); pass the B per-stream virtual "
+                "deltas to FingerService.ingest as a sequence — the "
+                "service translates each through its stream's SlotMap "
+                "(stateful, tick-ordered), which a pre-stacked delta "
+                "bypasses")
+        if deltas.n_nodes != config.n_slots:
+            raise IngestError(
+                f"slot-space delta n_slots {deltas.n_nodes} != "
+                f"config.n_slots={config.n_slots}; after a "
+                "grow_capacity(), queued deltas are re-embedded "
+                "automatically — a mismatch here means the delta was "
+                "translated against a stale capacity")
+        if deltas.edge_slots.shape != deltas.dw.shape:
+            raise IngestError(
+                f"delta edge_slots shape "
+                f"{tuple(deltas.edge_slots.shape)} != dw shape "
+                f"{tuple(deltas.dw.shape)}")
+    elif deltas.edge_slots is not None:
+        raise IngestError(
+            f"delta carries edge_slots (a sparse slot-space delta) but "
+            f"config.method={config.method!r} serves the dense path; "
+            "slot-space deltas only make sense under "
+            "method='sparse_tick'")
+    elif deltas.n_nodes != config.n_pad:
         raise IngestError(
             f"stacked delta n_pad {deltas.n_nodes} != config.n_pad="
             f"{config.n_pad}; after a repad, rebuild deltas with the "

@@ -227,6 +227,65 @@ def truncate_stacked(states: FingerState, new_layout: NodeLayout,
     return _truncate_jit(out_shardings)(states, new_layout=new_layout)
 
 
+def _grow_sparse_impl(states, new_layout):
+    from repro.core.sparse import SparseStreamState
+
+    dn = new_layout.n_slots - states.strengths.shape[-1]
+    dm = new_layout.m_pad - states.edge_weights.shape[-1]
+    pad_n = [(0, 0)] * (states.strengths.ndim - 1) + [(0, dn)]
+    pad_m = [(0, 0)] * (states.edge_weights.ndim - 1) + [(0, dm)]
+    return SparseStreamState(
+        q=states.q, s_total=states.s_total, s_max=states.s_max,
+        strengths=jnp.pad(states.strengths, pad_n),
+        node_mask=jnp.pad(states.node_mask, pad_n),
+        edge_weights=jnp.pad(states.edge_weights, pad_m),
+        layout=new_layout)
+
+
+@functools.lru_cache(maxsize=None)
+def _grow_sparse_jit(out_shardings):
+    kwargs = {} if out_shardings is None \
+        else {"out_shardings": out_shardings}
+    return jax.jit(_grow_sparse_impl, static_argnames=("new_layout",),
+                   **kwargs)
+
+
+def grow_sparse_stacked(states, new_layout, out_shardings=None):
+    """Embed a stacked `SparseStreamState` into grown capacities, on
+    device — the sparse counterpart of `grow_stacked`.
+
+    Slot ids are preserved (growth appends free slots), so no state
+    renumbering, no delta remap, and — unlike a dense repad — no
+    dependence on the virtual n_pad at all: growing from
+    (n_slots, m_pad) to the new capacities pads the (B, n_slots)
+    strengths/mask and the (B, m_pad) edge store with inactive zeros,
+    which is exact for every FINGER statistic.
+    """
+    old_n = int(states.strengths.shape[-1])
+    old_m = int(states.edge_weights.shape[-1])
+    if new_layout.n_slots < old_n or new_layout.m_pad < old_m:
+        raise LayoutMigrationError(
+            f"grow_sparse_stacked: new capacities (n_slots="
+            f"{new_layout.n_slots}, m_pad={new_layout.m_pad}) shrink "
+            f"the current ({old_n}, {old_m}); sparse capacity only "
+            "grows (freed slots are reused by the SlotMap, so there is "
+            "nothing to compact)")
+    return _grow_sparse_jit(out_shardings)(states, new_layout=new_layout)
+
+
+def embed_sparse_delta(delta: GraphDelta, new_n_slots: int) -> GraphDelta:
+    """Re-address a slot-space delta into a grown slot capacity. Slot
+    ids (including the edge-slot sentinel, which is out of range for
+    every capacity) are unchanged by a growth, so this only swaps the
+    static slot-space size — no array work, no transfer (what
+    `grow_capacity` applies to the in-flight queue)."""
+    if new_n_slots < delta.n_nodes:
+        raise LayoutMigrationError(
+            f"embed_sparse_delta: new_n_slots={new_n_slots} < delta "
+            f"slot space {delta.n_nodes}")
+    return dataclasses.replace(delta, n_nodes=int(new_n_slots))
+
+
 def live_slot_count(states: FingerState) -> int:
     """Number of slots live in *any* stream — ONE scalar device
     reduction + host readback (the only transfer `compact()` needs

@@ -51,6 +51,69 @@ from repro.graphs.types import GraphDelta
 from repro.serving.config import ServiceConfig, ServiceConfigError
 
 
+def dummy_tick_args(config: ServiceConfig, layout):
+    """Zero-filled (states, deltas) of exactly the shapes/statics the
+    serving tick compiles for under ``config`` at ``layout``.
+
+    The single source of dummy-argument truth shared by
+    `ExecutionPlan.warm_tick` and the static-analysis gate
+    (`analysis.hlo_audit`) — both must populate/audit the *same* jit
+    cache entry the real tick hits. ``layout`` is a `NodeLayout` for
+    the dense methods and a `core.sparse.SparseLayout` for
+    ``method="sparse_tick"`` (sparse dummies are slot-space: deltas
+    carry ``edge_slots`` and are addressed in n_slots, never n_pad).
+    """
+    c = config
+    b, k, j = c.batch_size, c.k_pad, c.j_pad
+    f32, i32 = jnp.float32, jnp.int32
+    if c.method == "sparse_tick":
+        from repro.core.sparse import (EDGE_SLOT_SENTINEL, SparseLayout,
+                                       SparseStreamState)
+        if not isinstance(layout, SparseLayout):
+            raise ServiceConfigError(
+                f"method='sparse_tick' ticks over a SparseLayout, got "
+                f"{type(layout).__name__}")
+        if layout.n_slots != c.n_slots or layout.m_pad != c.m_pad:
+            raise ServiceConfigError(
+                f"layout capacities (n_slots={layout.n_slots}, "
+                f"m_pad={layout.m_pad}) disagree with the config "
+                f"(n_slots={c.n_slots}, m_pad={c.m_pad})")
+        n, m = layout.n_slots, layout.m_pad
+        states = SparseStreamState(
+            q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
+            s_max=jnp.zeros((b,), f32),
+            strengths=jnp.zeros((b, n), f32),
+            node_mask=jnp.zeros((b, n), f32),
+            edge_weights=jnp.zeros((b, m), f32), layout=layout)
+        deltas = GraphDelta(
+            senders=jnp.zeros((b, k), i32),
+            receivers=jnp.zeros((b, k), i32),
+            dw=jnp.zeros((b, k), f32), w_old=jnp.zeros((b, k), f32),
+            mask=jnp.zeros((b, k), f32), n_nodes=n,
+            node_ids=None if j is None else jnp.zeros((b, j), i32),
+            node_flag=None if j is None else jnp.zeros((b, j), f32),
+            edge_slots=jnp.full((b, k), int(EDGE_SLOT_SENTINEL), i32))
+        return states, deltas
+    if layout.n_pad != c.n_pad:
+        raise ServiceConfigError(
+            f"warm_tick: layout n_pad={layout.n_pad} != this "
+            f"plan's config.n_pad={c.n_pad}")
+    n = layout.n_pad
+    states = FingerState(
+        q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
+        s_max=jnp.zeros((b,), f32),
+        strengths=jnp.zeros((b, n), f32),
+        node_mask=jnp.zeros((b, n), f32), layout=layout)
+    deltas = GraphDelta(
+        senders=jnp.zeros((b, k), i32),
+        receivers=jnp.zeros((b, k), i32),
+        dw=jnp.zeros((b, k), f32), w_old=jnp.zeros((b, k), f32),
+        mask=jnp.zeros((b, k), f32), n_nodes=n,
+        node_ids=None if j is None else jnp.zeros((b, j), i32),
+        node_flag=None if j is None else jnp.zeros((b, j), f32))
+    return states, deltas
+
+
 def _mesh_axis_size(mesh: Mesh, axis: str) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if axis not in sizes:
@@ -140,31 +203,15 @@ class ExecutionPlan:
         of the declared shapes.
 
         The dummy tick populates exactly the jit cache entry the real
-        tick will hit — same shapes, same static `NodeLayout`
-        (generation included), same shardings (the dummies go through
-        `shard_states`/`put_deltas`) — so a migration that installs
-        this plan pays no compile pause. Called by `PlanCache.warm`
-        with the *predicted* post-migration layout.
+        tick will hit — same shapes, same static layout (generation
+        included; a `NodeLayout` for dense methods, a `SparseLayout`
+        under ``method="sparse_tick"``), same shardings (the dummies
+        go through `shard_states`/`put_deltas`) — so a migration that
+        installs this plan pays no compile pause. Called by
+        `PlanCache.warm` with the *predicted* post-migration layout.
         """
         c = self.config
-        if layout.n_pad != c.n_pad:
-            raise ServiceConfigError(
-                f"warm_tick: layout n_pad={layout.n_pad} != this "
-                f"plan's config.n_pad={c.n_pad}")
-        b, n, k, j = c.batch_size, layout.n_pad, c.k_pad, c.j_pad
-        f32, i32 = jnp.float32, jnp.int32
-        states = FingerState(
-            q=jnp.zeros((b,), f32), s_total=jnp.zeros((b,), f32),
-            s_max=jnp.zeros((b,), f32),
-            strengths=jnp.zeros((b, n), f32),
-            node_mask=jnp.zeros((b, n), f32), layout=layout)
-        deltas = GraphDelta(
-            senders=jnp.zeros((b, k), i32),
-            receivers=jnp.zeros((b, k), i32),
-            dw=jnp.zeros((b, k), f32), w_old=jnp.zeros((b, k), f32),
-            mask=jnp.zeros((b, k), f32), n_nodes=n,
-            node_ids=None if j is None else jnp.zeros((b, j), i32),
-            node_flag=None if j is None else jnp.zeros((b, j), f32))
+        states, deltas = dummy_tick_args(c, layout)
         states = self.shard_states(states)
         deltas = self.put_deltas(deltas)
         dists, _ = self.tick(states, deltas)
@@ -344,8 +391,14 @@ class PlanCache:
 
     @staticmethod
     def _key(config: ServiceConfig, mesh: Optional[Mesh]) -> tuple:
-        return (config.batch_size, config.n_pad, config.k_pad,
-                config.j_pad, config.method, config.exact_smax,
+        # Under the sparse method n_pad is the *virtual* addressing
+        # bound — a host-side number no compiled program depends on —
+        # so a free virtual repad between warm() and get() must not
+        # invalidate a warm plan. Key on None instead.
+        n_pad = None if config.method == "sparse_tick" else config.n_pad
+        return (config.batch_size, n_pad, config.k_pad,
+                config.j_pad, config.n_slots, config.m_pad,
+                config.method, config.exact_smax,
                 config.placement, config.data_axis, config.pod_axis,
                 None if mesh is None else id(mesh))
 
@@ -373,8 +426,15 @@ class PlanCache:
         config (compilation correctness only depends on the config);
         its first tick just compiles cold."""
         hit = self._plans.pop(self._key(config, mesh), None)
-        if hit is not None and hit[0].config == config:
-            return hit[0]
+        if hit is not None:
+            cached = hit[0].config
+            if config.method == "sparse_tick":
+                # Accept a plan warmed before a virtual repad: n_pad is
+                # host-side only, so align it instead of recompiling.
+                cached = cached.with_(n_pad=config.n_pad)
+            if cached == config:
+                hit[0].config = cached
+                return hit[0]
         return build_plan(config, mesh)
 
 

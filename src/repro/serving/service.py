@@ -107,17 +107,47 @@ class FingerService:
     def __init__(self, config: ServiceConfig, plan: ExecutionPlan,
                  states: FingerState, step: int = 0,
                  remaps: Optional[Dict[int, np.ndarray]] = None,
-                 remaps_gen: Optional[Dict[int, np.ndarray]] = None):
+                 remaps_gen: Optional[Dict[int, np.ndarray]] = None,
+                 slot_maps: Optional[list] = None):
         self._config = config
         self._plan = plan
         self._states = states
         self._step = step
-        self._layout = states.layout if states.layout is not None \
-            else NodeLayout(config.n_pad)
-        if self._layout.n_pad != config.n_pad:
-            raise ServiceConfigError(
-                f"FingerService: state layout n_pad="
-                f"{self._layout.n_pad} != config.n_pad={config.n_pad}")
+        if config.method == "sparse_tick":
+            # Slot-space serving: the device capacity is the state's
+            # SparseLayout; config.n_pad is the *virtual* addressing
+            # bound the per-stream SlotMaps enforce host-side — no
+            # device array is sized by it.
+            self._capacity = states.layout
+            if (self._capacity.n_slots, self._capacity.m_pad) != \
+                    (config.n_slots, config.m_pad):
+                raise ServiceConfigError(
+                    f"FingerService: state capacities (n_slots="
+                    f"{self._capacity.n_slots}, m_pad="
+                    f"{self._capacity.m_pad}) != config "
+                    f"(n_slots={config.n_slots}, m_pad={config.m_pad})")
+            if slot_maps is None or len(slot_maps) != config.batch_size:
+                raise ServiceConfigError(
+                    f"FingerService: sparse serving needs one SlotMap "
+                    f"per stream "
+                    f"({0 if slot_maps is None else len(slot_maps)} "
+                    f"for batch_size={config.batch_size})")
+            self._slot_maps = list(slot_maps)
+            self._layout = NodeLayout(config.n_pad)
+        else:
+            if slot_maps is not None:
+                raise ServiceConfigError(
+                    "FingerService: slot_maps are sparse-only state "
+                    f"(method={config.method!r})")
+            self._capacity = None
+            self._slot_maps = None
+            self._layout = states.layout if states.layout is not None \
+                else NodeLayout(config.n_pad)
+            if self._layout.n_pad != config.n_pad:
+                raise ServiceConfigError(
+                    f"FingerService: state layout n_pad="
+                    f"{self._layout.n_pad} != config.n_pad="
+                    f"{config.n_pad}")
         # old n_pad -> composed old→current index map (compact() grace,
         # legacy size-keyed best effort) ...
         self._remaps: Dict[int, np.ndarray] = dict(remaps or {})
@@ -155,6 +185,15 @@ class FingerService:
                 f"exceed config.n_pad={config.n_pad}; open with a "
                 "larger n_pad (or repad() a running service)")
         plan = build_plan(config, mesh)
+        if config.method == "sparse_tick":
+            from repro.core.sparse import SparseLayout
+
+            capacity = SparseLayout(n_slots=config.n_slots,
+                                    m_pad=config.m_pad)
+            states, slot_maps = StreamEngine.init_sparse_states(
+                graphs, capacity, n_virtual=config.n_pad)
+            return cls(config, plan, plan.shard_states(states),
+                       slot_maps=slot_maps)
         states = StreamEngine.init_states(graphs, n_pad=config.n_pad)
         return cls(config, plan, plan.shard_states(states))
 
@@ -174,6 +213,12 @@ class FingerService:
         "restore onto the layout I saved under" and "restore onto the
         layout I since migrated to" work, bit-exact."""
         config.validate()
+        if config.method == "sparse_tick":
+            raise ServiceConfigError(
+                "restore: sparse slot-space services are not "
+                "checkpointable (the host-side SlotMap assignments are "
+                "part of the stream state); rebuild sparse streams "
+                "from their source graphs with FingerService.open")
         ckpt_dir = directory or config.checkpoint.directory
         if ckpt_dir is None:
             raise ServiceConfigError(
@@ -238,8 +283,22 @@ class FingerService:
 
     @property
     def layout(self) -> NodeLayout:
-        """The live `NodeLayout` (n_pad + migration generation)."""
+        """The live `NodeLayout` (n_pad + migration generation). Under
+        ``method="sparse_tick"`` the n_pad is the *virtual* addressing
+        bound — see `capacity` for the device-side sizes."""
         return self._layout
+
+    @property
+    def capacity(self):
+        """The live `SparseLayout` device capacity (n_slots, m_pad,
+        generation) under ``method="sparse_tick"``; None otherwise."""
+        return self._capacity
+
+    @property
+    def slot_maps(self) -> Optional[list]:
+        """The per-stream virtual→slot `SlotMap`s (sparse only;
+        read-only use — ingestion owns their mutation)."""
+        return self._slot_maps
 
     @property
     def pending(self) -> int:
@@ -263,9 +322,47 @@ class FingerService:
         ingestion the host→device transfer starts here, overlapping the
         in-flight tick's compute."""
         self._check_open("ingest")
+        if self._config.method == "sparse_tick":
+            self._ingestor.put(self._translate_sparse(deltas))
+            return
         if not isinstance(deltas, GraphDelta):
             deltas = stack_deltas(list(deltas))
         self._ingestor.put(deltas)
+
+    def _translate_sparse(self, deltas) -> GraphDelta:
+        """One tick's B per-stream *virtual* deltas → the stacked
+        slot-space delta, through the per-stream `SlotMap`s.
+
+        Atomic over the batch: every stream is staged (pure) before any
+        map commits, so a rejection — out-of-capacity
+        (`SparseCapacityError`), out-of-virtual-space addressing, a
+        duplicate edge lane — leaves every SlotMap exactly as it was.
+        The queue-depth check also runs first: a translated delta that
+        could not be queued would desynchronize the maps from the
+        applied ticks.
+        """
+        from repro.serving.ingest import IngestError
+
+        if isinstance(deltas, GraphDelta):
+            raise IngestError(
+                "sparse ingestion is per-stream: pass the B per-stream "
+                "virtual deltas as a sequence — the service translates "
+                "each through its stream's SlotMap (stateful, "
+                "tick-ordered) before stacking; a pre-stacked "
+                "GraphDelta bypasses that translation")
+        deltas = list(deltas)
+        if len(deltas) != self._config.batch_size:
+            raise IngestError(
+                f"sparse ingest got {len(deltas)} per-stream delta(s) "
+                f"!= config.batch_size={self._config.batch_size}")
+        if self.pending >= self._config.max_queue:
+            raise IngestError(
+                f"ingestion queue full ({self._config.max_queue} "
+                f"pending tick(s)); poll() before ingesting more")
+        staged = [sm.stage(d)
+                  for sm, d in zip(self._slot_maps, deltas)]
+        return stack_deltas([sm.commit(st)
+                             for sm, st in zip(self._slot_maps, staged)])
 
     def poll(self) -> Optional[TickReport]:
         """Advance one tick if a delta is queued; None otherwise.
@@ -324,6 +421,12 @@ class FingerService:
         """Checkpoint the stacked state (atomic write, config-declared
         prune policy). Returns the checkpoint path."""
         self._check_open("save")
+        if self._config.method == "sparse_tick":
+            raise ServiceConfigError(
+                "save: sparse slot-space states are not checkpointable "
+                "— the host-side SlotMap assignments are part of the "
+                "stream state and are not serialized; rebuild sparse "
+                "streams from their source graphs on restart instead")
         ckpt_dir = directory or self._config.checkpoint.directory
         if ckpt_dir is None:
             raise ServiceConfigError(
@@ -435,6 +538,24 @@ class FingerService:
         if new_n_pad == old:
             raise ServiceConfigError(
                 f"repad: already at n_pad={old}")
+        if self._config.method == "sparse_tick":
+            # Virtual-space bump: n_pad is a host-side addressing bound
+            # only — no device array, no compiled program and no queued
+            # slot-space delta depends on it — so the migration is free:
+            # no state transform, no plan swap, no compile, no journal.
+            if new_n_pad < old:
+                raise LayoutMigrationError(
+                    f"repad: the sparse virtual space only grows "
+                    f"(new_n_pad={new_n_pad} < {old}); nothing is "
+                    "sized by n_pad, so shrinking it reclaims nothing")
+            self._config = self._config.with_(n_pad=new_n_pad)
+            self._plan.config = self._plan.config.with_(n_pad=new_n_pad)
+            self._ingestor.config = self._config
+            for sm in self._slot_maps:
+                sm.grow_virtual(new_n_pad)
+            self._layout = NodeLayout(
+                new_n_pad, generation=self._layout.generation)
+            return
         if new_n_pad > old:
             migrate.check_journalable(self._config.checkpoint.directory,
                                       self._layout.generation)
@@ -532,6 +653,13 @@ class FingerService:
         untouched with ``reclaimed == 0``.
         """
         self._check_open("compact")
+        if self._config.method == "sparse_tick":
+            raise ServiceConfigError(
+                "compact: the sparse slot space self-compacts — freed "
+                "node/edge slots return to each stream's SlotMap free "
+                "list and are reused in place, so there is no "
+                "cross-stream layout to renumber (grow_capacity() is "
+                "the sparse migration)")
         n_live = migrate.live_slot_count(self._states)
         target = max(n_live, 1) if new_n_pad is None else int(new_n_pad)
         if target < n_live:
@@ -567,6 +695,50 @@ class FingerService:
             n_live=n_live, generation=new_layout.generation,
             index_map=index_map)
 
+    def grow_capacity(self, n_slots: Optional[int] = None,
+                      m_pad: Optional[int] = None):
+        """Grow the sparse device capacities (either axis) in place —
+        the ``method="sparse_tick"`` counterpart of a growing `repad`.
+
+        A jitted device-side pad of the stacked (B, n_slots) strengths/
+        mask and (B, m_pad) edge store (`migrate.grow_sparse_stacked`):
+        slot ids are preserved (growth appends free slots to every
+        stream's `SlotMap`), so no state renumbering, no delta remap —
+        prefetched queue ticks are re-embedded by a static size swap
+        only — and no ingestion grace table. The plan swaps through the
+        warm `PlanCache` when the target capacity was predicted
+        (`warm_next_layouts`), so a warmed growth pays no compile
+        pause. Returns the new `SparseLayout`.
+        """
+        self._check_open("grow_capacity")
+        if self._config.method != "sparse_tick":
+            raise ServiceConfigError(
+                f"grow_capacity: a sparse-only migration "
+                f"(method={self._config.method!r}); repad() migrates "
+                "the dense layout")
+        new_capacity = self._capacity.grown(n_slots=n_slots, m_pad=m_pad)
+        pending = self._take_pending_migrated(
+            lambda d: migrate.embed_sparse_delta(d, new_capacity.n_slots))
+        states = migrate.grow_sparse_stacked(
+            self._states, new_capacity,
+            out_shardings=self._plan.state_sharding())
+        self._config = self._config.with_(n_slots=new_capacity.n_slots,
+                                          m_pad=new_capacity.m_pad)
+        if self._config.plan_cache.enabled:
+            self._plan = self._plan_cache.get(self._config,
+                                              self._plan.mesh,
+                                              new_capacity)
+        else:
+            self._plan = build_plan(self._config, self._plan.mesh)
+        self._capacity = new_capacity
+        for sm in self._slot_maps:
+            sm.grow(new_capacity)
+        self._states = states
+        self._ingestor = self._make_ingestor()
+        for d in pending:
+            self._ingestor.put(d)
+        return new_capacity
+
     def warm_next_layouts(self, targets: Optional[Sequence[int]] = None
                           ) -> list:
         """Pre-compile execution plans (and migration transforms) for
@@ -590,11 +762,41 @@ class FingerService:
         device-side state transform (`grow_stacked` /
         `compact_stacked_auto`) on zero dummies of the current shapes.
         Returns the list of warmed n_pad targets.
+
+        Under ``method="sparse_tick"`` the targets are
+        ``(n_slots, m_pad)`` capacity pairs instead of n_pad values
+        (virtual repads are free and need no warming); the default
+        prediction scales both capacities by ``growth_factor``, and the
+        warmed transform is `grow_sparse_stacked`.
         """
         self._check_open("warm_next_layouts")
         policy = self._config.plan_cache
         if not policy.enabled:
             return []
+        if self._config.method == "sparse_tick":
+            cap = self._capacity
+            if targets is None:
+                targets = [(int(round(cap.n_slots
+                                      * policy.growth_factor)),
+                            int(round(cap.m_pad
+                                      * policy.growth_factor)))]
+            warmed = []
+            for n_slots, m_pad in targets:
+                n_slots, m_pad = int(n_slots), int(m_pad)
+                if (n_slots, m_pad) == (cap.n_slots, cap.m_pad) \
+                        or n_slots < cap.n_slots or m_pad < cap.m_pad:
+                    continue
+                new_capacity = cap.grown(n_slots=n_slots, m_pad=m_pad)
+                cfg = self._config.with_(n_slots=n_slots, m_pad=m_pad)
+                plan = self._plan_cache.warm(cfg, self._plan.mesh,
+                                             new_capacity)
+                dummy = jax.tree_util.tree_map(jnp.zeros_like,
+                                               self._states)
+                migrate.grow_sparse_stacked(
+                    dummy, new_capacity,
+                    out_shardings=plan.state_sharding())
+                warmed.append((n_slots, m_pad))
+            return warmed
         n_pad = self._layout.n_pad
         if targets is None:
             targets = []

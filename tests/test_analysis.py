@@ -292,7 +292,8 @@ class TestHloAudit:
     def test_migration_transforms_audit_clean(self):
         audits = audit_migrations(n_pad=16, batch_size=4)
         assert [a.target for a in audits] == \
-            ["migrate.grow", "migrate.compact", "migrate.truncate"]
+            ["migrate.grow", "migrate.compact", "migrate.truncate",
+             "migrate.grow_sparse"]
         for a in audits:
             assert a.ok, (a.target, [v.message for v in a.violations])
 

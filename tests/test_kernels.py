@@ -127,3 +127,79 @@ class TestEntropyProbe:
             np.eye(s, k=-1, dtype=np.float32) * 50.0 - 25.0)
         h_peaked = float(attention_graph_entropy(peaked[None])[0])
         assert h_uniform > h_peaked
+
+
+class TestParityDiscovery:
+    """`kernels.parity` auto-discovery: a new kernel package can never
+    silently skip CPU-CI parity coverage — a missing parity.py (or a
+    parity module without check_parity) fails by package name."""
+
+    def test_all_kernel_packages_discovered(self):
+        from repro.kernels.parity import (
+            discover_kernel_packages,
+            discover_parity_checks,
+        )
+
+        pkgs = discover_kernel_packages()
+        # The serving megakernels must both be covered (sparse_tick is
+        # a namespace package — no __init__.py — which the filesystem
+        # walk must still find).
+        assert "stream_tick" in pkgs and "sparse_tick" in pkgs
+        checks = discover_parity_checks()
+        assert set(checks) == set(pkgs)
+        assert all(callable(fn) for fn in checks.values())
+
+    def _tmp_package(self, files):
+        import shutil
+        from pathlib import Path
+
+        import repro.kernels as root
+
+        base = Path(list(root.__path__)[0])
+        pkg = base / "zz_tmp_parity_probe"
+        assert not pkg.exists()
+        pkg.mkdir()
+        for name, text in files.items():
+            (pkg / name).write_text(text)
+        return pkg, lambda: shutil.rmtree(pkg)
+
+    def test_package_missing_parity_module_fails_by_name(self):
+        import importlib
+
+        from repro.kernels.parity import (
+            ParityRegistrationError,
+            discover_parity_checks,
+        )
+
+        pkg, cleanup = self._tmp_package({"ops.py": ""})
+        try:
+            importlib.invalidate_caches()
+            with pytest.raises(ParityRegistrationError,
+                               match="zz_tmp_parity_probe"):
+                discover_parity_checks()
+        finally:
+            cleanup()
+            importlib.invalidate_caches()
+
+    def test_parity_module_without_check_parity_fails_by_name(self):
+        import importlib
+        import sys
+
+        from repro.kernels.parity import (
+            ParityRegistrationError,
+            discover_parity_checks,
+        )
+
+        pkg, cleanup = self._tmp_package(
+            {"ops.py": "", "parity.py": "not_check_parity = 1\n"})
+        try:
+            importlib.invalidate_caches()
+            with pytest.raises(ParityRegistrationError,
+                               match="zz_tmp_parity_probe"):
+                discover_parity_checks()
+        finally:
+            cleanup()
+            sys.modules.pop(
+                "repro.kernels.zz_tmp_parity_probe.parity", None)
+            sys.modules.pop("repro.kernels.zz_tmp_parity_probe", None)
+            importlib.invalidate_caches()
