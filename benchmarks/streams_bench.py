@@ -41,6 +41,12 @@ tracked across PRs:
   cold vs warm: ``warm_swap_ms`` pre-compiles the predicted layout via
   `FingerService.warm_next_layouts` / the `PlanCache` first, so the
   swap installs an already-compiled plan.
+- **fleet**           : the multi-tenant `repro.fleet` layer on a
+  2-bucket × 2-shard pool: per-tenant admission latency, cross-bucket
+  tenant promotion cold (first in process, includes the target plan's
+  jit compile — that is the serving pause `FingerFleet.warm` exists to
+  hide) vs warm (after ``fleet.warm()``), and shard-failure recovery
+  time (base-state restore + host WAL replay onto a surviving shard).
 
 The emitted ``BENCH_streams.json`` is schema-checked by
 ``validate_report`` (also enforced by ``benchmarks/run.py``) so a
@@ -467,6 +473,90 @@ def bench_sparse_scaling(b: int, n_active: int, n_pads, k: int,
     return rows, summary
 
 
+def bench_fleet() -> dict:
+    """Fleet-layer event latencies (one 2-bucket × 2-shard
+    `FingerFleet`): tenant admission, the cross-bucket tenant-promotion
+    pause cold (the first promotion in this process — row-hook jits and
+    any still-cold target plan included) vs warm (after
+    `FingerFleet.warm`, the steady-state pause), and shard-kill
+    recovery (base ⊕ WAL-replay rebuild onto survivors)."""
+    from repro.fleet import FingerFleet, FleetConfig, PoolSpec
+
+    spsh = 2
+    config = FleetConfig(pools=(
+        PoolSpec(name="small", n_pad=16, shards=2,
+                 streams_per_shard=spsh, k_pad=8, j_pad=2),
+        PoolSpec(name="large", n_pad=64, shards=2,
+                 streams_per_shard=spsh, k_pad=8, j_pad=2),
+    ))
+    names = [f"t{i}" for i in range(4)]
+
+    def tick(fleet, seed):
+        rng = np.random.default_rng(seed)
+        ds = {}
+        for name in names:
+            i, j = sorted(rng.choice(10, 2, replace=False).tolist())
+            ds[name] = GraphDelta.from_arrays(
+                [i], [j], [float(rng.uniform(0.5, 2.0))], [0.0],
+                n_nodes=10, k_pad=8, j_pad=2)
+        fleet.ingest(ds)
+        fleet.poll()
+
+    fleet = FingerFleet.open(config)
+    admission_ms = []
+    for i, name in enumerate(names):
+        g = erdos_renyi(10, 0.3, seed=i, weighted=True)
+        t0 = time.perf_counter()
+        fleet.admit(name, g)
+        admission_ms.append((time.perf_counter() - t0) * 1e3)
+    tick(fleet, 0)  # first tick: the pool plans compile here
+
+    t0 = time.perf_counter()
+    fleet.promote("t0")
+    cold_promotion_ms = (time.perf_counter() - t0) * 1e3
+    tick(fleet, 1)
+
+    fleet.warm()  # idle-time compile of the whole rebalance surface
+    t0 = time.perf_counter()
+    fleet.promote("t1")
+    warm_promotion_ms = (time.perf_counter() - t0) * 1e3
+    tick(fleet, 2)
+
+    # kill the small shard still hosting a tenant; one WAL-only tick,
+    # then time the rebuild onto the surviving small shard
+    shard = fleet.directory.get("t2").shard
+    victims = len(fleet.directory.tenants_on(0, shard))
+    fleet.kill_shard("small", shard)
+    tick(fleet, 3)
+    t0 = time.perf_counter()
+    reports = fleet.recover()
+    recovery_ms = (time.perf_counter() - t0) * 1e3
+    assert len(reports) == victims
+    tick(fleet, 4)
+    fleet.close()
+
+    cell = {
+        "pools": len(config.pools),
+        "shards_per_pool": config.pools[0].shards,
+        "streams_per_shard": spsh,
+        "tenants": len(names),
+        "admission_ms": float(np.mean(admission_ms)),
+        "cold_promotion_ms": cold_promotion_ms,
+        "warm_promotion_ms": warm_promotion_ms,
+        "warm_promotion_speedup":
+            cold_promotion_ms / max(warm_promotion_ms, 1e-9),
+        "recovery_ms": recovery_ms,
+        "recovered_tenants": len(reports),
+    }
+    emit("fleet_admission", cell["admission_ms"] * 1e-3)
+    emit("fleet_promotion_cold", cold_promotion_ms * 1e-3)
+    emit("fleet_promotion_warm", warm_promotion_ms * 1e-3,
+         f"{cell['warm_promotion_speedup']:.1f}x vs cold promotion")
+    emit("fleet_recovery", recovery_ms * 1e-3,
+         f"{len(reports)} tenant(s) rebuilt")
+    return cell
+
+
 _SWEEP_KEYS = ("b", "n_pad", "k_pad", "method", "interpret",
                "loop_tick_latency_us",
                "tick_latency_us", "fused_tick_latency_us",
@@ -487,6 +577,10 @@ _SPARSE_SCALING_KEYS = ("b", "n_pad", "k_pad", "n_slots", "m_pad",
 _SPARSE_CROSSOVER_KEYS = ("b", "k_pad", "n_active", "crossover_n_pad",
                           "dense_latency_growth",
                           "sparse_latency_growth")
+_FLEET_KEYS = ("pools", "shards_per_pool", "streams_per_shard",
+               "tenants", "admission_ms", "cold_promotion_ms",
+               "warm_promotion_ms", "warm_promotion_speedup",
+               "recovery_ms", "recovered_tenants")
 
 
 def _require(mapping, keys, where: str) -> None:
@@ -517,7 +611,7 @@ def validate_report(report: dict) -> dict:
     _require(report, ("bench", "method", "quick", "backend",
                       "device_count", "sweep", "ingest_overlap",
                       "mixed_n", "migration", "sparse_scaling",
-                      "sparse_crossover"), "top level")
+                      "sparse_crossover", "fleet"), "top level")
     if report["bench"] != "streams":
         raise ValueError(
             f"BENCH_streams.json: bench={report['bench']!r} != 'streams'")
@@ -550,6 +644,7 @@ def validate_report(report: dict) -> dict:
                 f"must be a boolean, got {cell['interpret']!r}")
     _require(report["sparse_crossover"], _SPARSE_CROSSOVER_KEYS,
              "sparse_crossover")
+    _require(report["fleet"], _FLEET_KEYS, "fleet")
     return report
 
 
@@ -588,6 +683,7 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
         "migration": [],
         "sparse_scaling": [],
         "sparse_crossover": None,
+        "fleet": None,
     }
     for n_pad in n_pads:
         for b in batches:
@@ -616,6 +712,7 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
             b=4 if quick else 8, n_active=64,
             n_pads=[1_000, 10_000, 100_000], k=min(k, 8),
             n_slots=128, m_pad=1024, iters=iters)
+    report["fleet"] = bench_fleet()
     validate_report(report)  # fail fast before clobbering the artifact
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)

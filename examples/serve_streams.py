@@ -28,6 +28,13 @@ keeps addressing deltas in the *original* layout throughout: the
 compaction's layout-owned index map renumbers them on ingest, which is
 exactly the grace path real producers get.
 
+``--fleet`` switches to the multi-tenant `repro.fleet` demo: a
+2-bucket × 2-shard fleet admits named tenants by best-fit bucket,
+promotes one to the big bucket mid-stream (warm — `fleet.warm()`
+pre-compiles the rebalance surface first), kills a shard and recovers
+its tenants onto survivors, and checks every tenant's score against a
+single oracle `FingerService` fed the same deltas after every tick.
+
     PYTHONPATH=src python examples/serve_streams.py --streams 256 --ticks 20
     PYTHONPATH=src python examples/serve_streams.py --mixed-n \
         --ckpt-dir /tmp/streams_ckpt
@@ -35,6 +42,7 @@ exactly the grace path real producers get.
         --ingestion double_buffered
     PYTHONPATH=src python examples/serve_streams.py --streams 64 \
         --ticks 20 --compact-every 5
+    PYTHONPATH=src python examples/serve_streams.py --fleet --ticks 12
 """
 import argparse
 import time
@@ -105,6 +113,121 @@ def leave_delta(w: np.ndarray, node: int, k_pad: int, n_pad: int,
     return d
 
 
+def fleet_demo(ticks: int) -> None:
+    """Multi-tenant fleet lifecycle: admit → serve → warm promotion →
+    shard kill → WAL-only ticks → recovery, scored against a single
+    oracle service after every tick."""
+    from repro.fleet import FingerFleet, FleetConfig, PoolSpec
+    from repro.serving.migrate import embed_delta
+
+    k_pad, j_pad = 4, 2
+    cfg = FleetConfig(pools=(
+        PoolSpec(name="small", n_pad=16, shards=2, streams_per_shard=2,
+                 k_pad=k_pad, j_pad=j_pad),
+        PoolSpec(name="large", n_pad=48, shards=2, streams_per_shard=2,
+                 k_pad=k_pad, j_pad=j_pad),
+    ))
+    rng = np.random.default_rng(7)
+    names = ["alpha", "beta", "gamma", "delta"]
+    sizes = {"alpha": 10, "beta": 8, "gamma": 12, "delta": 24}
+    graphs = {n: erdos_renyi(sizes[n], 0.4, seed=i, weighted=True)
+              for i, n in enumerate(names)}
+
+    # The oracle: one FingerService fed every tenant's deltas in one
+    # shared layout. The fleet must match it no matter how it shuffles
+    # tenants between shards underneath.
+    o_pad = cfg.pools[-1].n_pad
+    oracle = FingerService.open(
+        ServiceConfig(batch_size=len(names), n_pad=o_pad, k_pad=k_pad,
+                      j_pad=j_pad, topk=TopKSpec(k=len(names))),
+        [graphs[n] for n in names])
+    z = np.zeros((0,), np.float32)
+    o_empty = GraphDelta.from_arrays(z, z, z, z, n_nodes=0, n_pad=o_pad,
+                                     k_pad=k_pad, j_pad=j_pad)
+
+    def tenant_delta(name):
+        n = sizes[name]
+        i, j = sorted(rng.choice(n, 2, replace=False).tolist())
+        return GraphDelta.from_arrays(
+            [i], [j], [float(rng.uniform(0.5, 5.0))], [0.0],
+            n_nodes=n, k_pad=k_pad, j_pad=j_pad)
+
+    def tick(fleet, live=None):
+        ds = {n: tenant_delta(n) for n in (live or names)}
+        fleet.ingest(ds)
+        fleet.poll()
+        oracle.ingest([embed_delta(ds[n], o_pad) if n in ds else o_empty
+                       for n in names])
+        oracle.poll()
+        ref = np.asarray(oracle.scores()).ravel()
+        got = fleet.scores()
+        worst = max(abs(got[n] - float(ref[i]))
+                    for i, n in enumerate(names) if n in got)
+        return got, worst
+
+    fleet = FingerFleet.open(cfg)
+    for n in names:
+        e = fleet.admit(n, graphs[n])
+        pool = cfg.pools[e.pool].name
+        print(f"admit {n:6s} (n={sizes[n]:2d}) -> pool {pool!r} "
+              f"shard {e.shard} slot {e.slot}")
+
+    phase_ticks = max(2, ticks // 4)
+    for _ in range(phase_ticks):
+        _, worst = tick(fleet)
+        print(f"tick {fleet.step:2d}: oracle |Δ|max = {worst:.2e}")
+
+    # Warm promotion: pre-compile the rebalance surface, then move a
+    # small-bucket tenant to the big bucket live, mid-stream.
+    fleet.warm()
+    tm = time.perf_counter()
+    fleet.promote("alpha")
+    pause = (time.perf_counter() - tm) * 1e3
+    e = fleet.directory.get("alpha")
+    print(f"promoted 'alpha' -> pool {cfg.pools[e.pool].name!r} shard "
+          f"{e.shard} in {pause:.1f}ms (warm: plans pre-compiled)")
+    for _ in range(phase_ticks):
+        _, worst = tick(fleet)
+        print(f"tick {fleet.step:2d}: oracle |Δ|max = {worst:.2e}")
+
+    # Shard failure: the victim's tenants keep accumulating WAL while
+    # the shard is dead, then recovery replays them onto survivors.
+    victim = fleet.directory.get("beta")
+    stranded = sorted(e.name for e in fleet.directory.tenants_on(
+        victim.pool, victim.shard))
+    fleet.kill_shard(cfg.pools[victim.pool].name, victim.shard)
+    print(f"killed pool {cfg.pools[victim.pool].name!r} shard "
+          f"{victim.shard} — stranded tenants: {stranded}")
+    live = [n for n in names if n not in stranded]
+    for _ in range(phase_ticks):
+        got, _ = tick(fleet, live=None)  # stranded deltas go WAL-only
+        ref = np.asarray(oracle.scores()).ravel()
+        worst = max(abs(got[n] - float(ref[i]))
+                    for i, n in enumerate(names) if n in live)
+        print(f"tick {fleet.step:2d}: oracle |Δ|max = {worst:.2e} "
+              f"(live tenants only; {stranded} on WAL)")
+    tm = time.perf_counter()
+    reports = fleet.recover()
+    rec_ms = (time.perf_counter() - tm) * 1e3
+    for r in reports:
+        p, s, slot = r["to"]
+        print(f"recovered {r['tenant']!r} onto pool "
+              f"{cfg.pools[p].name!r} shard {s} slot {slot} "
+              f"(WAL replayed: {r['replayed']})")
+    print(f"recovery took {rec_ms:.1f}ms for {len(reports)} tenant(s)")
+    _, worst = tick(fleet)
+    print(f"tick {fleet.step:2d}: oracle |Δ|max = {worst:.2e} "
+          f"(all tenants, post-recovery)")
+
+    top = fleet.top_anomalies(k=2)
+    print("top_anomalies(2):",
+          ", ".join(f"{n}={v:.4f}" for n, v in top))
+    ok = worst < 1e-5
+    print("PARITY OK" if ok else "PARITY DRIFT — exceeded 1e-5")
+    fleet.close()
+    oracle.close()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, default=256)
@@ -151,7 +274,16 @@ def main():
                          "the service reclaims the permanently-left "
                          "slots (deltas stay addressed in the original "
                          "layout — ingestion remaps them)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the multi-tenant repro.fleet demo instead: "
+                         "2-bucket x 2-shard fleet with admission, warm "
+                         "mid-stream promotion, shard kill + recovery, "
+                         "oracle parity after every tick")
     args = ap.parse_args()
+
+    if args.fleet:
+        fleet_demo(args.ticks)
+        return
 
     b, n_pad = args.streams, args.nodes
     rng = np.random.default_rng(0)

@@ -84,13 +84,15 @@ def _run_vmem(json_mode: bool) -> tuple:
 def _run_sentinel(json_mode: bool) -> tuple:
     from repro.analysis.sanitize import CompileBudgetExceeded
     from repro.analysis.sentinel import (
+        run_fleet_chain,
         run_migration_chain,
         run_sparse_chain,
     )
 
     result = {"ok": True, "chains": {}}
     for name, chain in (("dense", run_migration_chain),
-                        ("sparse", run_sparse_chain)):
+                        ("sparse", run_sparse_chain),
+                        ("fleet", run_fleet_chain)):
         try:
             result["chains"][name] = chain()
         except CompileBudgetExceeded as exc:

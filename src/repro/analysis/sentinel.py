@@ -17,6 +17,13 @@ ticks, all at zero compiles — pinning the sparse path's two headline
 migration claims (virtual repads cost nothing; warmed capacity growth
 never pauses serving).
 
+`run_fleet_chain` lifts the same proof to the multi-tenant fleet
+layer: a 2-bucket × 2-shard `FingerFleet` serves tenant ticks, an
+explicit cross-bucket promotion (extract → install → clear row
+migration) and an occupancy-driven auto-compaction *under a staged
+tick* — each serving phase at zero compiles after `FingerFleet.warm`,
+pinning the fleet's pause-free-rebalance claim.
+
 Run standalone via ``python -m repro.analysis sentinel`` or as part of
 the default ``python -m repro.analysis`` gate.
 """
@@ -165,4 +172,88 @@ def run_sparse_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
         "ticks_per_phase": ticks_per_phase,
         "capacity": [svc.capacity.n_slots, svc.capacity.m_pad],
         "virtual_n_pad": svc.layout.n_pad,
+    }
+
+
+def _fleet_tick(fleet, sizes, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    ds = {}
+    for name, n in sizes.items():
+        i, j = sorted(rng.choice(n, 2, replace=False).tolist())
+        ds[name] = GraphDelta.from_arrays(
+            [i], [j], [float(rng.uniform(0.5, 2.0))], [0.0],
+            n_nodes=n, k_pad=_K_PAD, j_pad=2)
+    fleet.ingest(ds)
+    fleet.poll()
+    scores = fleet.scores()
+    assert set(scores) == set(sizes)
+
+
+def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
+    """The fleet rebalance chain at zero serving-path compiles.
+
+    2 buckets × 2 shards; after `FingerFleet.warm`, a full phase of
+    tenant ticks + an explicit cross-bucket promotion runs at zero
+    compiles, and (after re-warming the now-current occupancies) so
+    does a phase with an occupancy-driven auto-compaction executed
+    *under a staged tick* — the in-flight-delta rebalance path.
+    Raises `CompileBudgetExceeded` on any compile; returns per-phase
+    counts.
+    """
+    from repro.fleet import FingerFleet, FleetConfig, PoolSpec
+
+    config = FleetConfig(pools=(
+        PoolSpec(name="small", n_pad=8, shards=2, streams_per_shard=2,
+                 k_pad=_K_PAD, j_pad=2),
+        PoolSpec(name="large", n_pad=24, shards=2,
+                 streams_per_shard=2, k_pad=_K_PAD, j_pad=2),
+    ), compact_occupancy=0.95)
+    sizes = {"a": 5, "b": 6, "c": 16}
+    graphs = {n: erdos_renyi(sz, 0.4, seed=i, weighted=True)
+              for i, (n, sz) in enumerate(sizes.items())}
+    phases: Dict[str, int] = {}
+
+    with FingerFleet.open(config) as fleet:
+        for name in sizes:
+            fleet.admit(name, graphs[name])
+        # Warm-up: the first tick compiles both pools' plans and the
+        # query readbacks; warm() then compiles the whole rebalance
+        # surface (migration-target plans + stream-row hook jits).
+        _fleet_tick(fleet, sizes, seed=0)
+        top = fleet.top_anomalies(k=3)
+        assert len(top) == len(sizes)
+        fleet.warm()
+
+        with compile_budget(0, "fleet ticks + cross-bucket "
+                               "promotion") as c1:
+            for seed in range(1, 1 + ticks_per_phase):
+                _fleet_tick(fleet, sizes, seed)
+            fleet.promote("a")  # small -> large, live row migration
+            for seed in range(10, 10 + ticks_per_phase):
+                _fleet_tick(fleet, sizes, seed)
+        phases["ticks_promotion"] = c1.count
+        assert fleet.directory.get("a").pool == 1
+
+        # Re-warm for the *current* occupancies (the promotion changed
+        # every shard's live count), then compact under a staged tick.
+        fleet.warm()
+        with compile_budget(0, "fleet ticks + auto-compaction under "
+                               "a staged tick") as c2:
+            for seed in range(20, 20 + ticks_per_phase):
+                _fleet_tick(fleet, sizes, seed)
+            fleet.ingest({})  # stage, then rebalance, then poll
+            actions = fleet.rebalance()
+            assert any(a["action"] == "compact" for a in actions)
+            fleet.poll()
+            for seed in range(30, 30 + ticks_per_phase):
+                _fleet_tick(fleet, sizes, seed)
+        phases["ticks_staged_compaction"] = c2.count
+
+    return {
+        "ok": True,
+        "budget_per_phase": 0,
+        "phases": phases,
+        "ticks_per_phase": ticks_per_phase,
+        "pools": [p.name for p in config.pools],
+        "compactions": len(actions),
     }

@@ -1,0 +1,41 @@
+"""repro.fleet — multi-tenant FINGER serving fleet.
+
+Bucketed shard pools (`FleetConfig`/`PoolSpec`), best-fit tenant
+routing (`FleetRouter`), live cross-shard migration (`Rebalancer`),
+shard-failure recovery (`recovery`), and whole-fleet persistence —
+all on top of `repro.serving.FingerService`. Every failure mode has a
+named exception exported here (guarded by `tests/test_fleet.py`).
+"""
+from repro.fleet.config import FleetConfig, PoolSpec
+from repro.fleet.directory import TenantDirectory, TenantEntry
+from repro.fleet.errors import (AdmissionError, FleetConfigError,
+                                FleetError, FleetIngestError,
+                                FleetLifecycleError, RebalanceError,
+                                RecoveryError, ShardUnavailableError,
+                                UnknownTenantError)
+from repro.fleet.fleet import FingerFleet
+from repro.fleet.rebalance import Rebalancer
+from repro.fleet.recovery import DeadShard, recover_shard, replay_tenant
+from repro.fleet.router import FleetRouter
+
+__all__ = [
+    "AdmissionError",
+    "DeadShard",
+    "FingerFleet",
+    "FleetConfig",
+    "FleetConfigError",
+    "FleetError",
+    "FleetIngestError",
+    "FleetLifecycleError",
+    "FleetRouter",
+    "PoolSpec",
+    "Rebalancer",
+    "RebalanceError",
+    "RecoveryError",
+    "ShardUnavailableError",
+    "TenantDirectory",
+    "TenantEntry",
+    "UnknownTenantError",
+    "recover_shard",
+    "replay_tenant",
+]

@@ -1,0 +1,153 @@
+"""The fleet's tenant directory: who lives where, and how to rebuild
+them.
+
+One `TenantEntry` per tenant holds the routing triple
+(pool, shard, slot), the tenant's *virtual→position* map into its
+shard's node layout, and the recovery material: a tenant-space base
+state snapshot plus a write-ahead log of the tenant's own deltas since
+that base. The WAL is what makes shard failure survivable without
+replicating device state — a dead shard's tenants are rebuilt as
+``base ⊕ replay(wal)`` and re-installed on survivors.
+
+All tenant-space: ``slot_of_node[v]`` maps the tenant's own node id
+``v`` (its private, zero-based node space) to a slot position inside
+its stream's row on the shard (-1 = never placed). Sparse-pool tenants
+carry no map (the shard's `SlotMap` owns the translation; virtual ids
+pass through).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fleet.errors import UnknownTenantError
+from repro.graphs.layout import compose_index_maps
+from repro.graphs.types import GraphDelta
+
+
+@dataclasses.dataclass
+class TenantEntry:
+    """One tenant's placement + recovery material (mutable; the
+    directory is host-side bookkeeping, not device state)."""
+
+    name: str
+    pool: int
+    shard: int
+    slot: int
+    n_nodes: int
+    # virtual node id -> position in the stream row (-1 unplaced);
+    # None for sparse-pool tenants (virtual ids pass through).
+    slot_of_node: Optional[np.ndarray]
+    base_step: int = 0
+    # Tenant-space FingerState snapshot at base_step:
+    # {q, s_total, s_max, strengths(n,), node_mask(n,)} — None means
+    # "on disk" (the shard checkpoint at base_step holds it).
+    base_state: Optional[dict] = None
+    # (fleet_step, tenant-space GraphDelta) since base_step, oldest
+    # first. Replayed (host-side, exact) during recovery.
+    wal: List[Tuple[int, GraphDelta]] = dataclasses.field(
+        default_factory=list)
+    last_score: float = 0.0
+    # Fleet step at which this tenant's row was (re)installed on its
+    # current shard (admit/promote/recover). Until the shard ticks
+    # past it, the device score at the slot is stale — `scores`
+    # reports `last_score` instead. Transient (not serialized).
+    installed_step: int = -1
+
+    def used_positions(self) -> np.ndarray:
+        """Positions this tenant occupies in its stream row."""
+        if self.slot_of_node is None:
+            return np.zeros((0,), np.int32)
+        return self.slot_of_node[self.slot_of_node >= 0]
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name, "pool": self.pool, "shard": self.shard,
+            "slot": self.slot, "n_nodes": int(self.n_nodes),
+            "slot_of_node": None if self.slot_of_node is None
+            else [int(p) for p in self.slot_of_node],
+            "base_step": int(self.base_step),
+            "last_score": float(self.last_score),
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TenantEntry":
+        som = d.get("slot_of_node")
+        return cls(name=d["name"], pool=int(d["pool"]),
+                   shard=int(d["shard"]), slot=int(d["slot"]),
+                   n_nodes=int(d["n_nodes"]),
+                   slot_of_node=None if som is None
+                   else np.asarray(som, np.int32),
+                   base_step=int(d.get("base_step", 0)),
+                   last_score=float(d.get("last_score", 0.0)))
+
+
+class TenantDirectory:
+    """Name → `TenantEntry`, plus the shard-side reverse views the
+    router and rebalancer need."""
+
+    def __init__(self):
+        self._entries: Dict[str, TenantEntry] = {}
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self):
+        return iter(self._entries.values())
+
+    def names(self) -> List[str]:
+        return list(self._entries)
+
+    def add(self, entry: TenantEntry) -> None:
+        self._entries[entry.name] = entry
+
+    def get(self, name: str) -> TenantEntry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise UnknownTenantError(
+                f"unknown tenant {name!r} "
+                f"(have {sorted(self._entries)})") from None
+
+    def remove(self, name: str) -> TenantEntry:
+        return self._entries.pop(name)
+
+    def tenants_on(self, pool: int, shard: int) -> List[TenantEntry]:
+        return [e for e in self._entries.values()
+                if e.pool == pool and e.shard == shard]
+
+    def slots_in_use(self, pool: int, shard: int) -> set:
+        return {e.slot for e in self.tenants_on(pool, shard)}
+
+    def tenant_at(self, pool: int, shard: int,
+                  slot: int) -> Optional[TenantEntry]:
+        for e in self._entries.values():
+            if (e.pool, e.shard, e.slot) == (pool, shard, int(slot)):
+                return e
+        return None
+
+    def compose(self, pool: int, shard: int,
+                index_map: np.ndarray) -> None:
+        """A shard's layout migration (old→new position map) renumbers
+        every tenant map on it — positions whose slot the compaction
+        dropped become unplaced (-1), which is loss-free: a dropped
+        slot was inactive in every stream."""
+        for e in self.tenants_on(pool, shard):
+            if e.slot_of_node is not None:
+                e.slot_of_node = compose_index_maps(
+                    e.slot_of_node, index_map)
+
+    def to_json(self) -> list:
+        return [e.to_json() for e in self._entries.values()]
+
+    @classmethod
+    def from_json(cls, entries: list) -> "TenantDirectory":
+        d = cls()
+        for rec in entries:
+            d.add(TenantEntry.from_json(rec))
+        return d

@@ -1,0 +1,59 @@
+"""Named exceptions of the multi-tenant fleet layer.
+
+Every failure mode a fleet caller can hit has a dedicated class here,
+exported by name from `repro.fleet` (and guarded by a discovery test,
+mirroring the serving layer's convention) — fleet operators branch on
+exception identity, never on message text.
+"""
+from __future__ import annotations
+
+
+class FleetError(RuntimeError):
+    """Base class of every fleet-layer error."""
+
+
+class FleetConfigError(FleetError, ValueError):
+    """A `FleetConfig`/`PoolSpec` field (or combination) is invalid.
+
+    Raised at `validate()` / `FingerFleet.open` time, before any shard
+    service exists.
+    """
+
+
+class AdmissionError(FleetError):
+    """No pool can host the tenant: every bucket whose ``n_pad`` covers
+    the tenant's node space is full (or none is large enough). Raised
+    by `FleetRouter.place` — admission control, not a crash."""
+
+
+class UnknownTenantError(FleetError, KeyError):
+    """The named tenant is not in the fleet's directory."""
+
+
+class FleetLifecycleError(FleetError):
+    """A fleet method was called out of phase: on a closed fleet, or an
+    operation that needs the ingest/poll cycle quiesced (admission,
+    migration, kill/recover, save) while a staged tick is pending."""
+
+
+class ShardUnavailableError(FleetError):
+    """The addressed shard is dead (killed and not yet recovered) or
+    outside the pool's shard range."""
+
+
+class RebalanceError(FleetError):
+    """A live tenant migration (promotion / shard rebalance) cannot be
+    performed — e.g. promoting a slot-space (sparse) tenant, whose
+    edge store cannot be reconstructed from FINGER statistics."""
+
+
+class RecoveryError(FleetError):
+    """Shard-failure recovery cannot restore a tenant: no surviving
+    shard fits it, or neither an in-memory base nor an on-disk
+    checkpoint covers its state."""
+
+
+class FleetIngestError(FleetError, ValueError):
+    """A tenant delta cannot be translated onto its shard: an edge
+    touches a node the tenant never joined, a join overflows the
+    pool's ``j_pad`` lanes, or the pool carries no join slots at all."""

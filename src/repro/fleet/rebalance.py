@@ -1,0 +1,211 @@
+"""Live cross-shard tenant migration and occupancy-driven shard upkeep.
+
+`Rebalancer` is the fleet's migration engine, built entirely on the
+serving layer's existing machinery:
+
+- **Promotion** (tenant outgrows its bucket): checkpoint-through — the
+  tenant's stream row is extracted from its shard
+  (`FingerService.extract_stream`, a jitted row gather), gathered into
+  *tenant space* through its position map, re-embedded at identity
+  positions into a shard of the next bucket (`install_stream`), and its
+  old slot zeroed (`clear_stream`). Exact: every FINGER statistic is
+  invariant under position relabeling and zero padding.
+- **Auto-compaction**: a dense shard whose live-slot occupancy drops
+  below `FleetConfig.compact_occupancy` is compacted to its live count
+  (`FingerService.compact` — device-side, plan from the warm
+  `PlanCache`), and the dropped-slot renumbering is composed into every
+  resident tenant's position map.
+- **Warming**: pre-compiles, per shard, the plans a steady-state
+  rebalance can hit (the pool-size regrow target, the pending
+  compaction target) *and* the stream-row hook jits
+  (extract/install/clear, score reads) — after `warm()`, a promotion
+  or auto-compaction executes with zero XLA compiles. With
+  ``background=True`` the compiles run on the serving layer's warmup
+  thread (`WarmupHandle`).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.errors import RebalanceError
+from repro.graphs.types import GraphDelta
+from repro.serving import migrate
+from repro.serving.service import WarmupHandle, _score_at_jit
+
+
+class Rebalancer:
+    def __init__(self, fleet):
+        self._fleet = fleet
+
+    # -- capacity-driven migration ---------------------------------------
+    def ensure_capacity(self, name: str, delta: GraphDelta) -> Optional[str]:
+        """Make ``name``'s shard able to absorb ``delta``: no-op when
+        it fits, a warm `repad` back to the pool bound when the shard
+        was compacted below it, a promotion to the next bucket when the
+        tenant outgrows the pool itself. Returns the action taken
+        (None / "repad" / "promote")."""
+        fleet = self._fleet
+        entry = fleet.directory.get(name)
+        pool = fleet.config.pools[entry.pool]
+        if pool.method == "sparse_tick":
+            return None  # virtual bound is the pool bound; static
+        required = fleet.router.required_positions(entry, delta)
+        svc = fleet.shard_service(entry.pool, entry.shard)
+        if required <= svc.layout.n_pad:
+            return None
+        if required <= pool.n_pad:
+            svc.repad(pool.n_pad)
+            return "repad"
+        self.promote(name)
+        return "promote"
+
+    def promote(self, name: str,
+                to_pool: Optional[str] = None) -> dict:
+        """Move one tenant to a bigger bucket, live (see module
+        docstring). Returns a small report dict. Raises
+        `RebalanceError` for sparse-pool tenants and propagates
+        `AdmissionError` when no bigger bucket has room."""
+        fleet = self._fleet
+        entry = fleet.directory.get(name)
+        pool = fleet.config.pools[entry.pool]
+        if pool.method == "sparse_tick":
+            raise RebalanceError(
+                f"tenant {name!r} lives in sparse pool "
+                f"{pool.name!r}: slot-space tenants grow virtually "
+                "(free repad) and their edge store cannot be "
+                "reconstructed from FINGER statistics — promotion is "
+                "a dense-pool migration")
+        src = fleet.shard_service(entry.pool, entry.shard)
+        if to_pool is None:
+            min_pool, max_pool = entry.pool + 1, None
+        else:
+            min_pool = max_pool = fleet.config.pool_index(to_pool)
+        tgt_pool, tgt_shard, tgt_slot = fleet.router.place(
+            entry.n_nodes, fleet.live_shards(), min_pool=min_pool,
+            max_pool=max_pool, dense_only=True)
+        # Checkpoint-through: device row -> host -> tenant space.
+        row = jax.device_get(src.extract_stream(entry.slot))
+        base = self._row_to_tenant(row, entry)
+        fleet.install_dense(tgt_pool, tgt_shard, tgt_slot, base)
+        src.clear_stream(entry.slot)
+        old = (entry.pool, entry.shard, entry.slot)
+        entry.pool, entry.shard, entry.slot = (tgt_pool, tgt_shard,
+                                               tgt_slot)
+        entry.slot_of_node = np.arange(entry.n_nodes, dtype=np.int32)
+        entry.base_state = base
+        entry.base_step = fleet.step
+        entry.wal = []
+        entry.installed_step = fleet.step
+        return {"tenant": name, "from": old,
+                "to": (tgt_pool, tgt_shard, tgt_slot),
+                "n_nodes": entry.n_nodes}
+
+    @staticmethod
+    def _row_to_tenant(row, entry) -> dict:
+        """One extracted stream row -> tenant-space base snapshot
+        (strengths/mask gathered through the position map; the scalar
+        statistics are position-invariant)."""
+        n_t = entry.n_nodes
+        som = entry.slot_of_node
+        strengths = np.zeros((n_t,), np.float32)
+        mask = np.zeros((n_t,), np.float32)
+        valid = np.nonzero(som >= 0)[0]
+        row_s = np.asarray(row.strengths, np.float32)
+        row_m = np.ones_like(row_s) if row.node_mask is None \
+            else np.asarray(row.node_mask, np.float32)
+        strengths[valid] = row_s[som[valid]]
+        mask[valid] = row_m[som[valid]]
+        return {"q": float(row.q), "s_total": float(row.s_total),
+                "s_max": float(row.s_max), "strengths": strengths,
+                "node_mask": mask}
+
+    # -- occupancy-driven upkeep -----------------------------------------
+    def maybe_compact(self, pool_i: int, shard_i: int):
+        """Compact one dense shard when its live-slot occupancy fell
+        below the fleet threshold; compose the renumbering into every
+        resident tenant's position map. Returns the
+        `CompactionReport` or None."""
+        fleet = self._fleet
+        pool = fleet.config.pools[pool_i]
+        if pool.method == "sparse_tick":
+            return None
+        svc = fleet.shard_service(pool_i, shard_i)
+        n_pad = svc.layout.n_pad
+        n_live = migrate.live_slot_count(svc.states())
+        if n_live == 0 or n_live >= n_pad:
+            return None
+        if n_live / n_pad >= fleet.config.compact_occupancy:
+            return None
+        report = svc.compact()
+        if report.new_n_pad < report.old_n_pad:
+            fleet.directory.compose(pool_i, shard_i, report.index_map)
+        return report
+
+    def auto_rebalance(self) -> List[dict]:
+        """One upkeep sweep over every live dense shard. Safe to run
+        with a staged tick: compaction remaps the queued deltas
+        through the serving grace machinery (the in-flight-delta
+        survival path)."""
+        actions = []
+        fleet = self._fleet
+        for pool_i, shard_i in fleet.live_shard_ids():
+            report = self.maybe_compact(pool_i, shard_i)
+            if report is not None:
+                actions.append({
+                    "action": "compact", "pool": pool_i,
+                    "shard": shard_i,
+                    "old_n_pad": report.old_n_pad,
+                    "new_n_pad": report.new_n_pad})
+        return actions
+
+    # -- warming ----------------------------------------------------------
+    def warm(self, background: bool = False
+             ) -> Union[list, WarmupHandle]:
+        """Pre-compile every plan and jit the steady-state rebalance
+        path can touch (see module docstring)."""
+        if background:
+            return WarmupHandle(self._warm_all)
+        return self._warm_all()
+
+    def _warm_all(self) -> list:
+        warmed = []
+        fleet = self._fleet
+        for pool_i, shard_i in fleet.live_shard_ids():
+            pool = fleet.config.pools[pool_i]
+            svc = fleet.shard_service(pool_i, shard_i)
+            if pool.method == "sparse_tick":
+                targets = []
+            else:
+                targets = []
+                if svc.layout.n_pad < pool.n_pad:
+                    targets.append(pool.n_pad)
+                n_live = migrate.live_slot_count(svc.states())
+                if 0 < n_live < svc.layout.n_pad:
+                    targets.append(n_live)
+            done = svc.warm_next_layouts(targets)
+            # The stream-row hooks a promotion executes (row gather,
+            # row scatter with the plan's sharding, row clear) and the
+            # per-slot score read — all keyed by the stacked shape, so
+            # zero dummies populate exactly the cache entries a live
+            # migration hits. put/clear donate their state argument:
+            # fresh dummies each.
+            dummy = jax.tree_util.tree_map(jnp.zeros_like,
+                                           svc.states())
+            row = migrate.take_stream(dummy, 0)
+            migrate.put_stream(
+                jax.tree_util.tree_map(jnp.zeros_like, svc.states()),
+                jax.device_get(row), 0,
+                out_shardings=svc.plan.state_sharding())
+            migrate.clear_stream(
+                jax.tree_util.tree_map(jnp.zeros_like, svc.states()),
+                0, out_shardings=svc.plan.state_sharding())
+            _score_at_jit(
+                jnp.zeros((pool.streams_per_shard,), jnp.float32),
+                np.int32(0))
+            warmed.append({"pool": pool.name, "shard": shard_i,
+                           "layouts": done})
+        return warmed

@@ -1,0 +1,222 @@
+"""Tenant routing: bucket admission and per-tenant delta translation.
+
+The router owns two pure-host jobs:
+
+- `place`: best-fit admission — the smallest bucket (pool) whose
+  ``n_pad`` covers the tenant's node space and still has a free stream
+  slot on a live shard, spilling upward through the bucket ladder;
+  `AdmissionError` by name when nothing fits.
+- `translate`: one tenant's *tenant-space* `GraphDelta` (node ids in
+  the tenant's private zero-based space) → the *shard-space* delta its
+  stream row ticks with — virtual ids mapped through the tenant's
+  ``slot_of_node`` position map (joins allocate fresh positions), lanes
+  re-padded to the pool's static ``k_pad``/``j_pad``, and the result
+  stamped with the shard's live `NodeLayout` generation so a migration
+  racing an in-flight tick is remapped by the serving grace machinery
+  instead of scattering into stale slots.
+
+Positions are per-stream: each stream row has its own (n_pad,) state,
+so two tenants on one shard both use low positions — only the shared
+static layout (and its migrations) couples them.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fleet.config import FleetConfig, PoolSpec
+from repro.fleet.directory import TenantDirectory, TenantEntry
+from repro.fleet.errors import AdmissionError, FleetIngestError
+from repro.graphs.types import GraphDelta
+
+
+class FleetRouter:
+    def __init__(self, config: FleetConfig,
+                 directory: TenantDirectory):
+        self._config = config
+        self._directory = directory
+
+    # -- admission --------------------------------------------------------
+    def place(self, n_required: int,
+              live_shards: Dict[int, List[int]],
+              min_pool: int = 0, max_pool: Optional[int] = None,
+              dense_only: bool = False) -> Tuple[int, int, int]:
+        """Best-fit (pool, shard, slot) for a tenant of ``n_required``
+        node slots: ascending buckets from ``min_pool``, least-loaded
+        live shard within the bucket, smallest free slot within the
+        shard. ``dense_only`` restricts to dense pools (migrations and
+        recovery install dense rows — a sparse edge store cannot be
+        rebuilt from FINGER statistics)."""
+        pools = self._config.pools
+        hi = len(pools) if max_pool is None else max_pool + 1
+        for pool_i in range(min_pool, hi):
+            pool = pools[pool_i]
+            if dense_only and pool.method == "sparse_tick":
+                continue
+            if n_required > pool.n_pad:
+                continue
+            best = None
+            for shard_i in live_shards.get(pool_i, []):
+                load = len(self._directory.slots_in_use(pool_i,
+                                                        shard_i))
+                if load >= pool.streams_per_shard:
+                    continue
+                if best is None or load < best[1]:
+                    best = (shard_i, load)
+            if best is not None:
+                shard_i = best[0]
+                used = self._directory.slots_in_use(pool_i, shard_i)
+                slot = min(set(range(pool.streams_per_shard)) - used)
+                return pool_i, shard_i, slot
+        raise AdmissionError(
+            f"no pool can host a tenant of {n_required} node slot(s) "
+            f"(buckets {[(p.name, p.n_pad) for p in pools]}, "
+            f"searched pools [{min_pool}, {hi}), "
+            f"dense_only={dense_only}) — every fitting bucket is full "
+            "or too small")
+
+    # -- delta translation ------------------------------------------------
+    @staticmethod
+    def _split_node_slots(delta: GraphDelta
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Tenant-space (join_ids, leave_ids) from the delta's node
+        lanes (deduplicated, order-preserving)."""
+        if delta.node_ids is None:
+            z = np.zeros((0,), np.int32)
+            return z, z
+        ids = np.asarray(delta.node_ids, np.int64)
+        flag = np.asarray(delta.node_flag)
+        join = ids[flag > 0]
+        leave = ids[flag < 0]
+        _, ji = np.unique(join, return_index=True)
+        _, li = np.unique(leave, return_index=True)
+        return (join[np.sort(ji)].astype(np.int32),
+                leave[np.sort(li)].astype(np.int32))
+
+    def required_positions(self, entry: TenantEntry,
+                           delta: GraphDelta) -> int:
+        """Stream-row positions the tenant needs *after* this delta:
+        its placed high-water count plus the delta's first-time joins.
+        Positions are never freed on leave (a rejoining node reuses
+        its slot), so this is monotone — the promotion trigger."""
+        if entry.slot_of_node is None:
+            return entry.n_nodes  # sparse: virtual bound governs
+        join, _ = self._split_node_slots(delta)
+        som = entry.slot_of_node
+        placed = int(np.count_nonzero(som >= 0))
+        new = sum(1 for v in join.tolist()
+                  if v >= som.shape[0] or som[v] < 0)
+        return placed + new
+
+    def translate(self, entry: TenantEntry, delta: GraphDelta,
+                  svc, pool: PoolSpec) -> GraphDelta:
+        """Tenant-space delta → shard-space delta for ``entry``'s
+        stream (see module docstring). Mutates the entry's
+        ``slot_of_node`` (join placement) — call once per delta."""
+        join, leave = self._split_node_slots(delta)
+        if (join.size or leave.size) and pool.j_pad is None:
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: delta carries node "
+                f"join/leave slots but pool {pool.name!r} has "
+                "j_pad=None (no node lanes); use a pool with join "
+                "slots")
+        if pool.method == "sparse_tick":
+            return self._translate_sparse(entry, delta, join, leave,
+                                          pool)
+        return self._translate_dense(entry, delta, join, leave, svc,
+                                     pool)
+
+    def _translate_sparse(self, entry, delta, join, leave,
+                          pool: PoolSpec) -> GraphDelta:
+        """Sparse shards translate virtual ids themselves (per-stream
+        `SlotMap`s inside the service); the fleet only re-pads the
+        lanes to the pool's static sizes."""
+        m = np.asarray(delta.mask) > 0
+        if delta.n_nodes > pool.n_pad:
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: delta addresses "
+                f"{delta.n_nodes} virtual node(s), beyond pool "
+                f"{pool.name!r}'s virtual bound n_pad={pool.n_pad}")
+        try:
+            return GraphDelta.from_arrays(
+                np.asarray(delta.senders)[m],
+                np.asarray(delta.receivers)[m],
+                np.asarray(delta.dw)[m], np.asarray(delta.w_old)[m],
+                n_nodes=delta.n_nodes, n_pad=pool.n_pad,
+                k_pad=pool.k_pad, j_pad=pool.j_pad,
+                join=join, leave=leave)
+        except ValueError as e:
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: {e}") from e
+
+    def _translate_dense(self, entry, delta, join, leave, svc,
+                         pool: PoolSpec) -> GraphDelta:
+        som = entry.slot_of_node
+        if delta.n_nodes > som.shape[0]:
+            som = np.concatenate([
+                som, np.full((delta.n_nodes - som.shape[0],), -1,
+                             np.int32)])
+            entry.slot_of_node = som
+            entry.n_nodes = int(delta.n_nodes)
+        n_pad = svc.layout.n_pad
+        # First-time joins take the smallest positions this tenant
+        # does not already hold (per-stream free set).
+        new = [v for v in join.tolist() if som[v] < 0]
+        if new:
+            used = set(som[som >= 0].tolist())
+            pos = 0
+            for v in new:
+                while pos in used:
+                    pos += 1
+                if pos >= n_pad:
+                    # ensure_capacity should have repadded/promoted
+                    # first; reaching here means the caller skipped it.
+                    raise FleetIngestError(
+                        f"tenant {entry.name!r}: join of node {v} "
+                        f"overflows the shard layout n_pad={n_pad}; "
+                        "the rebalancer must repad or promote first")
+                som[v] = pos
+                used.add(pos)
+        m = np.asarray(delta.mask) > 0
+        snd = som[np.asarray(delta.senders, np.int64)[m]]
+        rcv = som[np.asarray(delta.receivers, np.int64)[m]]
+        if (snd < 0).any() or (rcv < 0).any():
+            bad = sorted(set(
+                np.asarray(delta.senders)[m][snd < 0].tolist()
+                + np.asarray(delta.receivers)[m][rcv < 0].tolist()))
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: delta edge(s) touch node(s) "
+                f"{bad} the tenant never joined")
+        leave_pos = som[leave.astype(np.int64)] if leave.size \
+            else np.zeros((0,), np.int32)
+        if leave.size and (leave_pos < 0).any():
+            bad = sorted(leave[leave_pos < 0].tolist())
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: leave of never-joined "
+                f"node(s) {bad}")
+        try:
+            return GraphDelta.from_arrays(
+                snd, rcv, np.asarray(delta.dw)[m],
+                np.asarray(delta.w_old)[m],
+                n_nodes=n_pad, k_pad=pool.k_pad, j_pad=pool.j_pad,
+                join=som[join.astype(np.int64)] if join.size
+                else np.zeros((0,), np.int32),
+                leave=leave_pos,
+                layout=svc.layout)
+        except ValueError as e:
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: {e}") from e
+
+    def empty_delta(self, pool: PoolSpec, svc) -> GraphDelta:
+        """The free-slot no-op delta of one shard tick (stamped with
+        the shard's live layout for dense pools, so it stacks with
+        translated tenant deltas)."""
+        z = np.zeros((0,), np.float32)
+        if pool.method == "sparse_tick":
+            return GraphDelta.from_arrays(
+                z, z, z, z, n_nodes=0, n_pad=pool.n_pad,
+                k_pad=pool.k_pad, j_pad=pool.j_pad)
+        return GraphDelta.from_arrays(
+            z, z, z, z, n_nodes=0, k_pad=pool.k_pad,
+            j_pad=pool.j_pad, layout=svc.layout)

@@ -173,6 +173,16 @@ class ServiceConfig:
         every journaled generation (the remap table then grows without
         bound over the service's migration history — only sensible for
         short-lived services or tests).
+    compilation_cache_dir : enable JAX's persistent on-disk compilation
+        cache rooted at this directory when the service `open`s or
+        `restore`s, so a restarted replica cold-opens near warm-swap
+        latency (compiled ticks come back from disk instead of XLA).
+        CAVEAT: the cache is **process-global** JAX state — the first
+        service to set it wins for the whole process, and it affects
+        every jit in the process, not just this service's plans.
+        Setting a *different* directory in a process that already
+        enabled one raises a named error rather than silently
+        re-rooting unrelated caches.
     data_axis / pod_axis : mesh axis names the sharded placements bind.
     """
 
@@ -191,6 +201,7 @@ class ServiceConfig:
     topk: TopKSpec = TopKSpec()
     plan_cache: PlanCachePolicy = PlanCachePolicy()
     grace_generations: Optional[int] = 3
+    compilation_cache_dir: Optional[str] = None
     data_axis: str = "data"
     pod_axis: str = "pod"
 
@@ -255,6 +266,12 @@ class ServiceConfig:
             raise ServiceConfigError(
                 f"grace_generations must be >= 0 (or None for "
                 f"unbounded retention), got {self.grace_generations}")
+        if self.compilation_cache_dir is not None \
+                and not str(self.compilation_cache_dir).strip():
+            raise ServiceConfigError(
+                "compilation_cache_dir must be a non-empty path "
+                "(or None to leave the process-global JAX compilation "
+                "cache untouched)")
         self.checkpoint.validate()
         self.topk.validate()
         self.plan_cache.validate()

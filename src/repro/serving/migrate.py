@@ -307,6 +307,101 @@ def occupancy(states: FingerState) -> np.ndarray:
     return np.asarray(_occupancy_device(states.node_mask))
 
 
+# -- single-stream row extraction / installation (the fleet hooks) --------
+#
+# `repro.fleet` moves one tenant between shards by pulling its row out
+# of the source shard's stacked (B, …) state and writing it into a free
+# slot of the target shard's. The slot index is a *traced* device
+# scalar (lax.dynamic_(index|update_index)_in_dim), so each transform
+# compiles once per stacked-state shape — never per slot value — which
+# is what keeps a pre-warmed fleet rebalance at zero compiles. Works on
+# any stacked stream pytree (dense `FingerState` or the sparse
+# `SparseStreamState`); the row must carry the same static layout as
+# the stacked state (pytree structure equality enforces it).
+
+def _take_stream_impl(states, slot):
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, slot, 0,
+                                               keepdims=False),
+        states)
+
+
+@functools.lru_cache(maxsize=None)
+def _take_stream_jit(_key=None):
+    return jax.jit(_take_stream_impl)
+
+
+def take_stream(states, slot):
+    """Extract one stream's row (slot axis dropped) from the stacked
+    state — a jitted dynamic gather; `states` is not consumed."""
+    b = int(jax.tree_util.tree_leaves(states)[0].shape[0])
+    if not 0 <= int(slot) < b:
+        raise LayoutMigrationError(
+            f"take_stream: slot {int(slot)} outside the stacked "
+            f"batch of {b} stream(s)")
+    return _take_stream_jit()(states, np.int32(slot))
+
+
+def _put_stream_impl(states, row, slot):
+    return jax.tree_util.tree_map(
+        lambda x, r: jax.lax.dynamic_update_index_in_dim(
+            x, jnp.asarray(r, x.dtype), slot, 0),
+        states, row)
+
+
+@functools.lru_cache(maxsize=None)
+def _put_stream_jit(out_shardings):
+    kwargs = {} if out_shardings is None \
+        else {"out_shardings": out_shardings}
+    return jax.jit(_put_stream_impl, donate_argnums=(0,), **kwargs)
+
+
+def put_stream(states, row, slot, out_shardings=None):
+    """Install ``row`` (a single-stream state, as from `take_stream`)
+    at ``slot`` of the stacked state. The stacked state is donated —
+    rebind to the returned one. Row arrays may live on host (numpy):
+    the transfer rides the jit call like any argument."""
+    b = int(jax.tree_util.tree_leaves(states)[0].shape[0])
+    if not 0 <= int(slot) < b:
+        raise LayoutMigrationError(
+            f"put_stream: slot {int(slot)} outside the stacked batch "
+            f"of {b} stream(s)")
+    s_def = jax.tree_util.tree_structure(states)
+    r_def = jax.tree_util.tree_structure(row)
+    if s_def != r_def:
+        raise LayoutMigrationError(
+            f"put_stream: row pytree {r_def} does not match the "
+            f"stacked state {s_def} — the row must carry the same "
+            "static layout (n_pad + generation) as the target shard")
+    return _put_stream_jit(out_shardings)(states, row, np.int32(slot))
+
+
+def _clear_stream_impl(states, slot):
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_update_index_in_dim(
+            x, jnp.zeros(x.shape[1:], x.dtype), slot, 0),
+        states)
+
+
+@functools.lru_cache(maxsize=None)
+def _clear_stream_jit(out_shardings):
+    kwargs = {} if out_shardings is None \
+        else {"out_shardings": out_shardings}
+    return jax.jit(_clear_stream_impl, donate_argnums=(0,), **kwargs)
+
+
+def clear_stream(states, slot, out_shardings=None):
+    """Zero one stream's row (the *free slot* state: mask 0, strength
+    0, q/S/s_max 0 — an empty stream whose JSdist against an empty
+    delta is exactly 0). The stacked state is donated."""
+    b = int(jax.tree_util.tree_leaves(states)[0].shape[0])
+    if not 0 <= int(slot) < b:
+        raise LayoutMigrationError(
+            f"clear_stream: slot {int(slot)} outside the stacked "
+            f"batch of {b} stream(s)")
+    return _clear_stream_jit(out_shardings)(states, np.int32(slot))
+
+
 # -- delta remapping (the ingestion-side half of a compaction) ------------
 
 def remap_delta(delta: GraphDelta, index_map: np.ndarray,

@@ -36,6 +36,7 @@ serving is stalled.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -384,10 +385,17 @@ class PlanCache:
     through: a cache hit returns the already-compiled plan (popped —
     one migration consumes one warm plan), a miss falls back to the
     cold `build_plan` path.
+
+    Thread-safe on the cache dict: `FingerService.warm_next_layouts`
+    (and the fleet rebalancer's bulk pre-warm) may insert from a
+    background warming thread while the serving thread pops — the lock
+    covers only the dict, never a compile (jit compilation is itself
+    thread-safe and runs outside the lock).
     """
 
     def __init__(self):
         self._plans: Dict[tuple, Tuple[ExecutionPlan, NodeLayout]] = {}
+        self._lock = threading.Lock()
 
     @staticmethod
     def _key(config: ServiceConfig, mesh: Optional[Mesh]) -> tuple:
@@ -403,19 +411,22 @@ class PlanCache:
                 None if mesh is None else id(mesh))
 
     def __len__(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)
 
     @property
     def warmed_layouts(self) -> Tuple[NodeLayout, ...]:
         """The layouts currently held warm (introspection/tests)."""
-        return tuple(layout for _, layout in self._plans.values())
+        with self._lock:
+            return tuple(layout for _, layout in self._plans.values())
 
     def warm(self, config: ServiceConfig, mesh: Optional[Mesh],
              layout: NodeLayout) -> ExecutionPlan:
         """Build + fully compile a plan for ``config`` at ``layout``."""
         plan = build_plan(config, mesh)
         plan.warm_tick(layout)
-        self._plans[self._key(config, mesh)] = (plan, layout)
+        with self._lock:
+            self._plans[self._key(config, mesh)] = (plan, layout)
         return plan
 
     def get(self, config: ServiceConfig, mesh: Optional[Mesh],
@@ -425,7 +436,8 @@ class PlanCache:
         predicted layout generation disagrees is still *valid* for the
         config (compilation correctness only depends on the config);
         its first tick just compiles cold."""
-        hit = self._plans.pop(self._key(config, mesh), None)
+        with self._lock:
+            hit = self._plans.pop(self._key(config, mesh), None)
         if hit is not None:
             cached = hit[0].config
             if config.method == "sparse_tick":

@@ -45,7 +45,8 @@ underneath as the plan-internal executor.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple, Union
+import threading
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -85,6 +86,80 @@ _CKPT_KIND = "stream_engine_state"
 class ServiceLifecycleError(RuntimeError):
     """An operation was called in a state that cannot honor it (closed
     service, empty queue where one was required, …)."""
+
+
+def _apply_compilation_cache(config: ServiceConfig) -> None:
+    """Enable JAX's persistent on-disk compilation cache at the
+    config's directory (no-op when unset).
+
+    The cache is PROCESS-GLOBAL JAX state: every jit in the process —
+    not just this service's plans — reads/writes it once enabled, and
+    it cannot be re-rooted per service. Re-opening with the same
+    directory is an idempotent no-op; a *different* directory raises
+    rather than silently moving unrelated caches. The compile-time /
+    entry-size floors are lowered to zero so the small serving ticks
+    actually persist (the JAX defaults skip sub-second compiles)."""
+    target = config.compilation_cache_dir
+    if target is None:
+        return
+    current = jax.config.jax_compilation_cache_dir
+    if current is not None and current != target:
+        raise ServiceConfigError(
+            f"compilation_cache_dir={target!r} conflicts with the "
+            f"process-global JAX compilation cache already rooted at "
+            f"{current!r}; one process serves one cache directory")
+    jax.config.update("jax_compilation_cache_dir", target)
+    for knob, value in (
+            ("jax_persistent_cache_min_compile_time_secs", 0),
+            ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        if hasattr(jax.config, knob):
+            jax.config.update(knob, value)
+
+
+# One compiled slot read per (B,) score shape: the slot index is a
+# traced scalar, so fleet-side per-tenant score reads never gather the
+# full score vector and never fragment the jit cache per slot.
+_score_at_jit = jax.jit(
+    lambda scores, slot: jax.lax.dynamic_index_in_dim(
+        scores, slot, 0, keepdims=False))
+
+
+class WarmupHandle:
+    """A `warm_next_layouts(background=True)` compile in flight.
+
+    ``wait()`` joins the warming thread and returns the warmed-target
+    list (re-raising any exception the thread hit); ``done()`` polls.
+    The underlying `PlanCache` insertion is thread-safe, so the serving
+    thread may keep ticking — but migrations should ``wait()`` first
+    (a migration mid-warm would warm shapes that no longer exist).
+    """
+
+    def __init__(self, fn: Callable[[], list]):
+        self._result: Optional[list] = None
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, args=(fn,), daemon=True,
+            name="finger-warmup")
+        self._thread.start()
+
+    def _run(self, fn) -> None:
+        try:
+            self._result = fn()
+        except BaseException as e:  # re-raised at wait()
+            self._exc = e
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def wait(self, timeout: Optional[float] = None) -> list:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise ServiceLifecycleError(
+                f"WarmupHandle.wait: background warming still compiling "
+                f"after {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result or []
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,12 +242,41 @@ class FingerService:
                              generation=self._layout.generation)
 
     # -- construction ----------------------------------------------------
+    @staticmethod
+    def _resolve_plan(config: ServiceConfig, mesh: Optional[Mesh],
+                      plan: Optional[ExecutionPlan]) -> ExecutionPlan:
+        """The plan to serve with: the caller's shared one (validated
+        compilation-compatible — how a fleet pool compiles its tick
+        once for N shards) or a freshly built one."""
+        if plan is None:
+            return build_plan(config, mesh)
+        if mesh is not None and mesh is not plan.mesh:
+            raise ServiceConfigError(
+                "open: both a mesh and a pre-built plan were passed "
+                "but the plan was built for a different mesh")
+        mine = PlanCache._key(config, plan.mesh)
+        theirs = PlanCache._key(plan.config, plan.mesh)
+        if mine != theirs:
+            raise ServiceConfigError(
+                f"open: the shared plan was compiled for a "
+                f"compilation-incompatible config ({theirs} vs "
+                f"{mine}); shards sharing a plan must agree on every "
+                "shape/method/placement field")
+        return plan
+
     @classmethod
     def open(cls, config: ServiceConfig, graphs: Sequence,
-             mesh: Optional[Mesh] = None) -> "FingerService":
+             mesh: Optional[Mesh] = None,
+             plan: Optional[ExecutionPlan] = None) -> "FingerService":
         """Validate the config, compile its execution plan, and place
-        the initial stacked state from B host graphs."""
+        the initial stacked state from B host graphs.
+
+        ``plan`` (optional) installs a pre-built `ExecutionPlan` from a
+        compilation-compatible sibling service instead of building a
+        fresh one — shards of a fleet pool share one compiled tick this
+        way (per-call donation keeps the shared jits safe)."""
         config.validate()
+        _apply_compilation_cache(config)
         graphs = list(graphs)
         if len(graphs) != config.batch_size:
             raise ServiceConfigError(
@@ -184,7 +288,7 @@ class FingerService:
                 f"open: graph node count(s) {sorted(set(too_big))} "
                 f"exceed config.n_pad={config.n_pad}; open with a "
                 "larger n_pad (or repad() a running service)")
-        plan = build_plan(config, mesh)
+        plan = cls._resolve_plan(config, mesh, plan)
         if config.method == "sparse_tick":
             from repro.core.sparse import SparseLayout
 
@@ -200,7 +304,8 @@ class FingerService:
     @classmethod
     def restore(cls, config: ServiceConfig,
                 mesh: Optional[Mesh] = None,
-                directory: Optional[str] = None) -> "FingerService":
+                directory: Optional[str] = None,
+                plan: Optional[ExecutionPlan] = None) -> "FingerService":
         """Resume from the latest checkpoint under ``directory`` (default:
         the config's checkpoint directory). Mesh-agnostic: the saving
         job's placement is irrelevant — arrays come back on host and the
@@ -213,6 +318,7 @@ class FingerService:
         "restore onto the layout I saved under" and "restore onto the
         layout I since migrated to" work, bit-exact."""
         config.validate()
+        _apply_compilation_cache(config)
         if config.method == "sparse_tick":
             raise ServiceConfigError(
                 "restore: sparse slot-space services are not "
@@ -224,7 +330,7 @@ class FingerService:
             raise ServiceConfigError(
                 "restore: no checkpoint directory — pass one or set "
                 "ServiceConfig.checkpoint.directory")
-        plan = build_plan(config, mesh)
+        plan = cls._resolve_plan(config, mesh, plan)
         states, step, meta = restore_stacked_state(
             ckpt_dir, exact_smax=config.exact_smax, method=config.method)
         b = int(states.q.shape[0])
@@ -415,6 +521,93 @@ class FingerService:
         else:
             vals, ids = self._plan.topk(self._last_scores, k)
         return np.asarray(vals), np.asarray(ids)
+
+    def score_at(self, slot: int) -> Optional[float]:
+        """The latest tick's score of one stream slot, read through a
+        jitted dynamic index (one compile per (B,) shape, not per slot
+        — and never a full (B,) gather). None before the first tick."""
+        self._check_open("score_at")
+        self._require_slot(slot, "score_at")
+        if self._last_scores is None:
+            return None
+        return float(np.asarray(
+            _score_at_jit(self._last_scores, np.int32(slot))))
+
+    # -- stream-slot hooks (the fleet's shard-facing surface) ------------
+    def _require_slot(self, slot: int, what: str) -> None:
+        if not 0 <= int(slot) < self._config.batch_size:
+            raise ServiceConfigError(
+                f"{what}: slot {slot} outside this service's "
+                f"batch_size={self._config.batch_size}")
+
+    def _require_idle(self, what: str) -> None:
+        if self.pending:
+            raise ServiceLifecycleError(
+                f"{what} with {self.pending} ingested tick(s) still "
+                "pending; poll() them first — swapping a stream row "
+                "under a queued tick would tear the stream")
+
+    def extract_stream(self, slot: int):
+        """One stream's state row (slot axis dropped), still on device
+        — the fleet migration's read half. A jitted dynamic gather with
+        the slot traced, so extraction compiles once per stacked shape.
+        The stacked state is not consumed. Requires an empty queue."""
+        self._check_open("extract_stream")
+        self._require_slot(slot, "extract_stream")
+        self._require_idle("extract_stream")
+        return migrate.take_stream(self._states, slot)
+
+    def install_stream(self, slot: int, row, slot_map=None) -> None:
+        """Write ``row`` (a single-stream state shaped/laid out like
+        one row of this service's stacked state — e.g. another shard's
+        `extract_stream` output re-embedded into this layout) into
+        ``slot``. Host (numpy) rows transfer as part of the jitted
+        update. Sparse services additionally take the stream's rebuilt
+        `SlotMap`. Requires an empty queue."""
+        self._check_open("install_stream")
+        self._require_slot(slot, "install_stream")
+        self._require_idle("install_stream")
+        if self._config.method == "sparse_tick":
+            if slot_map is None:
+                raise ServiceConfigError(
+                    "install_stream: sparse streams carry a host-side "
+                    "SlotMap — pass the row's map")
+            if (slot_map.layout.n_slots, slot_map.layout.m_pad) != \
+                    (self._capacity.n_slots, self._capacity.m_pad):
+                raise ServiceConfigError(
+                    f"install_stream: SlotMap capacities "
+                    f"(n_slots={slot_map.layout.n_slots}, "
+                    f"m_pad={slot_map.layout.m_pad}) != this service's "
+                    f"(n_slots={self._capacity.n_slots}, "
+                    f"m_pad={self._capacity.m_pad})")
+        elif slot_map is not None:
+            raise ServiceConfigError(
+                "install_stream: slot_maps are sparse-only state "
+                f"(method={self._config.method!r})")
+        self._states = migrate.put_stream(
+            self._states, row, slot,
+            out_shardings=self._plan.state_sharding())
+        if slot_map is not None:
+            slot_map.stream = slot
+            self._slot_maps[slot] = slot_map
+
+    def clear_stream(self, slot: int) -> None:
+        """Zero one stream's row back to the free-slot state (inactive
+        everywhere, all statistics 0 — its score against an empty delta
+        is exactly 0). The fleet migration's source-side release.
+        Requires an empty queue."""
+        self._check_open("clear_stream")
+        self._require_slot(slot, "clear_stream")
+        self._require_idle("clear_stream")
+        self._states = migrate.clear_stream(
+            self._states, slot,
+            out_shardings=self._plan.state_sharding())
+        if self._config.method == "sparse_tick":
+            from repro.core.sparse import SlotMap
+
+            self._slot_maps[slot] = SlotMap(
+                self._capacity, n_virtual=self._config.n_pad,
+                stream=slot)
 
     # -- persistence -----------------------------------------------------
     def save(self, directory: Optional[str] = None) -> str:
@@ -739,14 +932,22 @@ class FingerService:
             self._ingestor.put(d)
         return new_capacity
 
-    def warm_next_layouts(self, targets: Optional[Sequence[int]] = None
-                          ) -> list:
+    def warm_next_layouts(self, targets: Optional[Sequence[int]] = None,
+                          background: bool = False
+                          ) -> Union[list, WarmupHandle]:
         """Pre-compile execution plans (and migration transforms) for
         predicted next layouts, so a later `repad`/`compact` swaps to
         an already-compiled plan without a compile pause.
 
         Call it from serving idle time (between polls) — warming costs
         the compiles the migration would otherwise pay while stalled.
+        With ``background=True`` the compiles run on a daemon thread
+        and a `WarmupHandle` is returned instead of the warmed list:
+        ``handle.wait()`` joins (re-raising any warming error) — the
+        caller no longer pays the compile inline. Target prediction
+        (which reads the live state) still happens on the calling
+        thread; `PlanCache` insertion is thread-safe. Do not migrate
+        while a background warm is in flight — ``wait()`` first.
         ``targets`` is a list of n_pad values; the default prediction
         comes from `ServiceConfig.plan_cache`:
 
@@ -772,14 +973,40 @@ class FingerService:
         self._check_open("warm_next_layouts")
         policy = self._config.plan_cache
         if not policy.enabled:
-            return []
+            targets = []
+        elif targets is None:
+            targets = self._default_warm_targets(policy)
+        else:
+            targets = list(targets)
+        if background:
+            return WarmupHandle(lambda: self._warm_targets(targets))
+        return self._warm_targets(targets)
+
+    def _default_warm_targets(self, policy) -> list:
+        """The `PlanCachePolicy` prediction: the geometric grow target
+        plus (dense, ``warm_compact``) the pending compaction target.
+        Reads the live state — always runs on the calling thread, even
+        for a background warm."""
         if self._config.method == "sparse_tick":
             cap = self._capacity
-            if targets is None:
-                targets = [(int(round(cap.n_slots
-                                      * policy.growth_factor)),
-                            int(round(cap.m_pad
-                                      * policy.growth_factor)))]
+            return [(int(round(cap.n_slots * policy.growth_factor)),
+                     int(round(cap.m_pad * policy.growth_factor)))]
+        n_pad = self._layout.n_pad
+        targets = []
+        grow = int(round(n_pad * policy.growth_factor))
+        if grow > n_pad:
+            targets.append(grow)
+        if policy.warm_compact:
+            n_live = migrate.live_slot_count(self._states)
+            if 0 < n_live < n_pad:
+                targets.append(n_live)
+        return targets
+
+    def _warm_targets(self, targets: Sequence) -> list:
+        """The compile loop of `warm_next_layouts` (inline or on the
+        warming thread)."""
+        if self._config.method == "sparse_tick":
+            cap = self._capacity
             warmed = []
             for n_slots, m_pad in targets:
                 n_slots, m_pad = int(n_slots), int(m_pad)
@@ -798,15 +1025,6 @@ class FingerService:
                 warmed.append((n_slots, m_pad))
             return warmed
         n_pad = self._layout.n_pad
-        if targets is None:
-            targets = []
-            grow = int(round(n_pad * policy.growth_factor))
-            if grow > n_pad:
-                targets.append(grow)
-            if policy.warm_compact:
-                n_live = migrate.live_slot_count(self._states)
-                if 0 < n_live < n_pad:
-                    targets.append(n_live)
         warmed = []
         for target in targets:
             target = int(target)
