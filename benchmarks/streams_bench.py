@@ -557,6 +557,138 @@ def bench_fleet() -> dict:
     return cell
 
 
+def bench_fleet_hotpath(shards: int = 4, streams_per_shard: int = 16,
+                        ticks: int = 6) -> dict:
+    """The PR-9 steady-state fleet hot path, stacked vs sequential.
+
+    One pool × ``shards`` shards × ``streams_per_shard`` streams
+    (4 × 16 = 64 tenants by default) serves identical delta streams
+    under ``stacked_ticks`` off (PR-8 per-shard dispatch: S launches +
+    per-tenant score reads) and on (one pool-stacked launch, one
+    device→host score-plane pull amortized over every tenant). Each
+    tick is split into its three phases — `ingest` (vectorized
+    translation + staging), `poll` (dispatch only; the launch is
+    async), `scores` (the blocking read) — so the host-overhead win
+    shows up where it happens. A separate short run with
+    ``save_every_ticks`` measures the periodic checkpoint pause that
+    `poll()` now takes *after* dispatch (`last_save_pause_s`). On CPU
+    the absolute times are host-dominated; the row is stamped
+    ``"interpret"`` like every other placeholder row."""
+    import shutil
+    import tempfile
+
+    from repro.fleet import FingerFleet, FleetConfig, PoolSpec
+
+    n_nodes, n_pad, k_pad = 10, 16, 4
+    n_tenants = shards * streams_per_shard
+    names = [f"t{i}" for i in range(n_tenants)]
+    graphs = {n: erdos_renyi(n_nodes, 0.3, seed=i, weighted=True)
+              for i, n in enumerate(names)}
+    interpret = default_interpret(None)
+
+    def ds_at(seed):
+        r = np.random.default_rng(seed)
+        ds = {}
+        for name in names:
+            i, j = sorted(r.choice(n_nodes, 2, replace=False).tolist())
+            ds[name] = GraphDelta.from_arrays(
+                [i], [j], [r.uniform(0.5, 2.0)], [0.0],
+                n_nodes=n_nodes, k_pad=k_pad, j_pad=2)
+        return ds
+
+    def pool_cfg(**kw):
+        return FleetConfig(pools=(
+            PoolSpec(name="p", n_pad=n_pad, shards=shards,
+                     streams_per_shard=streams_per_shard, k_pad=k_pad,
+                     j_pad=2),), **kw)
+
+    def drive(stacked: bool) -> dict:
+        fleet = FingerFleet.open(pool_cfg(stacked_ticks=stacked))
+        for n in names:
+            fleet.admit(n, graphs[n])
+        fleet.ingest(ds_at(0))
+        fleet.poll()  # compiles the tick plans
+        fleet.scores()
+        fleet.warm()
+        seq = [ds_at(1 + t) for t in range(ticks)]
+        t_ing = t_poll = t_sc = 0.0
+        for d in seq:
+            t0 = time.perf_counter()
+            fleet.ingest(d)
+            t1 = time.perf_counter()
+            fleet.poll()
+            t2 = time.perf_counter()
+            scores = fleet.scores()
+            t3 = time.perf_counter()
+            t_ing += t1 - t0
+            t_poll += t2 - t1
+            t_sc += t3 - t2
+        assert len(scores) == n_tenants
+        launches = fleet.last_poll_launches
+        fleet.close()
+        return {"ingest_ms": t_ing / ticks * 1e3,
+                "poll_dispatch_ms": t_poll / ticks * 1e3,
+                "scores_ms": t_sc / ticks * 1e3,
+                "tick_ms": (t_ing + t_poll + t_sc) / ticks * 1e3,
+                "launches_per_tick": launches}
+
+    seq_run = drive(False)
+    stk_run = drive(True)
+
+    # Periodic-save pause, now taken after the tick's dispatch: a
+    # short stacked run with save_every_ticks=2 on a throwaway dir.
+    tmp = tempfile.mkdtemp(prefix="fleet_hotpath_bench_")
+    try:
+        fleet = FingerFleet.open(pool_cfg(stacked_ticks=True,
+                                          directory=tmp,
+                                          save_every_ticks=2))
+        for n in names:
+            fleet.admit(n, graphs[n])
+        pauses = []
+        for t in range(4):
+            fleet.ingest(ds_at(100 + t))
+            fleet.poll()
+            if fleet.last_save_pause_s > 0:
+                pauses.append(fleet.last_save_pause_s)
+        fleet.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    cell = {
+        "shards": shards, "streams_per_shard": streams_per_shard,
+        "tenants": n_tenants, "ticks": ticks, "interpret": interpret,
+        "seq_ingest_ms": seq_run["ingest_ms"],
+        "seq_poll_dispatch_ms": seq_run["poll_dispatch_ms"],
+        "seq_scores_ms": seq_run["scores_ms"],
+        "seq_tick_ms": seq_run["tick_ms"],
+        "seq_launches_per_tick": seq_run["launches_per_tick"],
+        "stacked_ingest_ms": stk_run["ingest_ms"],
+        "stacked_poll_dispatch_ms": stk_run["poll_dispatch_ms"],
+        "stacked_scores_ms": stk_run["scores_ms"],
+        "stacked_tick_ms": stk_run["tick_ms"],
+        "stacked_launches_per_tick": stk_run["launches_per_tick"],
+        "stacked_tick_speedup":
+            seq_run["tick_ms"] / max(stk_run["tick_ms"], 1e-9),
+        "stacked_scores_speedup":
+            seq_run["scores_ms"] / max(stk_run["scores_ms"], 1e-9),
+        "save_pause_ms": float(np.mean(pauses)) * 1e3,
+    }
+    emit(f"fleet_hotpath_seq_tick_s{shards}_t{n_tenants}",
+         seq_run["tick_ms"] * 1e-3,
+         f"{seq_run['launches_per_tick']} launches/tick")
+    emit(f"fleet_hotpath_stacked_tick_s{shards}_t{n_tenants}",
+         stk_run["tick_ms"] * 1e-3,
+         f"{stk_run['launches_per_tick']} launch(es)/tick, "
+         f"{cell['stacked_tick_speedup']:.2f}x vs sequential")
+    emit(f"fleet_hotpath_scores_s{shards}_t{n_tenants}",
+         stk_run["scores_ms"] * 1e-3,
+         f"{cell['stacked_scores_speedup']:.2f}x vs per-tenant reads")
+    emit(f"fleet_hotpath_save_pause_s{shards}_t{n_tenants}",
+         cell["save_pause_ms"] * 1e-3,
+         "post-dispatch periodic save")
+    return cell
+
+
 _SWEEP_KEYS = ("b", "n_pad", "k_pad", "method", "interpret",
                "loop_tick_latency_us",
                "tick_latency_us", "fused_tick_latency_us",
@@ -581,6 +713,16 @@ _FLEET_KEYS = ("pools", "shards_per_pool", "streams_per_shard",
                "tenants", "admission_ms", "cold_promotion_ms",
                "warm_promotion_ms", "warm_promotion_speedup",
                "recovery_ms", "recovered_tenants")
+_FLEET_HOTPATH_KEYS = ("shards", "streams_per_shard", "tenants",
+                       "ticks", "interpret",
+                       "seq_ingest_ms", "seq_poll_dispatch_ms",
+                       "seq_scores_ms", "seq_tick_ms",
+                       "seq_launches_per_tick",
+                       "stacked_ingest_ms", "stacked_poll_dispatch_ms",
+                       "stacked_scores_ms", "stacked_tick_ms",
+                       "stacked_launches_per_tick",
+                       "stacked_tick_speedup", "stacked_scores_speedup",
+                       "save_pause_ms")
 
 
 def _require(mapping, keys, where: str) -> None:
@@ -611,7 +753,8 @@ def validate_report(report: dict) -> dict:
     _require(report, ("bench", "method", "quick", "backend",
                       "device_count", "sweep", "ingest_overlap",
                       "mixed_n", "migration", "sparse_scaling",
-                      "sparse_crossover", "fleet"), "top level")
+                      "sparse_crossover", "fleet", "fleet_hotpath"),
+             "top level")
     if report["bench"] != "streams":
         raise ValueError(
             f"BENCH_streams.json: bench={report['bench']!r} != 'streams'")
@@ -645,6 +788,12 @@ def validate_report(report: dict) -> dict:
     _require(report["sparse_crossover"], _SPARSE_CROSSOVER_KEYS,
              "sparse_crossover")
     _require(report["fleet"], _FLEET_KEYS, "fleet")
+    _require(report["fleet_hotpath"], _FLEET_HOTPATH_KEYS,
+             "fleet_hotpath")
+    if not isinstance(report["fleet_hotpath"]["interpret"], bool):
+        raise ValueError(
+            "BENCH_streams.json: fleet_hotpath.interpret must be a "
+            f"boolean, got {report['fleet_hotpath']['interpret']!r}")
     return report
 
 
@@ -684,6 +833,7 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
         "sparse_scaling": [],
         "sparse_crossover": None,
         "fleet": None,
+        "fleet_hotpath": None,
     }
     for n_pad in n_pads:
         for b in batches:
@@ -713,6 +863,8 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
             n_pads=[1_000, 10_000, 100_000], k=min(k, 8),
             n_slots=128, m_pad=1024, iters=iters)
     report["fleet"] = bench_fleet()
+    report["fleet_hotpath"] = bench_fleet_hotpath(
+        ticks=4 if quick else 8)
     validate_report(report)  # fail fast before clobbering the artifact
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)

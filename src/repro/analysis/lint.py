@@ -24,6 +24,14 @@ fixed by hand in PRs 1–5); the linter makes the fix permanent:
   ``src/repro/kernels/`` missing its ``kernel.py`` / ``ref.py`` /
   ``parity.py`` companions (the interpret-fallback/parity-registration
   triple CPU CI depends on).
+- ``per-item-host-sync`` — a device value pulled to host *inside a
+  loop* (``x.item()``, ``float(f(...))``, ``np.asarray(obj.attr)`` /
+  ``jax.device_get(...)`` per element): each iteration blocks on a
+  device→host sync, the PR-9 fleet hot-path class. Batch the pull —
+  one `np.asarray` of the stacked plane outside the loop — and index
+  the host array instead. Plain-`Name` pulls (``np.asarray(mat)``)
+  are exempt: hoisting the *expression* out of the loop is the fix
+  the rule asks for, and a named buffer is usually already that.
 
 Suppress a finding with an inline pragma on the flagged line:
 
@@ -56,6 +64,10 @@ RULES: Dict[str, str] = {
         "mutable default on a frozen dataclass field",
     "kernel-package-triple":
         "kernel package missing its kernel.py/ref.py/parity.py triple",
+    "per-item-host-sync":
+        "device value materialized to host inside a loop (.item()/"
+        "float(call)/np.asarray(expr) per element) — each iteration "
+        "pays a device sync; batch one pull outside the loop",
 }
 
 _PRAGMA = re.compile(r"#\s*lint:\s*disable=([\w,\-]+)")
@@ -408,6 +420,55 @@ def _check_numpy_handoff(tree: ast.AST, path: str,
                     break
 
 
+# host-materializing callables: dotted name → flag when the first arg
+# is an expression (Call/Subscript/Attribute) computed in-loop
+_SYNC_FUNCS = {"np.asarray", "numpy.asarray", "np.array",
+               "numpy.array", "jax.device_get"}
+
+
+def _check_host_sync(tree: ast.AST, path: str,
+                     out: List[LintViolation]) -> None:
+    """The per-item-host-sync rule (see module docstring)."""
+    spans: List[Tuple[int, int]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.While)):
+            spans.append((node.lineno, max(
+                n.lineno for n in ast.walk(node)
+                if hasattr(n, "lineno"))))
+    if not spans:
+        return
+    in_loop = lambda line: any(a <= line <= b for a, b in spans)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not in_loop(node.lineno):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr == "item" \
+                and not node.args:
+            out.append(LintViolation(
+                "per-item-host-sync", path, node.lineno,
+                ".item() inside a loop — one blocking device→host "
+                "sync per iteration; pull the whole array once "
+                "outside the loop and index host-side"))
+            continue
+        dotted = _dotted(fn) or ""
+        per_item = (
+            dotted == "float" and node.args
+            and isinstance(node.args[0], ast.Call)
+        ) or (
+            dotted in _SYNC_FUNCS and node.args
+            and isinstance(node.args[0],
+                           (ast.Call, ast.Subscript, ast.Attribute))
+        )
+        if per_item:
+            out.append(LintViolation(
+                "per-item-host-sync", path, node.lineno,
+                f"'{dotted}(...)' materializes a freshly computed "
+                "value inside a loop — one device→host sync per "
+                "iteration; batch the computation and pull one "
+                "stacked array outside the loop"))
+
+
 def _check_frozen_dataclasses(tree: ast.AST, path: str,
                               out: List[LintViolation]) -> None:
     for node in ast.walk(tree):
@@ -450,6 +511,7 @@ def lint_source(source: str, path: str) -> List[LintViolation]:
     _check_jit_rules(tree, path, out)
     _check_numpy_handoff(tree, path, out)
     _check_frozen_dataclasses(tree, path, out)
+    _check_host_sync(tree, path, out)
 
     disabled = _pragmas(source)
     for v in out:

@@ -10,10 +10,17 @@ inline in the tests:
   "mixed-n ticks across a migration chain compile ≤ P plans".
 - `no_transfers()` — `jax.transfer_guard` enforcement: any implicit
   host↔device transfer inside the block raises.
+- `transfer_budget(n)` — a device→host *materialization* sentinel.
+  Counts actual on-device arrays being brought to host (uncached
+  `ArrayImpl._value` reads: `np.asarray`, `float(...)`,
+  `jax.device_get`) and raises `TransferBudgetExceeded` past ``n`` —
+  e.g. "`fleet.scores()` syncs at most once per pool per tick".
+  Unlike `no_transfers` this counts *explicit* pulls too, which is
+  exactly the score-plane contract.
 - `debug_nan_checks()` — debug-NaN tick mode: jitted computations
   re-run op-by-op on a NaN result and raise at the producing op.
 
-All three nest with each other and with user code arbitrarily.
+All of these nest with each other and with user code arbitrarily.
 """
 from __future__ import annotations
 
@@ -85,6 +92,77 @@ def compile_budget(max_compiles: Optional[int],
             f"compiles > budget {max_compiles} — a jit cache is "
             "fragmenting (static-arg churn, layout-keyed retrace, or a "
             "missing warm plan)")
+
+
+class TransferBudgetExceeded(AssertionError):
+    """More device→host materializations happened than budgeted."""
+
+
+@dataclasses.dataclass
+class TransferCount:
+    """Live view of the transfer sentinel's counter (yielded by
+    `transfer_budget`); ``count`` keeps updating inside the block."""
+    budget: Optional[int]
+    what: str = ""
+    count: int = 0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    def _bump(self) -> None:
+        with self._lock:
+            self.count += 1
+
+
+@contextlib.contextmanager
+def transfer_budget(max_transfers: Optional[int],
+                    what: str = "") -> Iterator[TransferCount]:
+    """Assert at most ``max_transfers`` device→host materializations.
+
+    Counts uncached reads of ``ArrayImpl._value`` — the single funnel
+    every host materialization of a committed device array goes
+    through (`np.asarray(x)`, `float(x)`, `jax.device_get(x)`,
+    `x.__array__()`). Cached re-reads of the same array are free, like
+    the runtime itself. ``max_transfers=None`` only counts (never
+    raises) — useful for calibrating a budget before pinning it.
+
+    On the CPU backend ``np.asarray`` of a *ready* array takes the
+    buffer-protocol shortcut — a zero-copy view that really is not a
+    transfer, and is not counted. `float(...)` of a fresh device value
+    and `jax.device_get` funnel through `_value` on every backend, so
+    per-item-sync regressions still trip the budget on CPU CI.
+
+    Implementation: temporarily swaps the `_value` property on
+    ``jax._src.array.ArrayImpl`` for a counting wrapper and restores
+    the predecessor on exit, so nested budgets each see every
+    materialization inside their own block. Scalar ``.item()`` takes a
+    C++ shortcut on some jaxlib builds and may not be counted — the
+    static `per-item-host-sync` lint rule covers that form.
+    """
+    from jax._src import array as _array_mod
+
+    impl = _array_mod.ArrayImpl
+    counter = TransferCount(budget=max_transfers, what=what)
+    prev = impl._value
+    prev_fget = prev.fget
+
+    def _counting_value(self):
+        if self._npy_value is None:
+            counter._bump()
+        return prev_fget(self)
+
+    impl._value = property(_counting_value)
+    try:
+        yield counter
+    finally:
+        impl._value = prev
+    if max_transfers is not None and counter.count > max_transfers:
+        label = f" ({what})" if what else ""
+        raise TransferBudgetExceeded(
+            f"transfer budget exceeded{label}: {counter.count} "
+            f"device→host materializations > budget {max_transfers} — "
+            "a hot path is syncing per item (per-slot float()/"
+            "np.asarray() reads) instead of batching one pull per "
+            "plane")
 
 
 @contextlib.contextmanager

@@ -22,7 +22,12 @@ layer: a 2-bucket × 2-shard `FingerFleet` serves tenant ticks, an
 explicit cross-bucket promotion (extract → install → clear row
 migration) and an occupancy-driven auto-compaction *under a staged
 tick* — each serving phase at zero compiles after `FingerFleet.warm`,
-pinning the fleet's pause-free-rebalance claim.
+pinning the fleet's pause-free-rebalance claim. Each budgeted tick
+additionally pins the PR-9 hot-path contract: `poll()` dispatches
+exactly one stacked launch per pool layout-group
+(`fleet.last_poll_launches`), `ingest()` and the poll dispatch pull
+zero device values to host, and `scores()` costs at most one
+device→host transfer per pool (`sanitize.transfer_budget`).
 
 Run standalone via ``python -m repro.analysis sentinel`` or as part of
 the default ``python -m repro.analysis`` gate.
@@ -33,7 +38,9 @@ from typing import Any, Dict, List
 
 import numpy as np
 
-from repro.analysis.sanitize import compile_budget
+import jax
+
+from repro.analysis.sanitize import compile_budget, transfer_budget
 from repro.graphs.generators import erdos_renyi
 from repro.graphs.types import GraphDelta
 from repro.serving import FingerService, ServiceConfig, TopKSpec
@@ -56,7 +63,8 @@ def _tick_deltas(graphs, n_pad: int, seed: int) -> List[GraphDelta]:
     for g in graphs:
         n = g.n_nodes
         i, j = sorted(rng.choice(n, 2, replace=False).tolist())
-        w_old = float(np.asarray(g.weights)[i, j])
+        # test-fixture setup, not a serving hot path
+        w_old = float(np.asarray(g.weights)[i, j])  # lint: disable=per-item-host-sync
         out.append(GraphDelta.from_arrays(
             [i], [j], [0.5 if w_old == 0 else -w_old], [w_old],
             n_nodes=n, n_pad=n_pad, k_pad=_K_PAD))
@@ -175,18 +183,56 @@ def run_sparse_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
     }
 
 
-def _fleet_tick(fleet, sizes, seed: int) -> None:
+def _fleet_tick(fleet, sizes, seed: int, budget: bool = False,
+                expected_launches: int = None) -> None:
     rng = np.random.default_rng(seed)
     ds = {}
     for name, n in sizes.items():
         i, j = sorted(rng.choice(n, 2, replace=False).tolist())
-        ds[name] = GraphDelta.from_arrays(
-            [i], [j], [float(rng.uniform(0.5, 2.0))], [0.0],
-            n_nodes=n, k_pad=_K_PAD, j_pad=2)
-    fleet.ingest(ds)
-    fleet.poll()
-    scores = fleet.scores()
+        # Pre-materialize to host numpy: the tick fixtures must not
+        # spend the serving path's transfer budget themselves.
+        ds[name] = jax.tree_util.tree_map(np.asarray,
+                                          GraphDelta.from_arrays(
+            [i], [j], [rng.uniform(0.5, 2.0)], [0.0],
+            n_nodes=n, k_pad=_K_PAD, j_pad=2))
+    if not budget:
+        fleet.ingest(ds)
+        fleet.poll()
+        scores = fleet.scores()
+    else:
+        with transfer_budget(0, "fleet.ingest"):
+            fleet.ingest(ds)
+        with transfer_budget(0, "fleet.poll dispatch"):
+            fleet.poll()
+        if expected_launches is not None:
+            assert fleet.last_poll_launches == expected_launches, (
+                f"poll dispatched {fleet.last_poll_launches} launches,"
+                f" expected {expected_launches} (one per pool "
+                "layout-group)")
+        with transfer_budget(len(fleet.config.pools),
+                             "fleet.scores score plane"):
+            scores = fleet.scores()
     assert set(scores) == set(sizes)
+
+
+def _expected_launches(fleet) -> int:
+    """One launch per pool layout-group (stacked pools), one per shard
+    otherwise — the dispatch count `poll()` must hit."""
+    from repro.fleet import pooltick
+
+    total = 0
+    live = fleet.live_shards()
+    for pool_i, shard_ids in live.items():
+        pool = fleet.config.pools[pool_i]
+        if fleet.config.stacked_ticks and pooltick.stackable(
+                pool.method):
+            total += len({
+                (fleet.shard_service(pool_i, s).layout.n_pad,
+                 fleet.shard_service(pool_i, s).layout.generation)
+                for s in shard_ids})
+        else:
+            total += len(shard_ids)
+    return total
 
 
 def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
@@ -224,13 +270,18 @@ def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
         assert len(top) == len(sizes)
         fleet.warm()
 
+        # Steady state: every pool is one layout group — the stacked
+        # dispatch contract is exactly one launch per pool.
+        assert _expected_launches(fleet) == len(config.pools)
         with compile_budget(0, "fleet ticks + cross-bucket "
                                "promotion") as c1:
             for seed in range(1, 1 + ticks_per_phase):
-                _fleet_tick(fleet, sizes, seed)
+                _fleet_tick(fleet, sizes, seed, budget=True,
+                            expected_launches=len(config.pools))
             fleet.promote("a")  # small -> large, live row migration
             for seed in range(10, 10 + ticks_per_phase):
-                _fleet_tick(fleet, sizes, seed)
+                _fleet_tick(fleet, sizes, seed, budget=True,
+                            expected_launches=len(config.pools))
         phases["ticks_promotion"] = c1.count
         assert fleet.directory.get("a").pool == 1
 
@@ -240,13 +291,21 @@ def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
         with compile_budget(0, "fleet ticks + auto-compaction under "
                                "a staged tick") as c2:
             for seed in range(20, 20 + ticks_per_phase):
-                _fleet_tick(fleet, sizes, seed)
+                _fleet_tick(fleet, sizes, seed, budget=True,
+                            expected_launches=len(config.pools))
             fleet.ingest({})  # stage, then rebalance, then poll
             actions = fleet.rebalance()
             assert any(a["action"] == "compact" for a in actions)
             fleet.poll()
+            # The compaction peeled shard(s) into private layout
+            # groups: the dispatch count grows by exactly the new
+            # group count, still ≪ one per shard.
+            post = _expected_launches(fleet)
+            assert post > len(config.pools)
+            assert fleet.last_poll_launches == post
             for seed in range(30, 30 + ticks_per_phase):
-                _fleet_tick(fleet, sizes, seed)
+                _fleet_tick(fleet, sizes, seed, budget=True,
+                            expected_launches=post)
         phases["ticks_staged_compaction"] = c2.count
 
     return {
@@ -256,4 +315,7 @@ def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
         "ticks_per_phase": ticks_per_phase,
         "pools": [p.name for p in config.pools],
         "compactions": len(actions),
+        "launches_steady": len(config.pools),
+        "launches_post_compaction": post,
+        "transfer_budget_scores_per_tick": len(config.pools),
     }

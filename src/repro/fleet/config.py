@@ -117,6 +117,21 @@ class FleetConfig:
     compact_occupancy: float = 0.5
     save_every_ticks: Optional[int] = None
     compilation_cache_dir: Optional[str] = None
+    # Steady-state tick path: True advances each pool's live dense
+    # shards as ONE stacked jit launch per layout group
+    # (`fleet.pooltick`) and leaves the per-pool score matrix on device
+    # for the single-sync score plane; False keeps the PR 8 sequential
+    # per-shard `poll()` path (the parity baseline and the honest bench
+    # comparator). Non-stackable (sparse/fused) pools always fall back
+    # to the sequential path regardless.
+    stacked_ticks: bool = True
+    # WAL growth cap: prune per-tenant WAL entries older than
+    # ``fleet_step - wal_retention_ticks`` at ingest time. Entries at
+    # or before the tenant's durable base are free to drop; pruning
+    # *past* the base advances the tenant's `wal_floor`, and a later
+    # `recover()` that needs the truncated range raises RecoveryError
+    # by name. None = unbounded (pruned only by save()).
+    wal_retention_ticks: Optional[int] = None
 
     def __post_init__(self):
         object.__setattr__(self, "pools", tuple(self.pools))
@@ -156,6 +171,11 @@ class FleetConfig:
                 raise FleetConfigError(
                     "save_every_ticks set but directory is None; "
                     "periodic fleet saves need somewhere to go")
+        if self.wal_retention_ticks is not None \
+                and self.wal_retention_ticks <= 0:
+            raise FleetConfigError(
+                f"wal_retention_ticks must be positive (None = "
+                f"unbounded), got {self.wal_retention_ticks}")
 
     def pool_index(self, name: str) -> int:
         for i, p in enumerate(self.pools):

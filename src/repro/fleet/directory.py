@@ -55,6 +55,12 @@ class TenantEntry:
     # past it, the device score at the slot is stale — `scores`
     # reports `last_score` instead. Transient (not serialized).
     installed_step: int = -1
+    # Highest WAL step ever pruned for this tenant (retention policy or
+    # save-time truncation). Recovery needs the contiguous range
+    # (base_step, now]; if wal_floor > base_step, part of that range is
+    # gone and `recover()` must raise instead of silently replaying a
+    # gapped log.
+    wal_floor: int = 0
 
     def used_positions(self) -> np.ndarray:
         """Positions this tenant occupies in its stream row."""
@@ -70,6 +76,7 @@ class TenantEntry:
             else [int(p) for p in self.slot_of_node],
             "base_step": int(self.base_step),
             "last_score": float(self.last_score),
+            "wal_floor": int(self.wal_floor),
         }
 
     @classmethod
@@ -81,7 +88,9 @@ class TenantEntry:
                    slot_of_node=None if som is None
                    else np.asarray(som, np.int32),
                    base_step=int(d.get("base_step", 0)),
-                   last_score=float(d.get("last_score", 0.0)))
+                   last_score=float(d.get("last_score", 0.0)),
+                   wal_floor=int(d.get("wal_floor",
+                                       d.get("base_step", 0))))
 
 
 class TenantDirectory:

@@ -18,12 +18,14 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import time
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.sparse import SparseCapacityError, sparse_state_from_graph
 from repro.core.state import FingerState, finger_state
+from repro.fleet import pooltick
 from repro.fleet.config import FleetConfig
 from repro.fleet.directory import TenantDirectory, TenantEntry
 from repro.fleet.errors import (AdmissionError, FleetConfigError,
@@ -54,6 +56,14 @@ class FingerFleet:
         self._staged = False
         self._closed = False
         self._dead: Dict[Tuple[int, int], DeadShard] = {}
+        # The per-pool score plane: pool -> [(shard_ids, (S, B) device
+        # score matrix)] per stacked launch of the latest tick, plus
+        # its lazily-materialized host mirror (one transfer per group
+        # per tick, shared by every scores()/top_anomalies() read).
+        self._pool_scores_dev: Dict[int, list] = {}
+        self._pool_scores_host: Dict[int, Dict[int, np.ndarray]] = {}
+        self._last_poll_launches = 0
+        self._last_save_pause_s = 0.0
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -188,7 +198,7 @@ class FingerFleet:
             name=name, pool=pool_i, shard=shard_i, slot=slot,
             n_nodes=n_t, slot_of_node=slot_of_node,
             base_step=self._step, base_state=base,
-            installed_step=self._step)
+            installed_step=self._step, wal_floor=self._step)
         self._directory.add(entry)
         return entry
 
@@ -247,48 +257,159 @@ class FingerFleet:
                 continue
             self._rebalancer.ensure_capacity(name, d)
         step_next = self._step + 1
-        per_shard: Dict[Tuple[int, int], Dict[int, GraphDelta]] = {}
+        # Translation: dense tenants stage numpy-vectorized rows
+        # straight into their shard's preallocated (B, k_pad) buffers
+        # (one stacked GraphDelta per shard, no per-tenant allocation);
+        # sparse tenants keep the per-tenant path — their SlotMap
+        # translation is stateful inside the service.
+        stages: Dict[Tuple[int, int], object] = {}
+        sparse_slots: Dict[Tuple[int, int], Dict[int, GraphDelta]] = {}
+        wal_pending: List[Tuple[TenantEntry, GraphDelta]] = []
         for name, d in deltas.items():
             entry = self._directory.get(name)
-            entry.wal.append((step_next, d))
+            wal_pending.append((entry, d))
             if self._is_dead(entry.pool, entry.shard):
                 continue
             svc = self.shard_service(entry.pool, entry.shard)
             pool = self._config.pools[entry.pool]
-            t = self._router.translate(entry, d, svc, pool)
-            per_shard.setdefault(
-                (entry.pool, entry.shard), {})[entry.slot] = t
+            key = (entry.pool, entry.shard)
+            if pool.method == "sparse_tick":
+                t = self._router.translate(entry, d, svc, pool)
+                sparse_slots.setdefault(key, {})[entry.slot] = t
+            else:
+                stage = stages.get(key)
+                if stage is None:
+                    stage = self._router.stage_for(key, pool)
+                    stages[key] = stage
+                self._router.stage_dense(entry, d, svc, pool, stage)
+        # WAL: one buffered commit per tick, after every translation
+        # succeeded — a rejected tick leaves no partial WAL — with the
+        # retention policy applied as part of the same pass.
+        retention = self._config.wal_retention_ticks
+        for entry, d in wal_pending:
+            entry.wal.append((step_next, d))
+            if retention is not None:
+                cutoff = step_next - retention
+                if entry.wal[0][0] <= cutoff:
+                    pruned_to = max(s for s, _ in entry.wal
+                                    if s <= cutoff)
+                    entry.wal = [w for w in entry.wal
+                                 if w[0] > cutoff]
+                    entry.wal_floor = max(entry.wal_floor, pruned_to)
         for pool_i, shard_i in self.live_shard_ids():
             pool = self._config.pools[pool_i]
             svc = self.shard_service(pool_i, shard_i)
-            slots = per_shard.get((pool_i, shard_i), {})
-            empty = self._router.empty_delta(pool, svc)
-            svc.ingest([slots.get(s, empty)
-                        for s in range(pool.streams_per_shard)])
+            key = (pool_i, shard_i)
+            if pool.method == "sparse_tick":
+                slots = sparse_slots.get(key, {})
+                empty = self._router.empty_delta(pool, svc)
+                svc.ingest([slots.get(s, empty)
+                            for s in range(pool.streams_per_shard)])
+            else:
+                stage = stages.get(key)
+                if stage is None:  # no tenant delta: all-zero rows
+                    stage = self._router.stage_for(key, pool)
+                svc.ingest(stage.finish(svc))
         self._staged = True
 
     def poll(self) -> int:
         """Advance the whole fleet one tick (all live shards — shard
         step stays == fleet step). Ticks an all-empty delta when
-        nothing was staged. Returns the new fleet step."""
+        nothing was staged. Returns the new fleet step.
+
+        Steady-state dispatch (``config.stacked_ticks``): each pool's
+        live dense shards advance as ONE stacked jit launch per layout
+        group (`fleet.pooltick`), leaving the (S, B) score matrix on
+        device as the tick's score plane; non-stackable pools (sparse/
+        fused) fall back to per-shard `poll()`. A due periodic save
+        runs AFTER every pool's tick has been dispatched — the
+        checkpoint never serializes ahead of device work — and its
+        pause is recorded in `last_save_pause_s` instead of silently
+        inflating the tick.
+        """
         self._check_open("poll")
         if not self._staged:
             self.ingest({})
-        for pool_i, shard_i in self.live_shard_ids():
-            self.shard_service(pool_i, shard_i).poll()
+        self._pool_scores_dev = {}
+        self._pool_scores_host = {}
+        launches = 0
+        live = self.live_shards()
+        for pool_i in sorted(live):
+            pool = self._config.pools[pool_i]
+            if not (self._config.stacked_ticks
+                    and pooltick.stackable(pool.method)):
+                for shard_i in live[pool_i]:
+                    self.shard_service(pool_i, shard_i).poll()
+                    launches += 1
+                continue
+            # Group live shards by live layout: shards of one pool
+            # share a config, but a compacted shard has a private
+            # (smaller, regenerated) layout and ticks in its own group.
+            groups: Dict[Tuple[int, int], list] = {}
+            for shard_i in live[pool_i]:
+                svc = self.shard_service(pool_i, shard_i)
+                gkey = (svc.layout.n_pad, svc.layout.generation)
+                groups.setdefault(gkey, []).append((shard_i, svc))
+            planes = []
+            for members in groups.values():
+                dists = pooltick.tick_pool([svc for _, svc in members])
+                launches += 1
+                planes.append(([s for s, _ in members], dists))
+            self._pool_scores_dev[pool_i] = planes
         self._step += 1
         self._staged = False
+        self._last_poll_launches = launches
+        self._last_save_pause_s = 0.0
         every = self._config.save_every_ticks
         if every is not None and self._step % every == 0:
+            t0 = time.perf_counter()
             self.save()
+            self._last_save_pause_s = time.perf_counter() - t0
         return self._step
 
+    @property
+    def last_poll_launches(self) -> int:
+        """Device launches the latest `poll()` dispatched — one per
+        pool layout-group when stacked, one per shard sequentially
+        (the sentinel's dispatch-budget probe)."""
+        return self._last_poll_launches
+
+    @property
+    def last_save_pause_s(self) -> float:
+        """Wall-clock seconds the latest `poll()` spent in its
+        periodic whole-fleet save (0.0 when none was due)."""
+        return self._last_save_pause_s
+
     # -- queries ----------------------------------------------------------
+    def _host_score_row(self, pool_i: int,
+                        shard_i: int) -> Optional[np.ndarray]:
+        """One shard's (B,) host score row out of the tick's score
+        plane — materialized lazily with ONE device→host transfer per
+        pool layout-group per tick, then indexed for free by every
+        per-tenant read and top-k merge. None when the shard ticked
+        outside the plane (sequential mode, sparse pool, pre-first-
+        tick)."""
+        rows = self._pool_scores_host.get(pool_i)
+        if rows is None:
+            planes = self._pool_scores_dev.get(pool_i)
+            if planes is None:
+                return None
+            rows = {}
+            for shard_ids, mat in planes:
+                host = np.asarray(mat)  # the pool's one transfer
+                for j, s in enumerate(shard_ids):
+                    rows[s] = host[j]
+            self._pool_scores_host[pool_i] = rows
+        return rows.get(shard_i)
+
     def scores(self, names: Optional[List[str]] = None
                ) -> Dict[str, float]:
-        """Latest per-tenant JSdist scores — one jitted slot read per
-        tenant, never a full (B,) gather. Tenants stranded on a dead
-        shard report their last known score."""
+        """Latest per-tenant JSdist scores. Stacked-tick pools read the
+        cached host score plane (at most one device→host transfer per
+        pool per tick, amortized over every tenant); other shards keep
+        the jitted one-slot read. Never a full per-tenant (B,) gather.
+        Tenants stranded on a dead shard — or (re)installed since the
+        shard last ticked — report their last known score."""
         self._check_open("scores")
         out: Dict[str, float] = {}
         for name in (self._directory.names() if names is None
@@ -300,29 +421,42 @@ class FingerFleet:
                 # last ticked: the slot's device score is stale
                 out[name] = entry.last_score
                 continue
-            svc = self.shard_service(entry.pool, entry.shard)
-            v = svc.score_at(entry.slot)
-            if v is not None:
-                entry.last_score = float(v)
+            row = self._host_score_row(entry.pool, entry.shard)
+            if row is not None:
+                entry.last_score = float(row[entry.slot])
+            else:
+                svc = self.shard_service(entry.pool, entry.shard)
+                v = svc.score_at(entry.slot)
+                if v is not None:
+                    entry.last_score = float(v)
             out[name] = entry.last_score
         return out
 
     def top_anomalies(self, k: int = 8) -> List[Tuple[str, float]]:
         """The k highest-scoring tenants of the latest tick: per-shard
-        `top_anomalies` candidate rows (k capped at each shard's
-        stream count), mapped slot→tenant, merged and cut to k —
-        full score vectors never leave their shard."""
+        candidate rows (k capped at each shard's stream count), mapped
+        slot→tenant, merged and cut to k. Shards on the score plane
+        take their candidates from the already-materialized host row
+        (free); others run the device-side `top_anomalies` query —
+        full score vectors never leave their shard either way."""
         self._check_open("top_anomalies")
         cands: List[Tuple[float, str]] = []
         for pool_i, shard_i in self.live_shard_ids():
             pool = self._config.pools[pool_i]
-            svc = self.shard_service(pool_i, shard_i)
-            try:
-                vals, slots = svc.top_anomalies(
-                    k=min(k, pool.streams_per_shard))
-            except ServiceLifecycleError:
-                continue  # shard has not ticked yet
-            for v, s in zip(vals.ravel(), slots.ravel()):
+            kk = min(k, pool.streams_per_shard)
+            row = self._host_score_row(pool_i, shard_i)
+            if row is not None:
+                # Stable sort on the negated row matches lax.top_k's
+                # tie-breaking (lowest slot wins among equal scores).
+                slots = np.argsort(-row, kind="stable")[:kk]
+                vals = row[slots]
+            else:
+                svc = self.shard_service(pool_i, shard_i)
+                try:
+                    vals, slots = svc.top_anomalies(k=kk)
+                except ServiceLifecycleError:
+                    continue  # shard has not ticked yet
+            for v, s in zip(np.ravel(vals), np.ravel(slots)):
                 entry = self._directory.tenant_at(pool_i, shard_i,
                                                   int(s))
                 if entry is not None:
@@ -417,6 +551,9 @@ class FingerFleet:
             entry.base_step = self._step
             entry.base_state = None
             entry.wal = [w for w in entry.wal if w[0] > self._step]
+            # Everything at/under the new durable base is covered by
+            # the on-disk checkpoints — pruning it never gaps recovery.
+            entry.wal_floor = max(entry.wal_floor, self._step)
         manifest = {"step": self._step, "pools": pools_manifest,
                     "tenants": self._directory.to_json()}
         os.makedirs(self._config.directory, exist_ok=True)

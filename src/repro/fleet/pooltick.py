@@ -1,0 +1,161 @@
+"""Pool-stacked shard ticks: one device launch per pool per fleet tick.
+
+PR 8's steady-state `FingerFleet.poll()` dispatched each live shard's
+`FingerService.poll()` sequentially from Python — S launches (plus S
+blocking host→device delta transfers through `SyncIngestor.get`) per
+pool per tick, even though every shard of a pool runs the *same*
+compiled tick body over identically-shaped `(B, n_pad)` state. This
+module collapses that to ONE jitted launch per pool: the per-shard
+`FingerState`s are stacked along a leading shard axis *inside* the jit
+(so the stack itself is device work, not S extra dispatches), advanced
+with `jax.vmap` over the engine's batched tick body — vmap-over-vmap,
+an (S, B, n_pad) program — and unstacked back to per-shard states and
+per-shard score rows, again inside the same jit.
+
+The per-shard `FingerService`s stay the management-plane view:
+migrations, kill/recover, and save/restore peel a shard out of the
+stack (it simply stops appearing in the group passed here) and back in,
+and `warm_pool_tick` pre-compiles the stacked program for a predicted
+shard grouping exactly like `PlanCache.warm` does for per-shard plans.
+
+Stacking requires every shard in a group to share its static tick
+signature: same `NodeLayout` (n_pad AND generation — both are static
+aux of the state pytree) and the same per-shard delta statics. The
+fleet groups live shards by `service.layout` before calling `tick_pool`
+(queued fleet deltas are always generation-stripped by the ingestor, so
+the delta statics follow the layout). The group size S is part of the
+pytree structure, so jit transparently keys one compiled program per
+(S, layout) — a shard leaving the stack (kill/compact) changes the
+group and hits a different cache entry, which the rebalancer pre-warms.
+
+Only the vmappable dense methods stack: ``"dense"`` and ``"compact"``
+tick bodies are plain vmapped jax ops, so an outer vmap is exact. The
+Pallas megakernel methods (``"fused_tick"``, ``"sparse_tick"``) keep
+their per-shard launches — vmapping a `pallas_call` changes its grid
+semantics and is not score-parity-tested; `stackable` gates them out
+and the fleet falls back to sequential `poll()` for those pools.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.stream import StreamEngine
+from repro.serving.plans import dummy_tick_args
+
+#: Methods whose tick body is a plain vmapped op chain — safe to wrap
+#: in an outer shard-axis vmap. Pallas megakernels are excluded (their
+#: grids are written for a (B, ...) launch, not an (S, B, ...) one).
+_STACKABLE_METHODS = ("dense", "compact")
+
+
+def stackable(method: str) -> bool:
+    """True when ``method``'s pool can tick as one stacked launch."""
+    return method in _STACKABLE_METHODS
+
+
+@functools.lru_cache(maxsize=None)
+def pool_tick_fn(exact_smax: bool, method: str):
+    """The jitted stacked-pool tick for one engine config.
+
+    Signature: ``(states_seq, deltas_seq) -> (dists, rows, shard_states)``
+    where the inputs are same-length tuples of per-shard stacked
+    `(B, ...)` pytrees sharing one static layout, ``dists`` is the
+    on-device (S, B) score matrix (the fleet's score plane), ``rows``
+    are its S per-shard (B,) rows and ``shard_states`` the S updated
+    per-shard states — both unstacked INSIDE the jit, so handing them
+    back to the per-shard `FingerService`s costs zero extra launches.
+
+    The whole per-shard state tuple is donated: the fleet owns those
+    states and immediately rebinds each shard to its returned one.
+    Cached per (exact_smax, method); jit itself keys per group size S
+    (tuple length is pytree structure) and per static layout.
+    """
+    if not stackable(method):
+        raise ValueError(
+            f"pool_tick_fn: method {method!r} is not stackable; gate "
+            "with stackable() and fall back to per-shard poll()")
+    engine = StreamEngine(exact_smax=exact_smax, method=method)
+    body = engine._tick_body
+
+    def run(states_seq, deltas_seq):
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *states_seq)
+        sdeltas = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *deltas_seq)
+        dists, new_states = jax.vmap(body)(stacked, sdeltas)
+        s = len(states_seq)
+        rows = tuple(dists[i] for i in range(s))
+        shard_states = tuple(
+            jax.tree_util.tree_map(lambda x, _i=i: x[_i], new_states)
+            for i in range(s))
+        return dists, rows, shard_states
+
+    return jax.jit(run, donate_argnums=(0,))
+
+
+def tick_pool(services: Sequence) -> jax.Array:
+    """Advance one layout-group of live shards as a single launch.
+
+    ``services`` are `FingerService`s sharing one `ServiceConfig` shape
+    and one current `NodeLayout` (the fleet groups by layout first).
+    Each shard's queued stacked delta is popped un-transferred
+    (`begin_pool_tick`), the whole group runs through `pool_tick_fn`,
+    and each shard absorbs its row + updated state
+    (`finish_pool_tick`). Returns the on-device (S, B) score matrix in
+    ``services`` order — the fleet's per-pool score plane.
+    """
+    svcs = list(services)
+    first = svcs[0].config
+    fn = pool_tick_fn(first.exact_smax, first.method)
+    states = tuple(svc.states() for svc in svcs)
+    deltas = tuple(svc.begin_pool_tick() for svc in svcs)
+    dists, rows, shard_states = fn(states, deltas)
+    for svc, row, st in zip(svcs, rows, shard_states):
+        svc.finish_pool_tick(row, st)
+    return dists
+
+
+def warm_pool_tick(entries: Sequence[Tuple[object, object]]) -> None:
+    """Pre-compile the stacked tick for one predicted shard grouping.
+
+    ``entries`` is the group as (ServiceConfig, NodeLayout) pairs — the
+    same prediction surface `PlanCache.warm` uses, so the rebalancer
+    warms the stacked program for the *current* grouping and for every
+    predicted post-migration regrouping (a compaction peels a shard out
+    of the group AND re-keys that shard's own singleton group). Runs
+    the jit once on zero dummies and blocks, exactly like
+    `ExecutionPlan.warm_tick`.
+    """
+    entries = list(entries)
+    if not entries:
+        return
+    first = entries[0][0]
+    if not stackable(first.method):
+        return
+    fn = pool_tick_fn(first.exact_smax, first.method)
+    args = [dummy_tick_args(cfg, layout) for cfg, layout in entries]
+    states = tuple(a[0] for a in args)
+    deltas = tuple(a[1] for a in args)
+    dists, _, _ = fn(states, deltas)
+    jax.block_until_ready(dists)
+
+
+def group_by_layout(services: Sequence) -> List[List]:
+    """Split a pool's live shards into stackable layout groups.
+
+    Shards of one pool share a `ServiceConfig` at open time, but
+    compaction gives individual shards private layouts (smaller n_pad,
+    bumped generation) — those tick in their own (possibly singleton)
+    group. Order within each group follows ``services`` order, and
+    group order follows first appearance, so the fleet's shard→row
+    bookkeeping is deterministic.
+    """
+    groups: dict = {}
+    for svc in services:
+        key = (svc.layout, svc.config.n_pad)
+        groups.setdefault(key, []).append(svc)
+    return list(groups.values())

@@ -25,12 +25,13 @@ serving layer's existing machinery:
 """
 from __future__ import annotations
 
-from typing import List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fleet import pooltick
 from repro.fleet.errors import RebalanceError
 from repro.graphs.types import GraphDelta
 from repro.serving import migrate
@@ -99,6 +100,7 @@ class Rebalancer:
         entry.base_state = base
         entry.base_step = fleet.step
         entry.wal = []
+        entry.wal_floor = fleet.step
         entry.installed_step = fleet.step
         return {"tenant": name, "from": old,
                 "to": (tgt_pool, tgt_shard, tgt_slot),
@@ -208,4 +210,63 @@ class Rebalancer:
                 np.int32(0))
             warmed.append({"pool": pool.name, "shard": shard_i,
                            "layouts": done})
+        warmed.extend(self._warm_pool_ticks())
+        return warmed
+
+    def _warm_pool_ticks(self) -> list:
+        """Pre-compile the stacked pool-tick programs the fleet's
+        steady-state `poll()` can hit: the current layout grouping of
+        every stackable pool, plus every regrouping one upkeep action
+        away — a compaction peels one shard into a singleton group at
+        its compacted layout (leaving the rest of its group one shard
+        smaller), a repad peels it back out at the pool bound."""
+        fleet = self._fleet
+        warmed = []
+        if not fleet.config.stacked_ticks:
+            return warmed
+        by_pool: Dict[int, list] = {}
+        for pool_i, shard_i in fleet.live_shard_ids():
+            by_pool.setdefault(pool_i, []).append(shard_i)
+        for pool_i, shard_ids in sorted(by_pool.items()):
+            pool = fleet.config.pools[pool_i]
+            if not pooltick.stackable(pool.method):
+                continue
+            groups: Dict[Tuple[int, int], list] = {}
+            for shard_i in shard_ids:
+                svc = fleet.shard_service(pool_i, shard_i)
+                key = (svc.layout.n_pad, svc.layout.generation)
+                groups.setdefault(key, []).append(svc)
+            plans = []
+            for members in groups.values():
+                cur = [(s.config.with_(n_pad=s.layout.n_pad), s.layout)
+                       for s in members]
+                plans.append(cur)
+                for i, svc in enumerate(members):
+                    peeled = cur[:i] + cur[i + 1:]
+                    targets = []
+                    n_live = migrate.live_slot_count(svc.states())
+                    if 0 < n_live < svc.layout.n_pad:
+                        targets.append(
+                            (svc.config.with_(n_pad=n_live),
+                             svc.layout.compacted(n_live)))
+                    if svc.layout.n_pad < pool.n_pad:
+                        targets.append(
+                            (svc.config.with_(n_pad=pool.n_pad),
+                             svc.layout.grown(pool.n_pad)))
+                    for tgt in targets:
+                        plans.append([tgt])
+                        if peeled:
+                            plans.append(peeled)
+            seen = set()
+            count = 0
+            for entries in plans:
+                sig = tuple((lay.n_pad, lay.generation)
+                            for _, lay in entries)
+                if not entries or sig in seen:
+                    continue
+                seen.add(sig)
+                pooltick.warm_pool_tick(entries)
+                count += 1
+            warmed.append({"pool": pool.name,
+                           "stacked_groups": count})
         return warmed

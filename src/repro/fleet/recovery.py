@@ -80,13 +80,15 @@ def replay_tenant(base: dict, wal: List[Tuple[int, GraphDelta]],
         if d.n_nodes > n:
             grown = NodeLayout(d.n_nodes,
                                generation=state.layout.generation)
+            # Host-side replay: these per-delta materializations ARE
+            # the recovery path's work, not a serving-loop hazard.
             state = FingerState(
                 q=state.q, s_total=state.s_total, s_max=state.s_max,
                 strengths=jnp.asarray(np.pad(
-                    np.asarray(state.strengths),
+                    np.asarray(state.strengths),  # lint: disable=per-item-host-sync
                     (0, d.n_nodes - n))),
                 node_mask=jnp.asarray(np.pad(
-                    np.asarray(state.node_mask),
+                    np.asarray(state.node_mask),  # lint: disable=per-item-host-sync
                     (0, d.n_nodes - n))),
                 layout=grown)
             n = d.n_nodes
@@ -134,6 +136,17 @@ def recover_shard(fleet, dead: DeadShard) -> List[dict]:
     disk = None
     reports = []
     for entry in tenants:
+        if entry.wal_floor > entry.base_step:
+            # The retention policy pruned WAL entries the durable base
+            # does not cover: steps (base_step, wal_floor] are gone,
+            # so base ⊕ replay(wal) would silently skip them.
+            raise RecoveryError(
+                f"tenant {entry.name!r}: WAL steps "
+                f"({entry.base_step}, {entry.wal_floor}] were "
+                f"truncated by the retention policy "
+                f"(wal_retention_ticks) before a durable base covered "
+                "them — recovery cannot replay a gapped log; lower "
+                "the retention window or save() the fleet more often")
         if entry.base_state is not None:
             base, base_step = entry.base_state, entry.base_step
         else:
@@ -183,6 +196,7 @@ def recover_shard(fleet, dead: DeadShard) -> List[dict]:
         entry.base_state = new_base
         entry.base_step = fleet.step
         entry.wal = []
+        entry.wal_floor = fleet.step
         entry.installed_step = fleet.step
         if last is not None:
             entry.last_score = last

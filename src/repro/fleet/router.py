@@ -28,7 +28,77 @@ import numpy as np
 from repro.fleet.config import FleetConfig, PoolSpec
 from repro.fleet.directory import TenantDirectory, TenantEntry
 from repro.fleet.errors import AdmissionError, FleetIngestError
-from repro.graphs.types import GraphDelta
+from repro.graphs.types import GraphDelta, _drop_self_loops
+
+
+class ShardStage:
+    """Preallocated (B, k_pad)/(B, j_pad) staging buffers for one
+    shard's tick worth of translated tenant deltas.
+
+    `stage_dense` writes each tenant's shard-space lanes straight into
+    its slot's row; untouched rows stay all-zero — exactly the
+    free-slot no-op delta. `finish` turns the buffers into ONE stacked
+    `GraphDelta` (already (B, k_pad) — `FingerService.ingest` skips the
+    per-slot `stack_deltas` entirely), so a shard's ingest is one
+    numpy-vectorized handoff instead of B per-slot `from_arrays` calls.
+
+    The buffers are reused across ticks (reset() zero-fills in place);
+    `finish` hands off COPIES because `jax.device_put` of a numpy array
+    may alias the host buffer on CPU — the next tick's reset would race
+    the in-flight async transfer (the PR-1 host-buffer aliasing class,
+    see the `numpy-handoff-no-copy` lint rule).
+    """
+
+    def __init__(self, batch: int, k_pad: int, j_pad: Optional[int]):
+        self.batch, self.k_pad, self.j_pad = batch, k_pad, j_pad
+        self.senders = np.zeros((batch, k_pad), np.int32)
+        self.receivers = np.zeros((batch, k_pad), np.int32)
+        self.dw = np.zeros((batch, k_pad), np.float32)
+        self.w_old = np.zeros((batch, k_pad), np.float32)
+        self.mask = np.zeros((batch, k_pad), np.float32)
+        if j_pad is None:
+            self.node_ids = self.node_flag = None
+        else:
+            self.node_ids = np.zeros((batch, j_pad), np.int32)
+            self.node_flag = np.zeros((batch, j_pad), np.float32)
+
+    def reset(self) -> None:
+        for buf in (self.senders, self.receivers, self.dw, self.w_old,
+                    self.mask, self.node_ids, self.node_flag):
+            if buf is not None:
+                buf.fill(0)
+
+    def write_row(self, slot: int, lo: np.ndarray, hi: np.ndarray,
+                  dw: np.ndarray, w_old: np.ndarray,
+                  join_pos: np.ndarray, leave_pos: np.ndarray) -> None:
+        k = lo.shape[0]
+        self.senders[slot, :k] = lo
+        self.receivers[slot, :k] = hi
+        self.dw[slot, :k] = dw
+        self.w_old[slot, :k] = w_old
+        self.mask[slot, :k] = 1.0
+        if self.node_ids is not None and (join_pos.size
+                                          or leave_pos.size):
+            j, l = join_pos.size, leave_pos.size
+            self.node_ids[slot, :j] = join_pos
+            self.node_ids[slot, j:j + l] = leave_pos
+            self.node_flag[slot, :j] = 1.0
+            self.node_flag[slot, j:j + l] = -1.0
+
+    def finish(self, svc) -> GraphDelta:
+        """The tick's stacked (B, k_pad) shard-space GraphDelta, stamped
+        with the shard's live layout generation (same grace-machinery
+        contract as the per-tenant `translate` path)."""
+        return GraphDelta(
+            senders=self.senders.copy(),
+            receivers=self.receivers.copy(),
+            dw=self.dw.copy(), w_old=self.w_old.copy(),
+            mask=self.mask.copy(), n_nodes=svc.layout.n_pad,
+            node_ids=None if self.node_ids is None
+            else self.node_ids.copy(),
+            node_flag=None if self.node_flag is None
+            else self.node_flag.copy(),
+            layout_generation=svc.layout.generation)
 
 
 class FleetRouter:
@@ -36,6 +106,7 @@ class FleetRouter:
                  directory: TenantDirectory):
         self._config = config
         self._directory = directory
+        self._stages: Dict[Tuple[int, int], ShardStage] = {}
 
     # -- admission --------------------------------------------------------
     def place(self, n_required: int,
@@ -207,6 +278,97 @@ class FleetRouter:
         except ValueError as e:
             raise FleetIngestError(
                 f"tenant {entry.name!r}: {e}") from e
+
+    # -- vectorized staging (the dense fleet ingest hot path) -------------
+    def stage_for(self, key: Tuple[int, int],
+                  pool: PoolSpec) -> ShardStage:
+        """The (zeroed) staging buffers of one dense shard's tick,
+        reused across ticks — allocation happens once per shard, not
+        once per tick."""
+        stage = self._stages.get(key)
+        if stage is None or (stage.batch, stage.k_pad, stage.j_pad) != \
+                (pool.streams_per_shard, pool.k_pad, pool.j_pad):
+            stage = ShardStage(pool.streams_per_shard, pool.k_pad,
+                               pool.j_pad)
+            self._stages[key] = stage
+        else:
+            stage.reset()
+        return stage
+
+    def stage_dense(self, entry: TenantEntry, delta: GraphDelta,
+                    svc, pool: PoolSpec, stage: ShardStage) -> None:
+        """`_translate_dense`, vectorized into the staging buffers: the
+        same tenant→slot position math and the same named rejections,
+        but the result lands directly in ``stage``'s row
+        ``entry.slot`` instead of allocating a per-tenant `GraphDelta`.
+        Mutates ``entry.slot_of_node`` (join placement) — call once per
+        (tenant, tick)."""
+        join, leave = self._split_node_slots(delta)
+        if (join.size or leave.size) and pool.j_pad is None:
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: delta carries node "
+                f"join/leave slots but pool {pool.name!r} has "
+                "j_pad=None (no node lanes); use a pool with join "
+                "slots")
+        som = entry.slot_of_node
+        if delta.n_nodes > som.shape[0]:
+            som = np.concatenate([
+                som, np.full((delta.n_nodes - som.shape[0],), -1,
+                             np.int32)])
+            entry.slot_of_node = som
+            entry.n_nodes = int(delta.n_nodes)
+        n_pad = svc.layout.n_pad
+        new = [v for v in join.tolist() if som[v] < 0]
+        if new:
+            used = set(som[som >= 0].tolist())
+            pos = 0
+            for v in new:
+                while pos in used:
+                    pos += 1
+                if pos >= n_pad:
+                    raise FleetIngestError(
+                        f"tenant {entry.name!r}: join of node {v} "
+                        f"overflows the shard layout n_pad={n_pad}; "
+                        "the rebalancer must repad or promote first")
+                som[v] = pos
+                used.add(pos)
+        m = np.asarray(delta.mask) > 0
+        snd = som[np.asarray(delta.senders, np.int64)[m]]
+        rcv = som[np.asarray(delta.receivers, np.int64)[m]]
+        if (snd < 0).any() or (rcv < 0).any():
+            bad = sorted(set(
+                np.asarray(delta.senders)[m][snd < 0].tolist()
+                + np.asarray(delta.receivers)[m][rcv < 0].tolist()))
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: delta edge(s) touch node(s) "
+                f"{bad} the tenant never joined")
+        leave_pos = som[leave.astype(np.int64)] if leave.size \
+            else np.zeros((0,), np.int32)
+        if leave.size and (leave_pos < 0).any():
+            bad = sorted(leave[leave_pos < 0].tolist())
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: leave of never-joined "
+                f"node(s) {bad}")
+        dw = np.asarray(delta.dw, np.float32)[m]
+        w_old = np.asarray(delta.w_old, np.float32)[m]
+        snd, rcv, dw, w_old = _drop_self_loops(
+            snd.astype(np.int32), rcv.astype(np.int32), dw, w_old,
+            kind="FleetRouter.stage_dense")
+        if snd.shape[0] > pool.k_pad:
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: k={snd.shape[0]} delta edges "
+                f"exceed k_pad={pool.k_pad}")
+        j = int(join.size + leave.size)
+        if pool.j_pad is not None and j > pool.j_pad:
+            raise FleetIngestError(
+                f"tenant {entry.name!r}: {j} node join/leave slots "
+                f"exceed j_pad={pool.j_pad}")
+        stage.write_row(
+            entry.slot, np.minimum(snd, rcv), np.maximum(snd, rcv),
+            dw, w_old,
+            som[join.astype(np.int64)].astype(np.int32) if join.size
+            else np.zeros((0,), np.int32),
+            leave_pos.astype(np.int32))
 
     def empty_delta(self, pool: PoolSpec, svc) -> GraphDelta:
         """The free-slot no-op delta of one shard tick (stamped with

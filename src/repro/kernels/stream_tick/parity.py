@@ -24,7 +24,8 @@ def check_parity(record=None) -> None:
         iu, ju = np.triu_indices(n, k=1)
         pick = rng.choice(len(iu), size=4, replace=False)
         ii, jj = iu[pick], ju[pick]
-        w_old = np.asarray(g.weights)[ii, jj]
+        # parity-fixture setup, not a serving hot path
+        w_old = np.asarray(g.weights)[ii, jj]  # lint: disable=per-item-host-sync
         dw = np.where(w_old > 0, -w_old, 0.8).astype(np.float32)
         ds.append(GraphDelta.from_arrays(ii, jj, dw, w_old, n_nodes=n,
                                          n_pad=n_pad, k_pad=k_pad,

@@ -73,7 +73,8 @@ def run(cfg, steps: int, batch_size: int, seq: int, ckpt_dir=None,
                                           probe_len=min(seq, 128),
                                           use_pallas=False)
             if ent is not None:
-                rec["attn_entropy_mean"] = float(jnp.mean(ent))
+                # probe metric: one deliberate sync per probe step
+                rec["attn_entropy_mean"] = float(jnp.mean(ent))  # lint: disable=per-item-host-sync
             g = routing_graph(params, batch, cfg, rules)
             d = tracker.update(g, step)
             if d is not None:

@@ -239,6 +239,20 @@ class SyncIngestor:
         deltas = self.plan.put_deltas(self._queue.popleft())
         return jax.block_until_ready(deltas)
 
+    def pop(self) -> Optional[GraphDelta]:
+        """Pop the oldest pending tick exactly as held — host-side for
+        the sync ingestor, device-resident for the double-buffered one.
+
+        The pool-stacked fleet tick path consumes through this instead
+        of `get`: the stacked launch's own argument transfer moves the
+        delta, so a per-shard ``block_until_ready(put_deltas(...))``
+        here would reintroduce exactly the S serialized host syncs the
+        stacked path removes.
+        """
+        if not self._queue:
+            return None
+        return self._queue.popleft()
+
     def drain(self) -> None:
         self._queue.clear()
 

@@ -567,7 +567,8 @@ def migrate_host_arrays(
             strengths = np.pad(strengths, widths)
             node_mask = np.pad(node_mask, widths)
         else:  # compact
-            imap = np.asarray(rec["index_map"], np.int32)
+            # journal records are host-side JSON lists
+            imap = np.asarray(rec["index_map"], np.int32)  # lint: disable=per-item-host-sync
             keep = np.nonzero(imap >= 0)[0]
             tail = rec["new_n_pad"] - len(keep)
             widths = [(0, 0)] * (strengths.ndim - 1) + [(0, tail)]
@@ -591,7 +592,7 @@ def remaps_from_records(records: List[dict]) -> Dict[int, np.ndarray]:
     for rec in records:
         imap = identity_index_map(rec["old_n_pad"]) \
             if rec["index_map"] is None \
-            else np.asarray(rec["index_map"], np.int32)
+            else np.asarray(rec["index_map"], np.int32)  # lint: disable=per-item-host-sync
         table = {k: compose_index_maps(m, imap)
                  for k, m in table.items()}
         if rec["index_map"] is not None:
@@ -620,7 +621,7 @@ def remaps_by_generation(records: List[dict]) -> Dict[int, np.ndarray]:
     for rec in sorted(records, key=lambda r: r["from_generation"]):
         imap = identity_index_map(rec["old_n_pad"]) \
             if rec["index_map"] is None \
-            else np.asarray(rec["index_map"], np.int32)
+            else np.asarray(rec["index_map"], np.int32)  # lint: disable=per-item-host-sync
         table = {g: compose_index_maps(m, imap)
                  for g, m in table.items()}
         table[int(rec["from_generation"])] = imap

@@ -489,6 +489,44 @@ class FingerService:
             self.save()
         return TickReport(step=self._step, scores=dists)
 
+    # -- pool-stacked tick hooks (the fleet's batched poll) --------------
+    def begin_pool_tick(self) -> GraphDelta:
+        """Hand this shard's oldest queued tick to a pool-stacked launch
+        (`fleet.pooltick.tick_pool`) *without* transferring it — the
+        stacked jit's own argument transfer moves all S shards' deltas
+        at once instead of S serialized `block_until_ready` syncs.
+
+        Raises when the queue is empty: the fleet stages an (all-zero
+        if need be) delta into every live shard each tick, so an empty
+        queue here means ingest/poll alternation was broken.
+        """
+        self._check_open("begin_pool_tick")
+        deltas = self._ingestor.pop()
+        if deltas is None:
+            raise ServiceLifecycleError(
+                "begin_pool_tick with an empty ingestion queue — the "
+                "fleet must stage every live shard (an empty stacked "
+                "delta at minimum) before a pool-stacked poll")
+        return deltas
+
+    def finish_pool_tick(self, scores: jax.Array,
+                         states: FingerState) -> TickReport:
+        """Absorb one pool-stacked launch's result for this shard: its
+        (B,) score row and updated stacked state (both unstacked inside
+        the jit — no extra dispatch). Mirrors `poll`'s bookkeeping
+        exactly, including the periodic checkpoint policy, so the
+        management plane (migrations, save/restore, score_at) cannot
+        tell the shard ticked as part of a stack.
+        """
+        self._check_open("finish_pool_tick")
+        self._states = states
+        self._last_scores = scores
+        self._step += 1
+        every = self._config.checkpoint.every_ticks
+        if every is not None and self._step % every == 0:
+            self.save()
+        return TickReport(step=self._step, scores=scores)
+
     def scores(self) -> Optional[np.ndarray]:
         """Latest tick's (B,) per-stream JSdist scores on host (blocks
         until the tick lands); None before the first tick."""

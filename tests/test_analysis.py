@@ -34,10 +34,12 @@ from repro.analysis.hlo_audit import (
 from repro.analysis.lint import RULES, lint_paths, lint_source, lint_tree
 from repro.analysis.sanitize import (
     CompileBudgetExceeded,
+    TransferBudgetExceeded,
     assert_compiles_at_most,
     compile_budget,
     debug_nan_checks,
     no_transfers,
+    transfer_budget,
 )
 from repro.analysis.vmem import (
     CapturedLaunch,
@@ -72,7 +74,7 @@ class TestLintRules:
         assert set(RULES) == {
             "jit-static-unhashable", "traced-python-branch",
             "numpy-handoff-no-copy", "frozen-dataclass-mutable-default",
-            "kernel-package-triple"}
+            "kernel-package-triple", "per-item-host-sync"}
 
     def test_jit_static_unhashable_mutable_default(self):
         src = textwrap.dedent("""
@@ -194,6 +196,51 @@ class TestLintRules:
         assert _rules(report.violations) == ["kernel-package-triple"] * 2
         assert missing == ["parity.py", "ref.py"]
 
+    def test_per_item_host_sync_seeded_hazards(self):
+        # the PR-9 fleet hot-path class: per-slot host pulls in a loop
+        src = textwrap.dedent("""
+            import numpy as np
+
+            def f(svc, slots):
+                out = []
+                for s in slots:
+                    out.append(float(svc.score_at(s)))
+                    out.append(np.asarray(svc.scores()))
+                    out.append(svc.scores()[s].item())
+                return out
+        """)
+        vs = lint_source(src, "seed.py")
+        assert _rules(vs) == ["per-item-host-sync"] * 3
+        assert any(".item()" in v.message for v in vs)
+
+    def test_per_item_host_sync_spares_batched_pull(self):
+        # the fixed form: one stacked pull, host-side indexing — and
+        # float(Name)/float(sub[i]) reads of an already-host value
+        src = textwrap.dedent("""
+            import numpy as np
+
+            def f(svc, slots):
+                mat = svc.scores()
+                host = np.asarray(mat)
+                out = []
+                for s in slots:
+                    out.append(float(host[s]))
+                return out
+        """)
+        assert lint_source(src, "seed.py") == []
+
+    def test_per_item_host_sync_pragma(self):
+        src = textwrap.dedent("""
+            import numpy as np
+
+            def f(rows):
+                for r in rows:
+                    yield np.asarray(r.strengths)  # lint: disable=per-item-host-sync
+        """)
+        vs = lint_source(src, "seed.py")
+        assert _rules(vs) == ["per-item-host-sync"]
+        assert vs[0].suppressed
+
     def test_repo_src_tree_lints_clean(self):
         report = lint_tree(SRC_ROOT)
         assert report.unsuppressed == [], \
@@ -244,6 +291,38 @@ class TestSanitizers:
         with pytest.raises(Exception, match="[Dd]isallow"):
             with no_transfers():
                 float(x[0])
+
+    def test_transfer_budget_counts_materializations(self):
+        x = jnp.arange(16.0) * 2
+        jax.block_until_ready(x)
+        with transfer_budget(None, "count-only") as t:
+            a = jax.device_get(x)
+            b = jax.device_get(x)  # cached re-read: free
+        assert t.count == 1
+        assert a[3] == b[3] == 6.0
+        # already-materialized arrays stay free in a later block
+        with transfer_budget(0, "cached"):
+            jax.device_get(x)
+
+    def test_transfer_budget_raises_by_name(self):
+        ys = [jnp.full((4,), float(i)) for i in range(3)]
+        jax.block_until_ready(ys)
+        with pytest.raises(TransferBudgetExceeded, match="per-slot"):
+            with transfer_budget(1, "per-slot seeded"):
+                for y in ys:
+                    jax.device_get(y)  # lint: disable=per-item-host-sync
+
+    def test_transfer_budget_restores_and_nests(self):
+        from jax._src import array as _array_mod
+
+        before = _array_mod.ArrayImpl._value
+        with transfer_budget(None, "outer") as outer:
+            with transfer_budget(None, "inner") as inner:
+                jax.device_get(jnp.ones((3,)) + 1)
+            assert _array_mod.ArrayImpl._value is not before
+        assert _array_mod.ArrayImpl._value is before
+        assert inner.count == 1
+        assert outer.count == 1  # both blocks saw the one pull
 
     def test_debug_nan_checks_catches_nan(self):
         with pytest.raises(FloatingPointError):

@@ -497,6 +497,145 @@ class TestSparsePool:
             oracle.close()
 
 
+class TestStackedSequentialParity:
+    """PR 9's stacked pool-tick dispatch is a pure execution-plane
+    optimization: the identical lifecycle — admit → ticks → cross-
+    bucket promotion → staged-tick compaction → save/restore → shard
+    kill + WAL tick + recovery — run with ``stacked_ticks`` on and off
+    produces the same per-tenant scores to 1e-5 at every step."""
+
+    NAMES = ["a", "b", "c"]
+    SIZES = {"a": 5, "b": 6, "c": 18}
+
+    def _lifecycle(self, stacked, tmp_path):
+        sizes = dict(self.SIZES)
+        graphs = {n: _graph(sizes[n], i + 61)
+                  for i, n in enumerate(self.NAMES)}
+        cfg = _two_bucket_cfg(compact_occupancy=0.95,
+                              stacked_ticks=stacked,
+                              directory=str(tmp_path))
+        trace = []
+        fleet = FingerFleet.open(cfg)
+        try:
+            for n in self.NAMES:
+                fleet.admit(n, graphs[n])
+
+            def tick(seed):
+                ds = {n: _delta(sizes[n], seed + k)
+                      for k, n in enumerate(self.NAMES)}
+                fleet.ingest(ds)
+                fleet.poll()
+                trace.append(fleet.scores())
+
+            for t in range(3):
+                tick(40 + 10 * t)
+            fleet.promote("a")  # small -> large, live
+            tick(80)
+            # compact the vacated small shard under a staged tick
+            fleet.ingest({n: _delta(sizes[n], 90 + k)
+                          for k, n in enumerate(self.NAMES)})
+            actions = fleet.rebalance()
+            assert any(a["action"] == "compact" for a in actions)
+            fleet.poll()
+            trace.append(fleet.scores())
+            # save / restore mid-stream, then keep serving
+            fleet.save()
+            fleet.close()
+            fleet = FingerFleet.restore(cfg)
+            tick(100)
+            # kill b's shard: its tick goes WAL-only, then recovery
+            # replays it on the survivor (from the saved checkpoint —
+            # the restored entries carry no in-memory base)
+            fleet.kill_shard("small", fleet.directory.get("b").shard)
+            tick(110)
+            fleet.recover()
+            trace.append(fleet.scores())
+            tick(120)
+            trace.append(dict(fleet.top_anomalies(k=3)))
+        finally:
+            fleet.close()
+        return trace
+
+    def test_lifecycle_scores_match_to_1e5(self, tmp_path):
+        stacked = self._lifecycle(True, tmp_path / "on")
+        sequential = self._lifecycle(False, tmp_path / "off")
+        assert len(stacked) == len(sequential)
+        for i, (s, q) in enumerate(zip(stacked, sequential)):
+            assert set(s) == set(q), i
+            for n in s:
+                assert abs(s[n] - q[n]) < 1e-5, (i, n, s[n], q[n])
+
+
+class TestWalRetention:
+    """`FleetConfig.wal_retention_ticks`: ingest prunes WAL entries
+    older than the window, `wal_floor` records the pruned horizon, and
+    recovery refuses a gapped log by name."""
+
+    def _cfg(self, **kw):
+        return FleetConfig(pools=(
+            PoolSpec(name="tiny", n_pad=8, shards=2,
+                     streams_per_shard=2, k_pad=K_PAD, j_pad=J_PAD),),
+            wal_retention_ticks=2, **kw)
+
+    def test_config_rejects_nonpositive_retention(self):
+        with pytest.raises(FleetConfigError, match="wal_retention"):
+            FleetConfig(pools=(
+                PoolSpec(name="tiny", n_pad=8, k_pad=2),),
+                wal_retention_ticks=0).validate()
+
+    def test_prunes_and_raises_on_gapped_recovery(self):
+        with FingerFleet.open(self._cfg()) as fleet:
+            fleet.admit("a", _graph(4, 1))
+            for t in range(5):
+                fleet.ingest({"a": _delta(4, 100 + t)})
+                fleet.poll()
+            e = fleet.directory.get("a")
+            assert [s for s, _ in e.wal] == [4, 5]
+            assert e.wal_floor == 3
+            # steps (0, 3] are gone and no durable base covers them
+            fleet.kill_shard("tiny", e.shard)
+            with pytest.raises(RecoveryError,
+                               match="wal_retention_ticks"):
+                fleet.recover()
+
+    def test_save_keeps_recovery_within_window(self, tmp_path):
+        with FingerFleet.open(
+                self._cfg(directory=str(tmp_path))) as fleet:
+            fleet.admit("a", _graph(4, 1))
+            for t in range(3):
+                fleet.ingest({"a": _delta(4, 200 + t)})
+                fleet.poll()
+            fleet.save()  # durable base at step 3 covers the pruning
+            for t in range(2):
+                fleet.ingest({"a": _delta(4, 300 + t)})
+                fleet.poll()
+            e = fleet.directory.get("a")
+            assert e.base_step == 3 and e.wal_floor == 3
+            before = fleet.scores()["a"]
+            fleet.kill_shard("tiny", e.shard)
+            fleet.recover()  # disk base + intact WAL: no gap
+            assert abs(fleet.scores()["a"] - before) < 1e-5
+
+
+class TestFleetHotPathBudgets:
+    """The PR 9 dispatch/transfer regression gate, via the extended
+    sentinel: warm fleet ticks run at zero compiles, `poll()` issues
+    one launch per pool layout-group (not per shard), `ingest()` and
+    the poll dispatch pull nothing to host, and `scores()` costs at
+    most one device→host transfer per pool per tick."""
+
+    def test_fleet_chain_budgets(self):
+        from repro.analysis.sentinel import run_fleet_chain
+
+        r = run_fleet_chain(ticks_per_phase=2)
+        assert r["ok"]
+        assert r["phases"] == {"ticks_promotion": 0,
+                               "ticks_staged_compaction": 0}
+        assert r["launches_steady"] == len(r["pools"])
+        assert r["launches_post_compaction"] > len(r["pools"])
+        assert r["transfer_budget_scores_per_tick"] == len(r["pools"])
+
+
 class TestFleetProperty:
     """The ISSUE's end-to-end property: a randomized tick stream over
     ≥2 buckets × ≥2 shards in which a tenant is promoted across
