@@ -558,28 +558,32 @@ def bench_fleet() -> dict:
 
 
 def bench_fleet_hotpath(shards: int = 4, streams_per_shard: int = 16,
-                        ticks: int = 6) -> dict:
-    """The PR-9 steady-state fleet hot path, stacked vs sequential.
+                        ticks: int = 6, method: str = "dense") -> dict:
+    """The steady-state fleet hot path, stacked vs sequential, for one
+    tick ``method`` — `run()` emits one matrix row per method.
 
     One pool × ``shards`` shards × ``streams_per_shard`` streams
     (4 × 16 = 64 tenants by default) serves identical delta streams
-    under ``stacked_ticks`` off (PR-8 per-shard dispatch: S launches +
-    per-tenant score reads) and on (one pool-stacked launch, one
-    device→host score-plane pull amortized over every tenant). Each
-    tick is split into its three phases — `ingest` (vectorized
+    under ``stacked_ticks`` off (per-shard dispatch: S launches +
+    per-tenant score reads) and on (one pool-stacked launch — for the
+    megakernel methods that is one (S, B)-gridded `pallas_call` — and
+    one device→host score-plane pull amortized over every tenant).
+    Each tick is split into its three phases — `ingest` (vectorized
     translation + staging), `poll` (dispatch only; the launch is
     async), `scores` (the blocking read) — so the host-overhead win
     shows up where it happens. A separate short run with
     ``save_every_ticks`` measures the periodic checkpoint pause that
-    `poll()` now takes *after* dispatch (`last_save_pause_s`). On CPU
-    the absolute times are host-dominated; the row is stamped
-    ``"interpret"`` like every other placeholder row."""
+    `poll()` takes *after* dispatch (`last_save_pause_s`). On CPU the
+    absolute times are host-dominated (and the kernel methods run in
+    interpret mode); the row is stamped ``"interpret"`` like every
+    other placeholder row."""
     import shutil
     import tempfile
 
     from repro.fleet import FingerFleet, FleetConfig, PoolSpec
 
     n_nodes, n_pad, k_pad = 10, 16, 4
+    sparse = method == "sparse_tick"
     n_tenants = shards * streams_per_shard
     names = [f"t{i}" for i in range(n_tenants)]
     graphs = {n: erdos_renyi(n_nodes, 0.3, seed=i, weighted=True)
@@ -600,7 +604,9 @@ def bench_fleet_hotpath(shards: int = 4, streams_per_shard: int = 16,
         return FleetConfig(pools=(
             PoolSpec(name="p", n_pad=n_pad, shards=shards,
                      streams_per_shard=streams_per_shard, k_pad=k_pad,
-                     j_pad=2),), **kw)
+                     j_pad=2, method=method,
+                     n_slots=n_pad if sparse else None,
+                     m_pad=4 * n_pad if sparse else None),), **kw)
 
     def drive(stacked: bool) -> dict:
         fleet = FingerFleet.open(pool_cfg(stacked_ticks=stacked))
@@ -655,6 +661,7 @@ def bench_fleet_hotpath(shards: int = 4, streams_per_shard: int = 16,
         shutil.rmtree(tmp, ignore_errors=True)
 
     cell = {
+        "method": method,
         "shards": shards, "streams_per_shard": streams_per_shard,
         "tenants": n_tenants, "ticks": ticks, "interpret": interpret,
         "seq_ingest_ms": seq_run["ingest_ms"],
@@ -673,17 +680,17 @@ def bench_fleet_hotpath(shards: int = 4, streams_per_shard: int = 16,
             seq_run["scores_ms"] / max(stk_run["scores_ms"], 1e-9),
         "save_pause_ms": float(np.mean(pauses)) * 1e3,
     }
-    emit(f"fleet_hotpath_seq_tick_s{shards}_t{n_tenants}",
+    emit(f"fleet_hotpath_{method}_seq_tick_s{shards}_t{n_tenants}",
          seq_run["tick_ms"] * 1e-3,
          f"{seq_run['launches_per_tick']} launches/tick")
-    emit(f"fleet_hotpath_stacked_tick_s{shards}_t{n_tenants}",
+    emit(f"fleet_hotpath_{method}_stacked_tick_s{shards}_t{n_tenants}",
          stk_run["tick_ms"] * 1e-3,
          f"{stk_run['launches_per_tick']} launch(es)/tick, "
          f"{cell['stacked_tick_speedup']:.2f}x vs sequential")
-    emit(f"fleet_hotpath_scores_s{shards}_t{n_tenants}",
+    emit(f"fleet_hotpath_{method}_scores_s{shards}_t{n_tenants}",
          stk_run["scores_ms"] * 1e-3,
          f"{cell['stacked_scores_speedup']:.2f}x vs per-tenant reads")
-    emit(f"fleet_hotpath_save_pause_s{shards}_t{n_tenants}",
+    emit(f"fleet_hotpath_{method}_save_pause_s{shards}_t{n_tenants}",
          cell["save_pause_ms"] * 1e-3,
          "post-dispatch periodic save")
     return cell
@@ -713,7 +720,8 @@ _FLEET_KEYS = ("pools", "shards_per_pool", "streams_per_shard",
                "tenants", "admission_ms", "cold_promotion_ms",
                "warm_promotion_ms", "warm_promotion_speedup",
                "recovery_ms", "recovered_tenants")
-_FLEET_HOTPATH_KEYS = ("shards", "streams_per_shard", "tenants",
+_FLEET_HOTPATH_KEYS = ("method",
+                       "shards", "streams_per_shard", "tenants",
                        "ticks", "interpret",
                        "seq_ingest_ms", "seq_poll_dispatch_ms",
                        "seq_scores_ms", "seq_tick_ms",
@@ -788,12 +796,25 @@ def validate_report(report: dict) -> dict:
     _require(report["sparse_crossover"], _SPARSE_CROSSOVER_KEYS,
              "sparse_crossover")
     _require(report["fleet"], _FLEET_KEYS, "fleet")
-    _require(report["fleet_hotpath"], _FLEET_HOTPATH_KEYS,
-             "fleet_hotpath")
-    if not isinstance(report["fleet_hotpath"]["interpret"], bool):
+    # fleet_hotpath is a per-method matrix: one stacked-vs-sequential
+    # row per tick method, all four covered.
+    if not isinstance(report["fleet_hotpath"], list) \
+            or not report["fleet_hotpath"]:
+        raise ValueError("BENCH_streams.json: fleet_hotpath must be a "
+                         "non-empty list (one row per tick method)")
+    for i, cell in enumerate(report["fleet_hotpath"]):
+        _require(cell, _FLEET_HOTPATH_KEYS, f"fleet_hotpath[{i}]")
+        if not isinstance(cell["interpret"], bool):
+            raise ValueError(
+                f"BENCH_streams.json: fleet_hotpath[{i}].interpret "
+                f"must be a boolean, got {cell['interpret']!r}")
+    rows = [cell["method"] for cell in report["fleet_hotpath"]]
+    from repro.serving.config import METHODS
+    missing = [m for m in METHODS if m not in rows]
+    if missing:
         raise ValueError(
-            "BENCH_streams.json: fleet_hotpath.interpret must be a "
-            f"boolean, got {report['fleet_hotpath']['interpret']!r}")
+            f"BENCH_streams.json: fleet_hotpath matrix is missing "
+            f"method row(s) {missing} (have {rows})")
     return report
 
 
@@ -833,7 +854,7 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
         "sparse_scaling": [],
         "sparse_crossover": None,
         "fleet": None,
-        "fleet_hotpath": None,
+        "fleet_hotpath": [],
     }
     for n_pad in n_pads:
         for b in batches:
@@ -863,8 +884,16 @@ def run(json_path: str = DEFAULT_JSON, quick: bool = True,
             n_pads=[1_000, 10_000, 100_000], k=min(k, 8),
             n_slots=128, m_pad=1024, iters=iters)
     report["fleet"] = bench_fleet()
-    report["fleet_hotpath"] = bench_fleet_hotpath(
-        ticks=4 if quick else 8)
+    # Per-method hot-path matrix: the dense rows at full fleet size,
+    # the (interpret-mode-on-CPU) kernel rows on a smaller fleet so
+    # the quick CI run stays cheap — each row records its own shape.
+    from repro.serving.config import METHODS
+    for hp_method in METHODS:
+        kernel_row = hp_method in ("fused_tick", "sparse_tick")
+        report["fleet_hotpath"].append(bench_fleet_hotpath(
+            shards=2 if (quick and kernel_row) else 4,
+            streams_per_shard=4 if (quick and kernel_row) else 16,
+            ticks=4 if quick else 8, method=hp_method))
     validate_report(report)  # fail fast before clobbering the artifact
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)

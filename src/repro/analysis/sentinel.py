@@ -238,23 +238,33 @@ def _expected_launches(fleet) -> int:
 def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
     """The fleet rebalance chain at zero serving-path compiles.
 
-    2 buckets × 2 shards; after `FingerFleet.warm`, a full phase of
-    tenant ticks + an explicit cross-bucket promotion runs at zero
-    compiles, and (after re-warming the now-current occupancies) so
-    does a phase with an occupancy-driven auto-compaction executed
-    *under a staged tick* — the in-flight-delta rebalance path.
-    Raises `CompileBudgetExceeded` on any compile; returns per-phase
-    counts.
+    4 buckets × 2 shards covering every tick method — two dense pools,
+    a ``fused_tick`` megakernel pool, and a ``sparse_tick`` slot-space
+    pool — each holding a live tenant, so the stacked-dispatch contract
+    (`poll()` issues exactly ``len(pools)`` launches in steady state,
+    megakernel and sparse pools included) is asserted against the real
+    mixed-method fleet. After `FingerFleet.warm`, a full phase of
+    tenant ticks + an explicit cross-bucket promotion (into the fused
+    pool) runs at zero compiles, and (after re-warming the now-current
+    occupancies) so does a phase with an occupancy-driven
+    auto-compaction executed *under a staged tick* — the
+    in-flight-delta rebalance path. Raises `CompileBudgetExceeded` on
+    any compile; returns per-phase counts.
     """
     from repro.fleet import FingerFleet, FleetConfig, PoolSpec
 
     config = FleetConfig(pools=(
         PoolSpec(name="small", n_pad=8, shards=2, streams_per_shard=2,
                  k_pad=_K_PAD, j_pad=2),
+        PoolSpec(name="mega", n_pad=16, shards=2, streams_per_shard=2,
+                 k_pad=_K_PAD, j_pad=2, method="fused_tick"),
         PoolSpec(name="large", n_pad=24, shards=2,
                  streams_per_shard=2, k_pad=_K_PAD, j_pad=2),
+        PoolSpec(name="slots", n_pad=1024, shards=2,
+                 streams_per_shard=2, k_pad=_K_PAD, j_pad=2,
+                 method="sparse_tick", n_slots=32, m_pad=256),
     ), compact_occupancy=0.95)
-    sizes = {"a": 5, "b": 6, "c": 16}
+    sizes = {"a": 5, "b": 6, "m": 12, "c": 20, "s": 28}
     graphs = {n: erdos_renyi(sz, 0.4, seed=i, weighted=True)
               for i, (n, sz) in enumerate(sizes.items())}
     phases: Dict[str, int] = {}
@@ -266,7 +276,7 @@ def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
         # query readbacks; warm() then compiles the whole rebalance
         # surface (migration-target plans + stream-row hook jits).
         _fleet_tick(fleet, sizes, seed=0)
-        top = fleet.top_anomalies(k=3)
+        top = fleet.top_anomalies(k=len(sizes))
         assert len(top) == len(sizes)
         fleet.warm()
 
@@ -278,7 +288,7 @@ def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
             for seed in range(1, 1 + ticks_per_phase):
                 _fleet_tick(fleet, sizes, seed, budget=True,
                             expected_launches=len(config.pools))
-            fleet.promote("a")  # small -> large, live row migration
+            fleet.promote("a")  # small -> mega, live row migration
             for seed in range(10, 10 + ticks_per_phase):
                 _fleet_tick(fleet, sizes, seed, budget=True,
                             expected_launches=len(config.pools))
@@ -314,6 +324,7 @@ def run_fleet_chain(ticks_per_phase: int = 3) -> Dict[str, Any]:
         "phases": phases,
         "ticks_per_phase": ticks_per_phase,
         "pools": [p.name for p in config.pools],
+        "methods": [p.method for p in config.pools],
         "compactions": len(actions),
         "launches_steady": len(config.pools),
         "launches_post_compaction": post,

@@ -323,6 +323,50 @@ class SlotMap:
                 f"the current bound {self.n_virtual}")
         self.n_virtual = int(n_virtual)
 
+    # -- persistence -----------------------------------------------------
+    def to_json(self) -> dict:
+        """The map as a JSON-serializable dict: capacities, the two
+        assignment tables, and the free lists *in stack order* —
+        allocation order is part of the translation contract (the
+        next join must take the same slot after a round trip), so the
+        free lists persist verbatim rather than being re-derived."""
+        return {
+            "n_slots": int(self.layout.n_slots),
+            "m_pad": int(self.layout.m_pad),
+            "generation": int(self.layout.generation),
+            "n_virtual": int(self.n_virtual),
+            "stream": self.stream,
+            "node_slot": [[int(v), int(s)]
+                          for v, s in sorted(self.node_slot.items())],
+            "edge_slot": [[int(lo), int(hi), int(s)]
+                          for (lo, hi), s
+                          in sorted(self.edge_slot.items())],
+            "free_nodes": [int(s) for s in self._free_nodes],
+            "free_edges": [int(s) for s in self._free_edges],
+        }
+
+    @classmethod
+    def from_json(cls, payload: dict) -> "SlotMap":
+        """Rebuild a map serialized by `to_json` — assignments, free
+        lists (exact order), and the per-node edge index (re-derived
+        from the edge table)."""
+        layout = SparseLayout(n_slots=int(payload["n_slots"]),
+                              m_pad=int(payload["m_pad"]),
+                              generation=int(payload["generation"]))
+        sm = cls(layout, int(payload["n_virtual"]),
+                 stream=payload.get("stream"))
+        sm.node_slot = {int(v): int(s)
+                        for v, s in payload["node_slot"]}
+        sm.edge_slot = {(int(lo), int(hi)): int(s)
+                        for lo, hi, s in payload["edge_slot"]}
+        sm._free_nodes = [int(s) for s in payload["free_nodes"]]
+        sm._free_edges = [int(s) for s in payload["free_edges"]]
+        sm._node_edges = {int(v): set() for v in sm.node_slot}
+        for key in sm.edge_slot:
+            sm._node_edges.setdefault(key[0], set()).add(key)
+            sm._node_edges.setdefault(key[1], set()).add(key)
+        return sm
+
     def translate(self, delta: GraphDelta) -> GraphDelta:
         """Virtual-space `GraphDelta` → slot-space delta with edge slots.
 

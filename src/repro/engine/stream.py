@@ -112,6 +112,24 @@ def restore_stacked_state(ckpt_dir: str, *, exact_smax: bool,
                 "saved config")
     b, n_pad = int(meta["b"]), int(meta["n_pad"])
     zb = jnp.zeros((b,), jnp.float32)
+    sp = meta.get("sparse")
+    if sp is not None:
+        # Slot-space checkpoint: rebuild the SparseStreamState pytree
+        # from the recorded capacities (the host SlotMaps ride in the
+        # metadata and are the caller's concern).
+        from repro.core.sparse import SparseLayout, SparseStreamState
+
+        slayout = SparseLayout(int(sp["n_slots"]), int(sp["m_pad"]),
+                               generation=int(sp["generation"]))
+        zbs = jnp.zeros((b, slayout.n_slots), jnp.float32)
+        template = SparseStreamState(
+            q=zb, s_total=zb, s_max=zb, strengths=zbs, node_mask=zbs,
+            edge_weights=jnp.zeros((b, slayout.m_pad), jnp.float32),
+            layout=slayout)
+        states, manifest = restore_checkpoint(path, template,
+                                              manifest=manifest)
+        states = jax.tree_util.tree_map(jnp.asarray, states)
+        return states, int(manifest["step"]), meta
     zbn = jnp.zeros((b, n_pad), jnp.float32)
     has_mask = bool(meta.get("has_node_mask"))
     # Mask-aware checkpoints carry their layout generation (older
@@ -322,14 +340,8 @@ class StreamEngine:
         (int / ``("keep_every_n", n, k)`` / callable); ``keep_last`` is
         the legacy int spelling.
         """
-        if not isinstance(states, FingerState):
-            raise NotImplementedError(
-                "StreamEngine.save: checkpointing sparse slot-space "
-                "states is not supported yet — the host SlotMap "
-                "assignments are part of the stream state and the "
-                "stream_engine_state manifest has no home for them; "
-                "rebuild sparse streams from their source graphs on "
-                "restart instead")
+        from repro.core.sparse import SparseStreamState
+
         # Reserved keys win over caller metadata: restore() depends on
         # them to rebuild the pytree and validate the engine config.
         meta = dict(metadata or {})
@@ -343,6 +355,16 @@ class StreamEngine:
             "exact_smax": self.exact_smax,
             "method": self.method,
         })
+        if isinstance(states, SparseStreamState):
+            # Slot-space checkpoints record their capacities (n_pad
+            # above is the slot width, not the virtual bound); the
+            # host SlotMap payloads ride in the caller's metadata
+            # (`FingerService.save` puts them under "slot_maps").
+            meta["sparse"] = {
+                "n_slots": int(states.layout.n_slots),
+                "m_pad": int(states.layout.m_pad),
+                "generation": int(states.layout.generation),
+            }
         return save_checkpoint(ckpt_dir, step, states, metadata=meta,
                                keep_last=keep_last,
                                prune_policy=prune_policy)

@@ -10,8 +10,9 @@ from repro.fleet.config import FleetConfig, PoolSpec
 from repro.fleet.directory import TenantDirectory, TenantEntry
 from repro.fleet.errors import (AdmissionError, FleetConfigError,
                                 FleetError, FleetIngestError,
-                                FleetLifecycleError, RebalanceError,
-                                RecoveryError, ShardUnavailableError,
+                                FleetLifecycleError, PoolGroupError,
+                                RebalanceError, RecoveryError,
+                                ShardUnavailableError,
                                 UnknownTenantError)
 from repro.fleet.fleet import FingerFleet
 from repro.fleet.rebalance import Rebalancer
@@ -28,6 +29,7 @@ __all__ = [
     "FleetIngestError",
     "FleetLifecycleError",
     "FleetRouter",
+    "PoolGroupError",
     "PoolSpec",
     "Rebalancer",
     "RebalanceError",

@@ -71,14 +71,15 @@ class PoolSpec:
                        ) -> ServiceConfig:
         """The `ServiceConfig` of one shard of this pool.
 
-        Dense shards of a persistent fleet checkpoint under
+        Shards of a persistent fleet checkpoint under
         ``<fleet_dir>/<pool>/shard<i>`` — the serving layer's shared
         checkpoint format, so shard checkpoints restore through
-        `FingerService.restore` (and its layout-log walk) unchanged.
-        Sparse shards are always ephemeral (SlotMaps don't serialize).
+        `FingerService.restore` unchanged (dense shards with the
+        layout-log walk; sparse shards with their per-stream SlotMaps
+        serialized into the manifest).
         """
         ckpt = CheckpointPolicy()
-        if fleet_dir is not None and self.method != "sparse_tick":
+        if fleet_dir is not None:
             ckpt = CheckpointPolicy(directory=os.path.join(
                 str(fleet_dir), self.name, f"shard{int(shard)}"))
         return ServiceConfig(
@@ -102,9 +103,11 @@ class FleetConfig:
     """The whole fleet: ordered buckets + fleet-wide policies.
 
     ``directory`` roots the fleet's persistence (per-shard serving
-    checkpoints + the ``fleet.json`` tenant manifest); it requires
-    all-dense pools, because sparse slot-space shards cannot
-    checkpoint. ``compact_occupancy`` drives the rebalancer's
+    checkpoints + the ``fleet.json`` tenant manifest); every method
+    persists — sparse shards serialize their per-stream SlotMaps into
+    the shard checkpoint manifest, and the fleet manifest records each
+    sparse shard's live slot capacities.
+    ``compact_occupancy`` drives the rebalancer's
     auto-compaction: a dense shard whose live-slot occupancy falls
     below it is compacted to its live count (through the warm
     `PlanCache`, so a pre-warmed rebalance compiles nothing).
@@ -117,13 +120,14 @@ class FleetConfig:
     compact_occupancy: float = 0.5
     save_every_ticks: Optional[int] = None
     compilation_cache_dir: Optional[str] = None
-    # Steady-state tick path: True advances each pool's live dense
-    # shards as ONE stacked jit launch per layout group
-    # (`fleet.pooltick`) and leaves the per-pool score matrix on device
-    # for the single-sync score plane; False keeps the PR 8 sequential
-    # per-shard `poll()` path (the parity baseline and the honest bench
-    # comparator). Non-stackable (sparse/fused) pools always fall back
-    # to the sequential path regardless.
+    # Steady-state tick path: True advances each pool's live shards —
+    # every method, megakernel pools included — as ONE stacked launch
+    # per layout group (`fleet.pooltick`) and leaves the per-pool score
+    # matrix on device for the single-sync score plane; False keeps the
+    # PR 8 sequential per-shard `poll()` path (the parity baseline and
+    # the honest bench comparator). A group whose S-stacked operands
+    # exceed the device-residency budget falls back to sequential
+    # per-shard launches regardless (`pooltick.group_fits`).
     stacked_ticks: bool = True
     # WAL growth cap: prune per-tenant WAL entries older than
     # ``fleet_step - wal_retention_ticks`` at ingest time. Entries at
@@ -150,14 +154,6 @@ class FleetConfig:
                 f"(the bucket ladder), got {sizes}")
         for p in self.pools:
             p.validate()
-        if self.directory is not None:
-            sparse = [p.name for p in self.pools
-                      if p.method == "sparse_tick"]
-            if sparse:
-                raise FleetConfigError(
-                    f"a persistent fleet (directory set) requires "
-                    f"all-dense pools — sparse slot-space shards do "
-                    f"not checkpoint (pools {sparse})")
         if not 0.0 < self.compact_occupancy <= 1.0:
             raise FleetConfigError(
                 f"compact_occupancy must be in (0, 1], got "

@@ -43,8 +43,15 @@ class ShardUnavailableError(FleetError):
 
 class RebalanceError(FleetError):
     """A live tenant migration (promotion / shard rebalance) cannot be
-    performed — e.g. promoting a slot-space (sparse) tenant, whose
-    edge store cannot be reconstructed from FINGER statistics."""
+    performed — e.g. promoting a tenant into a pool that cannot hold
+    its node space, or rebalancing against a staged tick."""
+
+
+class PoolGroupError(FleetError, ValueError):
+    """A pool-stacked tick group mixes incompatible shards: the
+    entries handed to one stacked warm/launch disagree on their tick
+    method. Shards of one stacked launch must share one compiled tick
+    body — group by pool (and layout/capacity) before stacking."""
 
 
 class RecoveryError(FleetError):

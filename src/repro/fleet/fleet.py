@@ -318,14 +318,16 @@ class FingerFleet:
         nothing was staged. Returns the new fleet step.
 
         Steady-state dispatch (``config.stacked_ticks``): each pool's
-        live dense shards advance as ONE stacked jit launch per layout
-        group (`fleet.pooltick`), leaving the (S, B) score matrix on
-        device as the tick's score plane; non-stackable pools (sparse/
-        fused) fall back to per-shard `poll()`. A due periodic save
-        runs AFTER every pool's tick has been dispatched — the
-        checkpoint never serializes ahead of device work — and its
-        pause is recorded in `last_save_pause_s` instead of silently
-        inflating the tick.
+        live shards — every method, megakernel pools included —
+        advance as ONE stacked launch per layout group
+        (`fleet.pooltick`), leaving the (S, B) score matrix on device
+        as the tick's score plane. A group whose S-stacked operands
+        exceed the device-residency budget (`pooltick.group_fits`)
+        falls back to sequential per-shard `poll()` for that group
+        only. A due periodic save runs AFTER every pool's tick has
+        been dispatched — the checkpoint never serializes ahead of
+        device work — and its pause is recorded in
+        `last_save_pause_s` instead of silently inflating the tick.
         """
         self._check_open("poll")
         if not self._staged:
@@ -344,15 +346,27 @@ class FingerFleet:
                 continue
             # Group live shards by live layout: shards of one pool
             # share a config, but a compacted shard has a private
-            # (smaller, regenerated) layout and ticks in its own group.
-            groups: Dict[Tuple[int, int], list] = {}
+            # (smaller, regenerated) layout and ticks in its own
+            # group; sparse shards additionally key on their live
+            # SparseLayout capacity (grow_capacity re-keys a shard).
+            groups: Dict[tuple, list] = {}
             for shard_i in live[pool_i]:
                 svc = self.shard_service(pool_i, shard_i)
-                gkey = (svc.layout.n_pad, svc.layout.generation)
+                gkey = (svc.layout.n_pad, svc.layout.generation,
+                        svc.capacity)
                 groups.setdefault(gkey, []).append((shard_i, svc))
             planes = []
             for members in groups.values():
-                dists = pooltick.tick_pool([svc for _, svc in members])
+                group = [svc for _, svc in members]
+                if not pooltick.group_fits(
+                        [svc.config for svc in group]):
+                    # S-stacked operands would blow the residency
+                    # budget: this group ticks sequentially.
+                    for svc in group:
+                        svc.poll()
+                        launches += 1
+                    continue
+                dists = pooltick.tick_pool(group)
                 launches += 1
                 planes.append(([s for s, _ in members], dists))
             self._pool_scores_dev[pool_i] = planes
@@ -387,8 +401,8 @@ class FingerFleet:
         plane — materialized lazily with ONE device→host transfer per
         pool layout-group per tick, then indexed for free by every
         per-tenant read and top-k merge. None when the shard ticked
-        outside the plane (sequential mode, sparse pool, pre-first-
-        tick)."""
+        outside the plane (sequential mode, residency fallback,
+        pre-first-tick)."""
         rows = self._pool_scores_host.get(pool_i)
         if rows is None:
             planes = self._pool_scores_dev.get(pool_i)
@@ -542,8 +556,15 @@ class FingerFleet:
             for shard_i in range(pool.shards):
                 svc = self.shard_service(pool_i, shard_i)
                 svc.save()
-                recs.append({"n_pad": svc.layout.n_pad,
-                             "generation": svc.layout.generation})
+                rec = {"n_pad": svc.layout.n_pad,
+                       "generation": svc.layout.generation}
+                if svc.capacity is not None:
+                    # Sparse shards: live slot capacities can outgrow
+                    # the PoolSpec values (grow_capacity), so the
+                    # manifest records them per shard.
+                    rec["n_slots"] = int(svc.capacity.n_slots)
+                    rec["m_pad"] = int(svc.capacity.m_pad)
+                recs.append(rec)
             pools_manifest[pool.name] = recs
         # Truncate recovery material first so the manifest records the
         # post-save base steps.
@@ -596,9 +617,12 @@ class FingerFleet:
                     config.directory, shard_i,
                     compilation_cache_dir=config.compilation_cache_dir
                 ).with_(n_pad=int(rec["n_pad"]))
-                svc = FingerService.restore(
-                    scfg, plan=plans.get(scfg.n_pad))
-                plans.setdefault(scfg.n_pad, svc.plan)
+                if "n_slots" in rec:
+                    scfg = scfg.with_(n_slots=int(rec["n_slots"]),
+                                      m_pad=int(rec["m_pad"]))
+                pkey = (scfg.n_pad, scfg.n_slots, scfg.m_pad)
+                svc = FingerService.restore(scfg, plan=plans.get(pkey))
+                plans.setdefault(pkey, svc.plan)
                 row.append(svc)
             shards.append(row)
         directory = TenantDirectory.from_json(manifest["tenants"])

@@ -6,10 +6,9 @@ blocking host→device delta transfers through `SyncIngestor.get`) per
 pool per tick, even though every shard of a pool runs the *same*
 compiled tick body over identically-shaped `(B, n_pad)` state. This
 module collapses that to ONE jitted launch per pool: the per-shard
-`FingerState`s are stacked along a leading shard axis *inside* the jit
-(so the stack itself is device work, not S extra dispatches), advanced
-with `jax.vmap` over the engine's batched tick body — vmap-over-vmap,
-an (S, B, n_pad) program — and unstacked back to per-shard states and
+states are stacked along a leading shard axis *inside* the jit (so the
+stack itself is device work, not S extra dispatches), advanced as one
+(S, B, …) program, and unstacked back to per-shard states and
 per-shard score rows, again inside the same jit.
 
 The per-shard `FingerService`s stay the management-plane view:
@@ -20,20 +19,29 @@ shard grouping exactly like `PlanCache.warm` does for per-shard plans.
 
 Stacking requires every shard in a group to share its static tick
 signature: same `NodeLayout` (n_pad AND generation — both are static
-aux of the state pytree) and the same per-shard delta statics. The
-fleet groups live shards by `service.layout` before calling `tick_pool`
-(queued fleet deltas are always generation-stripped by the ingestor, so
-the delta statics follow the layout). The group size S is part of the
-pytree structure, so jit transparently keys one compiled program per
-(S, layout) — a shard leaving the stack (kill/compact) changes the
-group and hits a different cache entry, which the rebalancer pre-warms.
+aux of the state pytree), same sparse capacity where applicable, and
+the same per-shard delta statics. The fleet groups live shards by
+`service.layout` (plus `service.capacity` for sparse pools) before
+calling `tick_pool`. The group size S is part of the pytree structure,
+so jit transparently keys one compiled program per (S, layout) — a
+shard leaving the stack (kill/compact) changes the group and hits a
+different cache entry, which the rebalancer pre-warms.
 
-Only the vmappable dense methods stack: ``"dense"`` and ``"compact"``
-tick bodies are plain vmapped jax ops, so an outer vmap is exact. The
-Pallas megakernel methods (``"fused_tick"``, ``"sparse_tick"``) keep
-their per-shard launches — vmapping a `pallas_call` changes its grid
-semantics and is not score-parity-tested; `stackable` gates them out
-and the fleet falls back to sequential `poll()` for those pools.
+All four methods stack. The vmappable dense methods (``"dense"``,
+``"compact"``) wrap the engine's batched tick body in an outer
+shard-axis `jax.vmap` — plain jax ops, so the outer vmap is exact. The
+Pallas megakernel methods (``"fused_tick"``, ``"sparse_tick"``) do NOT
+vmap their `pallas_call` (vmapping a kernel changes its grid
+semantics); they dispatch the stacked (S, B, ·) pytrees straight into
+the kernels' shard-stacked entry points
+(`kernels.stream_tick.ops.stream_tick_fused_stacked`,
+`kernels.sparse_tick.ops.sparse_tick_fused_stacked`) — ONE
+`pallas_call` over an extended (S, B) grid, per-grid-step bodies and
+VMEM footprint unchanged. `group_fits` is the admission guard: a group
+whose S-stacked operand set exceeds the device-residency budget
+(`kernels.dispatch.stacked_budget_bytes`) is routed back to sequential
+per-shard `poll()` launches by the fleet instead of failing device
+allocation mid-serve.
 """
 from __future__ import annotations
 
@@ -44,17 +52,48 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.stream import StreamEngine
+from repro.fleet.errors import PoolGroupError
 from repro.serving.plans import dummy_tick_args
 
-#: Methods whose tick body is a plain vmapped op chain — safe to wrap
-#: in an outer shard-axis vmap. Pallas megakernels are excluded (their
-#: grids are written for a (B, ...) launch, not an (S, B, ...) one).
-_STACKABLE_METHODS = ("dense", "compact")
+#: Every serving method ticks as one stacked launch per layout group.
+#: Dense methods stack by outer vmap; the megakernels by their native
+#: (S, B)-gridded stacked entry points.
+_STACKABLE_METHODS = ("dense", "compact", "fused_tick", "sparse_tick")
 
 
 def stackable(method: str) -> bool:
     """True when ``method``'s pool can tick as one stacked launch."""
     return method in _STACKABLE_METHODS
+
+
+def group_fits(configs: Sequence) -> bool:
+    """Whether one layout-group is admissible as a single stacked
+    launch under the device-residency budget.
+
+    ``configs`` are the group members' live `ServiceConfig`s (len = S).
+    Dense/compact groups always fit (their stacked operands are the
+    same arrays the sequential path already keeps resident). Megakernel
+    groups consult the kernel packages' stacked admission checks —
+    per-grid-step VMEM fit (unchanged by stacking) AND total S-stacked
+    operand residency (`dispatch.stacked_budget_bytes`). The fleet
+    routes a failing group to sequential per-shard `poll()` launches.
+    """
+    configs = list(configs)
+    if not configs:
+        return True
+    cfg = configs[0]
+    s = len(configs)
+    if cfg.method == "fused_tick":
+        from repro.kernels.stream_tick.ops import fits_fused_tick_stacked
+
+        return fits_fused_tick_stacked(s, cfg.batch_size, cfg.n_pad,
+                                       cfg.k_pad, cfg.j_pad)
+    if cfg.method == "sparse_tick":
+        from repro.kernels.sparse_tick.ops import fits_sparse_tick_stacked
+
+        return fits_sparse_tick_stacked(s, cfg.batch_size, cfg.n_slots,
+                                        cfg.m_pad, cfg.k_pad, cfg.j_pad)
+    return True
 
 
 @functools.lru_cache(maxsize=None)
@@ -69,6 +108,11 @@ def pool_tick_fn(exact_smax: bool, method: str):
     per-shard states — both unstacked INSIDE the jit, so handing them
     back to the per-shard `FingerService`s costs zero extra launches.
 
+    The stacked body is method-dependent: dense/compact shard-vmap the
+    engine's batched tick; fused/sparse call the kernels' shard-stacked
+    megakernel entry points on the stacked pytrees directly (one
+    (S, B)-gridded `pallas_call`, never a vmapped kernel).
+
     The whole per-shard state tuple is donated: the fleet owns those
     states and immediately rebinds each shard to its returned one.
     Cached per (exact_smax, method); jit itself keys per group size S
@@ -78,15 +122,28 @@ def pool_tick_fn(exact_smax: bool, method: str):
         raise ValueError(
             f"pool_tick_fn: method {method!r} is not stackable; gate "
             "with stackable() and fall back to per-shard poll()")
-    engine = StreamEngine(exact_smax=exact_smax, method=method)
-    body = engine._tick_body
+    if method == "fused_tick":
+        from repro.kernels.stream_tick.ops import stream_tick_fused_stacked
+
+        def body(stacked, sdeltas):
+            return stream_tick_fused_stacked(stacked, sdeltas,
+                                             exact_smax=exact_smax)
+    elif method == "sparse_tick":
+        from repro.kernels.sparse_tick.ops import sparse_tick_fused_stacked
+
+        def body(stacked, sdeltas):
+            return sparse_tick_fused_stacked(stacked, sdeltas,
+                                             exact_smax=exact_smax)
+    else:
+        engine = StreamEngine(exact_smax=exact_smax, method=method)
+        body = jax.vmap(engine._tick_body)
 
     def run(states_seq, deltas_seq):
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *states_seq)
         sdeltas = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *deltas_seq)
-        dists, new_states = jax.vmap(body)(stacked, sdeltas)
+        dists, new_states = body(stacked, sdeltas)
         s = len(states_seq)
         rows = tuple(dists[i] for i in range(s))
         shard_states = tuple(
@@ -101,12 +158,12 @@ def tick_pool(services: Sequence) -> jax.Array:
     """Advance one layout-group of live shards as a single launch.
 
     ``services`` are `FingerService`s sharing one `ServiceConfig` shape
-    and one current `NodeLayout` (the fleet groups by layout first).
-    Each shard's queued stacked delta is popped un-transferred
-    (`begin_pool_tick`), the whole group runs through `pool_tick_fn`,
-    and each shard absorbs its row + updated state
-    (`finish_pool_tick`). Returns the on-device (S, B) score matrix in
-    ``services`` order — the fleet's per-pool score plane.
+    and one current `NodeLayout` (and sparse capacity — the fleet
+    groups by layout first). Each shard's queued stacked delta is
+    popped un-transferred (`begin_pool_tick`), the whole group runs
+    through `pool_tick_fn`, and each shard absorbs its row + updated
+    state (`finish_pool_tick`). Returns the on-device (S, B) score
+    matrix in ``services`` order — the fleet's per-pool score plane.
     """
     svcs = list(services)
     first = svcs[0].config
@@ -122,19 +179,36 @@ def tick_pool(services: Sequence) -> jax.Array:
 def warm_pool_tick(entries: Sequence[Tuple[object, object]]) -> None:
     """Pre-compile the stacked tick for one predicted shard grouping.
 
-    ``entries`` is the group as (ServiceConfig, NodeLayout) pairs — the
-    same prediction surface `PlanCache.warm` uses, so the rebalancer
-    warms the stacked program for the *current* grouping and for every
-    predicted post-migration regrouping (a compaction peels a shard out
-    of the group AND re-keys that shard's own singleton group). Runs
-    the jit once on zero dummies and blocks, exactly like
-    `ExecutionPlan.warm_tick`.
+    ``entries`` is the group as (ServiceConfig, layout) pairs — a
+    `NodeLayout` for the dense methods, a `SparseLayout` capacity for
+    ``"sparse_tick"`` — the same prediction surface `PlanCache.warm`
+    uses, so the rebalancer warms the stacked program for the *current*
+    grouping and for every predicted post-migration regrouping (a
+    compaction peels a shard out of the group AND re-keys that shard's
+    own singleton group). Runs the jit once on zero dummies and blocks,
+    exactly like `ExecutionPlan.warm_tick`.
+
+    Every entry must share one tick method: a stacked launch compiles
+    ONE body, so a mixed-method entry list cannot be a real group —
+    it raises `PoolGroupError` by name instead of silently warming the
+    first entry's program for shards that will never run it. A group
+    failing `group_fits` is skipped (the fleet will tick it through
+    the already-compiled sequential per-shard path, so there is no
+    stacked program to warm).
     """
     entries = list(entries)
     if not entries:
         return
+    methods = sorted({cfg.method for cfg, _ in entries})
+    if len(methods) > 1:
+        raise PoolGroupError(
+            f"warm_pool_tick: mixed-method entry list {methods} — a "
+            "stacked launch compiles one tick body; group shards by "
+            "pool (method) before warming")
     first = entries[0][0]
     if not stackable(first.method):
+        return
+    if not group_fits([cfg for cfg, _ in entries]):
         return
     fn = pool_tick_fn(first.exact_smax, first.method)
     args = [dummy_tick_args(cfg, layout) for cfg, layout in entries]
@@ -150,12 +224,15 @@ def group_by_layout(services: Sequence) -> List[List]:
     Shards of one pool share a `ServiceConfig` at open time, but
     compaction gives individual shards private layouts (smaller n_pad,
     bumped generation) — those tick in their own (possibly singleton)
-    group. Order within each group follows ``services`` order, and
-    group order follows first appearance, so the fleet's shard→row
+    group. Sparse shards additionally key on their live `SparseLayout`
+    capacity (n_slots, m_pad, generation): a shard whose capacity grew
+    (`grow_capacity`) no longer shares a compiled stacked program with
+    its siblings. Order within each group follows ``services`` order,
+    and group order follows first appearance, so the fleet's shard→row
     bookkeeping is deterministic.
     """
     groups: dict = {}
     for svc in services:
-        key = (svc.layout, svc.config.n_pad)
+        key = (svc.layout, svc.config.n_pad, svc.capacity)
         groups.setdefault(key, []).append(svc)
     return list(groups.values())

@@ -25,14 +25,13 @@ serving layer's existing machinery:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.fleet import pooltick
-from repro.fleet.errors import RebalanceError
 from repro.graphs.types import GraphDelta
 from repro.serving import migrate
 from repro.serving.service import WarmupHandle, _score_at_jit
@@ -67,19 +66,19 @@ class Rebalancer:
     def promote(self, name: str,
                 to_pool: Optional[str] = None) -> dict:
         """Move one tenant to a bigger bucket, live (see module
-        docstring). Returns a small report dict. Raises
-        `RebalanceError` for sparse-pool tenants and propagates
-        `AdmissionError` when no bigger bucket has room."""
+        docstring). Returns a small report dict; propagates
+        `AdmissionError` when no bigger bucket has room.
+
+        Sparse-pool tenants promote too: their FINGER row is gathered
+        to tenant space through the stream's host `SlotMap` (virtual
+        id → slot) instead of a dense position map, then re-embedded
+        at identity positions into a dense bucket. Exact for the same
+        reason as the dense path — every FINGER statistic is invariant
+        under position relabeling — though the tenant's edge-slot
+        store is left behind (the dense methods don't carry one)."""
         fleet = self._fleet
         entry = fleet.directory.get(name)
         pool = fleet.config.pools[entry.pool]
-        if pool.method == "sparse_tick":
-            raise RebalanceError(
-                f"tenant {name!r} lives in sparse pool "
-                f"{pool.name!r}: slot-space tenants grow virtually "
-                "(free repad) and their edge store cannot be "
-                "reconstructed from FINGER statistics — promotion is "
-                "a dense-pool migration")
         src = fleet.shard_service(entry.pool, entry.shard)
         if to_pool is None:
             min_pool, max_pool = entry.pool + 1, None
@@ -90,7 +89,11 @@ class Rebalancer:
             max_pool=max_pool, dense_only=True)
         # Checkpoint-through: device row -> host -> tenant space.
         row = jax.device_get(src.extract_stream(entry.slot))
-        base = self._row_to_tenant(row, entry)
+        if pool.method == "sparse_tick":
+            base = self._sparse_row_to_tenant(
+                row, entry, src.slot_maps[entry.slot])
+        else:
+            base = self._row_to_tenant(row, entry)
         fleet.install_dense(tgt_pool, tgt_shard, tgt_slot, base)
         src.clear_stream(entry.slot)
         old = (entry.pool, entry.shard, entry.slot)
@@ -121,6 +124,26 @@ class Rebalancer:
             else np.asarray(row.node_mask, np.float32)
         strengths[valid] = row_s[som[valid]]
         mask[valid] = row_m[som[valid]]
+        return {"q": float(row.q), "s_total": float(row.s_total),
+                "s_max": float(row.s_max), "strengths": strengths,
+                "node_mask": mask}
+
+    @staticmethod
+    def _sparse_row_to_tenant(row, entry, slot_map) -> dict:
+        """One extracted sparse stream row -> tenant-space base
+        snapshot. Sparse tenants carry no dense position map; the
+        stream's host `SlotMap` (virtual id → node slot) is the
+        gather. Only slots the map owns are read — free slots hold
+        exact zeros either way."""
+        n_t = entry.n_nodes
+        strengths = np.zeros((n_t,), np.float32)
+        mask = np.zeros((n_t,), np.float32)
+        row_s = np.asarray(row.strengths, np.float32)
+        row_m = np.asarray(row.node_mask, np.float32)
+        for vid, slot in slot_map.node_slot.items():
+            if vid < n_t:
+                strengths[vid] = row_s[slot]
+                mask[vid] = row_m[slot]
         return {"q": float(row.q), "s_total": float(row.s_total),
                 "s_max": float(row.s_max), "strengths": strengths,
                 "node_mask": mask}
@@ -216,10 +239,15 @@ class Rebalancer:
     def _warm_pool_ticks(self) -> list:
         """Pre-compile the stacked pool-tick programs the fleet's
         steady-state `poll()` can hit: the current layout grouping of
-        every stackable pool, plus every regrouping one upkeep action
-        away — a compaction peels one shard into a singleton group at
-        its compacted layout (leaving the rest of its group one shard
-        smaller), a repad peels it back out at the pool bound."""
+        every pool (all four methods stack, megakernels included),
+        plus — for the dense methods — every regrouping one upkeep
+        action away: a compaction peels one shard into a singleton
+        group at its compacted layout (leaving the rest of its group
+        one shard smaller), a repad peels it back out at the pool
+        bound. Sparse shards have no compaction/repad surface (their
+        virtual bound grows for free and slot capacities only change
+        through explicit `grow_capacity`), so only their current
+        capacity grouping is warmed."""
         fleet = self._fleet
         warmed = []
         if not fleet.config.stacked_ticks:
@@ -231,13 +259,21 @@ class Rebalancer:
             pool = fleet.config.pools[pool_i]
             if not pooltick.stackable(pool.method):
                 continue
-            groups: Dict[Tuple[int, int], list] = {}
+            groups: Dict[tuple, list] = {}
             for shard_i in shard_ids:
                 svc = fleet.shard_service(pool_i, shard_i)
-                key = (svc.layout.n_pad, svc.layout.generation)
+                key = (svc.layout.n_pad, svc.layout.generation,
+                       svc.capacity)
                 groups.setdefault(key, []).append(svc)
             plans = []
             for members in groups.values():
+                if pool.method == "sparse_tick":
+                    # Warm entries carry the SparseLayout capacity —
+                    # the layout `dummy_tick_args` sizes slot-space
+                    # dummies from.
+                    plans.append([(s.config, s.capacity)
+                                  for s in members])
+                    continue
                 cur = [(s.config.with_(n_pad=s.layout.n_pad), s.layout)
                        for s in members]
                 plans.append(cur)
@@ -260,9 +296,10 @@ class Rebalancer:
             seen = set()
             count = 0
             for entries in plans:
-                sig = tuple((lay.n_pad, lay.generation)
-                            for _, lay in entries)
-                if not entries or sig in seen:
+                if not entries:
+                    continue
+                sig = tuple(lay for _, lay in entries)
+                if sig in seen:
                     continue
                 seen.add(sig)
                 pooltick.warm_pool_tick(entries)

@@ -20,7 +20,10 @@ as ``base ⊕ replay(wal)`` where
 The rebuilt tenant is then placed on a surviving *dense* shard (same
 bucket first, spilling up) and installed at identity positions —
 sparse slot-space tenants also land on dense pools, since their edge
-store cannot be reconstructed from FINGER statistics.
+store cannot be reconstructed from FINGER statistics. A dead sparse
+shard's disk base is gathered to tenant space through the per-stream
+`SlotMap` payloads its checkpoint manifest serializes (virtual id →
+slot), in place of a dense position map.
 """
 from __future__ import annotations
 
@@ -107,24 +110,32 @@ def replay_tenant(base: dict, wal: List[Tuple[int, GraphDelta]],
 def _load_dead_checkpoint(dead: DeadShard, exact_smax: bool):
     """The dead shard's last checkpoint, walked to the layout at death
     (so directory position maps index it): per-stream scalars plus the
-    (B, n_pad_death) strengths/mask."""
+    (B, n_pad_death) strengths/mask. Sparse checkpoints skip the
+    layout walk — slot ids survive capacity growth unchanged — and
+    surface the serialized per-stream `SlotMap` payloads instead (the
+    gather table sparse tenants are read through)."""
     states, step_saved, meta = restore_stacked_state(
         dead.ckpt_dir, exact_smax=exact_smax, method=dead.method)
     strengths = np.asarray(states.strengths, np.float32)
     mask = np.ones_like(strengths) if states.node_mask is None \
         else np.asarray(states.node_mask, np.float32)
-    gen = int(meta.get("layout_generation", 0))
-    if (strengths.shape[-1] != dead.layout.n_pad
-            or gen != dead.layout.generation):
-        log = migrate.load_layout_log(dead.ckpt_dir)
-        strengths, mask, gen, _ = migrate.migrate_host_arrays(
-            strengths, mask, log, gen, dead.layout.n_pad)
+    slot_maps = None
+    if dead.method == "sparse_tick":
+        slot_maps = meta.get("slot_maps")
+    else:
+        gen = int(meta.get("layout_generation", 0))
+        if (strengths.shape[-1] != dead.layout.n_pad
+                or gen != dead.layout.generation):
+            log = migrate.load_layout_log(dead.ckpt_dir)
+            strengths, mask, gen, _ = migrate.migrate_host_arrays(
+                strengths, mask, log, gen, dead.layout.n_pad)
     return {
         "strengths": strengths, "node_mask": mask,
         "q": np.asarray(states.q, np.float32),
         "s_total": np.asarray(states.s_total, np.float32),
         "s_max": np.asarray(states.s_max, np.float32),
         "step": int(step_saved),
+        "slot_maps": slot_maps,
     }
 
 
@@ -162,14 +173,30 @@ def recover_shard(fleet, dead: DeadShard) -> List[dict]:
                 except FileNotFoundError as e:
                     raise RecoveryError(
                         f"tenant {entry.name!r}: {e}") from e
-            som = entry.slot_of_node
             row_s = disk["strengths"][entry.slot]
             row_m = disk["node_mask"][entry.slot]
             strengths = np.zeros((entry.n_nodes,), np.float32)
             mask = np.zeros((entry.n_nodes,), np.float32)
-            valid = np.nonzero(som >= 0)[0]
-            strengths[valid] = row_s[som[valid]]
-            mask[valid] = row_m[som[valid]]
+            if pool.method == "sparse_tick":
+                # Sparse tenants carry no dense position map; gather
+                # through the checkpoint's serialized SlotMap.
+                if not disk["slot_maps"]:
+                    raise RecoveryError(
+                        f"tenant {entry.name!r}: sparse shard "
+                        f"({pool.name!r}, {dead.shard})'s checkpoint "
+                        "carries no SlotMap payloads (it predates "
+                        "sparse persistence) — its slot assignments "
+                        "are unrecoverable")
+                for vid, slot in disk["slot_maps"][entry.slot][
+                        "node_slot"]:
+                    if vid < entry.n_nodes:
+                        strengths[vid] = row_s[slot]
+                        mask[vid] = row_m[slot]
+            else:
+                som = entry.slot_of_node
+                valid = np.nonzero(som >= 0)[0]
+                strengths[valid] = row_s[som[valid]]
+                mask[valid] = row_m[som[valid]]
             base = {"q": float(disk["q"][entry.slot]),
                     "s_total": float(disk["s_total"][entry.slot]),
                     "s_max": float(disk["s_max"][entry.slot]),

@@ -17,6 +17,16 @@ be overridden three ways, in increasing precedence:
 - ``set_vmem_budget_bytes(n)`` — process-wide override (``None``
   restores the env/default value);
 - ``vmem_budget(n)`` — a scoped context-manager override.
+
+Shard-stacked launches (the ``(S, B)``-gridded megakernel entry points)
+add a second, independent guard: stacking leaves the per-grid-step VMEM
+footprint unchanged (each step still loads one stream's row), but the
+whole stacked operand set must be resident on the device for the
+launch's lifetime.  ``stacked_residency_bytes_ok`` checks the total
+S-stacked operand bytes against ``stacked_budget_bytes()`` (default
+256 MB, ``REPRO_STACKED_BUDGET_BYTES`` env override) so an absurdly
+large layout-group is routed back to sequential per-shard launches
+instead of failing device allocation mid-serve.
 """
 from __future__ import annotations
 
@@ -80,6 +90,28 @@ def set_vmem_budget_bytes(n: Optional[int]) -> None:
     if n is not None and int(n) <= 0:
         raise ValueError(f"VMEM budget must be positive, got {n}")
     _process_override[0] = None if n is None else int(n)
+
+
+DEFAULT_STACKED_BUDGET_BYTES = 256 * 1024 * 1024
+
+_env = os.environ.get("REPRO_STACKED_BUDGET_BYTES")
+_BASE_STACKED_BUDGET_BYTES = int(_env) if _env \
+    else DEFAULT_STACKED_BUDGET_BYTES
+del _env
+
+
+def stacked_budget_bytes() -> int:
+    """Device-residency budget for one shard-stacked launch's operands
+    (inputs + outputs across all S shards; see module docstring)."""
+    return _BASE_STACKED_BUDGET_BYTES
+
+
+def stacked_residency_bytes_ok(total_bytes: int) -> bool:
+    """Whether a stacked launch's total operand residency fits the
+    stacked budget. The per-grid-step VMEM guard is separate (and
+    unchanged by stacking); a group failing THIS check must be routed
+    to sequential per-shard launches, not to the vmapped reference."""
+    return int(total_bytes) <= stacked_budget_bytes()
 
 
 @contextlib.contextmanager

@@ -245,3 +245,68 @@ def sparse_tick_pallas(
         interpret=interpret,
     )(q, s_total, s_max, strengths, node_mask, edge_weights,
       ep_ids, ep_dw, ep_wold, ep_mask, eslot, nid, nflag)
+
+
+@functools.partial(jax.jit, static_argnames=("exact_smax", "interpret"))
+def sparse_tick_pallas_stacked(
+    q: jax.Array,           # (S, B, 1) f32
+    s_total: jax.Array,     # (S, B, 1) f32
+    s_max: jax.Array,       # (S, B, 1) f32
+    strengths: jax.Array,   # (S, B, n_slots) f32
+    node_mask: jax.Array,   # (S, B, n_slots) f32
+    edge_weights: jax.Array,  # (S, B, m_pad) f32
+    ep_ids: jax.Array,      # (S, B, 2k) int32, [senders | receivers]
+    ep_dw: jax.Array,       # (S, B, 2k) f32
+    ep_wold: jax.Array,     # (S, B, 2k) f32
+    ep_mask: jax.Array,     # (S, B, 2k) f32
+    eslot: jax.Array,       # (S, B, k) int32 edge-store slots
+    nid: jax.Array,         # (S, B, j_pad) int32
+    nflag: jax.Array,       # (S, B, j_pad) f32
+    exact_smax: bool = False,
+    interpret: bool = False,
+):
+    """Shard-stacked fused sparse tick: a whole (S, B) layout-group as
+    ONE `pallas_call`.
+
+    Same spelling as `stream_tick.stream_tick_pallas_stacked`: the grid
+    extends to ``(S, B)`` and every BlockSpec squeezes the leading shard
+    axis (block shape ``(None, 1, width)``, index map ``(si, bi, 0)``),
+    so each grid step sees the per-batch entry point's ``(1, w)`` refs
+    and the per-step kernel body — and its VMEM footprint — is reused
+    verbatim.
+    """
+    s, b, n = strengths.shape
+    m = edge_weights.shape[2]
+    two_k = ep_ids.shape[2]
+    assert two_k % 256 == 0 and n % 128 == 0 and m % 128 == 0, (
+        f"endpoint axis 2k={two_k}, slot axis n={n} and store axis "
+        f"m={m} must be lane-aligned (ops.prepare pads them)")
+    assert eslot.shape[2] == two_k // 2, (
+        f"eslot axis {eslot.shape[2]} must equal k={two_k // 2}")
+    assert two_k <= MAX_ENDPOINTS, (
+        f"2k={two_k} endpoints exceed the sparse-tick VMEM ceiling; "
+        "ops.py routes such tiles to the vmapped path")
+
+    def tile(width):
+        return pl.BlockSpec((None, 1, width),
+                            lambda si, bi: (si, bi, 0),
+                            memory_space=pltpu.VMEM)
+
+    j = nid.shape[2]
+    in_specs = [tile(1), tile(1), tile(1), tile(n), tile(n), tile(m),
+                tile(two_k), tile(two_k), tile(two_k), tile(two_k),
+                tile(two_k // 2), tile(j), tile(j)]
+    out_specs = [tile(1), tile(1), tile(1), tile(1), tile(n), tile(n),
+                 tile(m)]
+    out_shape = tuple(
+        jax.ShapeDtypeStruct((s, b, w), jnp.float32)
+        for w in (1, 1, 1, 1, n, n, m))
+    return pl.pallas_call(
+        functools.partial(_kernel, exact_smax=exact_smax),
+        grid=(s, b),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, s_total, s_max, strengths, node_mask, edge_weights,
+      ep_ids, ep_dw, ep_wold, ep_mask, eslot, nid, nflag)

@@ -34,6 +34,7 @@ from repro.kernels.dispatch import ceil_to as _ceil_to
 from repro.kernels.sparse_tick.kernel import (
     MAX_ENDPOINTS,
     sparse_tick_pallas,
+    sparse_tick_pallas_stacked,
 )
 from repro.kernels.sparse_tick.ref import sparse_tick_ref
 
@@ -73,6 +74,32 @@ def fits_sparse_tick(n_slots: int, m_pad: int, k_pad: int,
         <= dispatch.vmem_budget_bytes()
 
 
+def sparse_tick_stacked_bytes(s: int, b: int, n_slots: int, m_pad: int,
+                              k_pad: int, j_pad: Optional[int]) -> int:
+    """Total device-resident operand bytes (inputs + outputs) of one
+    shard-stacked sparse launch over S shards of B streams each."""
+    two_k = 2 * _ceil_to(k_pad, _LANE)
+    n = _ceil_to(n_slots, _LANE)
+    m = _ceil_to(m_pad, _LANE)
+    j = _ceil_to(j_pad or 1, _SUBLANE)
+    # state+delta+outputs per stream row, incl. the (m,) edge store
+    per_row = 4 * (4 + 2 * n + 2 * m + 5 * two_k + two_k // 2 + 2 * j)
+    return s * b * per_row
+
+
+def fits_sparse_tick_stacked(s: int, b: int, n_slots: int, m_pad: int,
+                             k_pad: int,
+                             j_pad: Optional[int]) -> bool:
+    """Stacked-launch admission: per-grid-step tile fits VMEM (stacking
+    leaves each step's footprint unchanged) AND the S-stacked operand
+    set fits `dispatch.stacked_budget_bytes()`. Callers route a failing
+    group to sequential per-shard launches."""
+    return fits_sparse_tick(n_slots, m_pad, k_pad, j_pad) \
+        and dispatch.stacked_residency_bytes_ok(
+            sparse_tick_stacked_bytes(s, b, n_slots, m_pad, k_pad,
+                                      j_pad))
+
+
 def _check_slot_space(states: SparseStreamState,
                       deltas: GraphDelta) -> None:
     if deltas.edge_slots is None:
@@ -97,8 +124,12 @@ def prepare_sparse_tick(states: SparseStreamState, deltas: GraphDelta):
     the slot and store axes to the lane multiple (inactive zero slots —
     exact by padding invariance), and the node-slot axis to the sublane
     multiple (flag 0).
+
+    Leading-dim agnostic: every op works on the last axis, so the same
+    preparation serves the per-batch ``(B, ·)`` spelling and the
+    shard-stacked ``(S, B, ·)`` one.
     """
-    b, n = states.strengths.shape
+    *lead, n = states.strengths.shape
     m = states.edge_weights.shape[-1]
     k = deltas.dw.shape[-1]
     k_al = _ceil_to(k, _LANE)
@@ -122,11 +153,12 @@ def prepare_sparse_tick(states: SparseStreamState, deltas: GraphDelta):
         nid = _pad_last(deltas.node_ids.astype(jnp.int32), j_al)
         nflag = _pad_last(deltas.node_flag, j_al)
     else:
-        nid = jnp.zeros((b, _SUBLANE), jnp.int32)
-        nflag = jnp.zeros((b, _SUBLANE), jnp.float32)
+        nid = jnp.zeros((*lead, _SUBLANE), jnp.int32)
+        nflag = jnp.zeros((*lead, _SUBLANE), jnp.float32)
 
-    return (states.q.reshape(b, 1), states.s_total.reshape(b, 1),
-            states.s_max.reshape(b, 1),
+    return (states.q.reshape(*lead, 1),
+            states.s_total.reshape(*lead, 1),
+            states.s_max.reshape(*lead, 1),
             _pad_last(states.strengths, n_al),
             _pad_last(states.node_mask, n_al),
             _pad_last(states.edge_weights, m_al),
@@ -163,3 +195,46 @@ def sparse_tick_fused(
         strengths=str2[..., :n], node_mask=mask2[..., :n],
         edge_weights=ew2[..., :m], layout=states.layout)
     return dist[:, 0], new_states
+
+
+def sparse_tick_fused_stacked(
+    states: SparseStreamState,
+    deltas: GraphDelta,
+    exact_smax: bool = False,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, SparseStreamState]:
+    """Shard-stacked sparse tick: (S, B) scores + updated stacked
+    states.
+
+    ``states``/``deltas`` carry (S, B, ·) leaves — S same-capacity
+    shards of B streams each, one whole fleet layout-group. The fused
+    path is ONE `pallas_call` over the extended ``(S, B)`` grid (see
+    `kernel.sparse_tick_pallas_stacked`); when the per-step tile does
+    not fit VMEM, the shard axis is vmapped over the XLA oracle (plain
+    XLA, so the vmap is exact and stays a single launch).
+
+    The S-stacked *residency* guard (`fits_sparse_tick_stacked`) is the
+    caller's concern: `fleet.pooltick` routes groups that fail it to
+    sequential per-shard launches before building stacked operands.
+    """
+    _check_slot_space(states, deltas)
+    n = int(states.strengths.shape[-1])
+    m = int(states.edge_weights.shape[-1])
+    k = int(deltas.dw.shape[-1])
+    j = None if deltas.node_ids is None \
+        else int(deltas.node_ids.shape[-1])
+    if not use_pallas or not fits_sparse_tick(n, m, k, j):
+        return jax.vmap(
+            lambda st, d: sparse_tick_ref(st, d,
+                                          exact_smax=exact_smax))(
+            states, deltas)
+    interpret = dispatch.default_interpret(interpret)
+    prep = prepare_sparse_tick(states, deltas)
+    dist, q2, s2, smax2, str2, mask2, ew2 = sparse_tick_pallas_stacked(
+        *prep, exact_smax=exact_smax, interpret=interpret)
+    new_states = SparseStreamState(
+        q=q2[..., 0], s_total=s2[..., 0], s_max=smax2[..., 0],
+        strengths=str2[..., :n], node_mask=mask2[..., :n],
+        edge_weights=ew2[..., :m], layout=states.layout)
+    return dist[..., 0], new_states

@@ -236,3 +236,63 @@ def stream_tick_pallas(
         interpret=interpret,
     )(q, s_total, s_max, strengths, node_mask,
       ep_ids, ep_dw, ep_wold, ep_mask, nid, nflag)
+
+
+@functools.partial(jax.jit, static_argnames=("exact_smax", "interpret"))
+def stream_tick_pallas_stacked(
+    q: jax.Array,          # (S, B, 1) f32
+    s_total: jax.Array,    # (S, B, 1) f32
+    s_max: jax.Array,      # (S, B, 1) f32
+    strengths: jax.Array,  # (S, B, n_pad) f32
+    node_mask: jax.Array,  # (S, B, n_pad) f32
+    ep_ids: jax.Array,     # (S, B, 2k) int32, [senders | receivers]
+    ep_dw: jax.Array,      # (S, B, 2k) f32
+    ep_wold: jax.Array,    # (S, B, 2k) f32
+    ep_mask: jax.Array,    # (S, B, 2k) f32
+    nid: jax.Array,        # (S, B, j_pad) int32
+    nflag: jax.Array,      # (S, B, j_pad) f32
+    exact_smax: bool = False,
+    interpret: bool = False,
+):
+    """Shard-stacked fused tick: a whole (S, B) layout-group as ONE
+    `pallas_call`.
+
+    The grid is extended to ``(S, B)`` and every BlockSpec squeezes the
+    leading shard axis (block shape ``(None, 1, width)``, index map
+    ``(si, bi, 0)``), so each grid step sees the exact same ``(1, w)``
+    refs as the per-batch entry point and the per-step kernel body —
+    and its VMEM footprint — is reused verbatim. Semantically this is
+    ``vmap(stream_tick_pallas)`` over the shard axis, spelled as one
+    launch instead of S.
+    """
+    s, b, n = strengths.shape
+    two_k = ep_ids.shape[2]
+    assert two_k % 256 == 0 and n % 128 == 0, (
+        f"endpoint axis 2k={two_k} and node axis n={n} must be "
+        "lane-aligned (ops.prepare pads them)")
+    assert two_k <= MAX_ENDPOINTS, (
+        f"2k={two_k} endpoints exceed the fused-tick VMEM ceiling; "
+        "ops.py routes such tiles to the vmapped path")
+
+    def tile(width):
+        return pl.BlockSpec((None, 1, width),
+                            lambda si, bi: (si, bi, 0),
+                            memory_space=pltpu.VMEM)
+
+    j = nid.shape[2]
+    in_specs = [tile(1), tile(1), tile(1), tile(n), tile(n),
+                tile(two_k), tile(two_k), tile(two_k), tile(two_k),
+                tile(j), tile(j)]
+    out_specs = [tile(1), tile(1), tile(1), tile(1), tile(n), tile(n)]
+    out_shape = tuple(
+        jax.ShapeDtypeStruct((s, b, w), jnp.float32)
+        for w in (1, 1, 1, 1, n, n))
+    return pl.pallas_call(
+        functools.partial(_kernel, exact_smax=exact_smax),
+        grid=(s, b),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, s_total, s_max, strengths, node_mask,
+      ep_ids, ep_dw, ep_wold, ep_mask, nid, nflag)

@@ -34,6 +34,7 @@ from repro.kernels.dispatch import ceil_to as _ceil_to
 from repro.kernels.stream_tick.kernel import (
     MAX_ENDPOINTS,
     stream_tick_pallas,
+    stream_tick_pallas_stacked,
 )
 from repro.kernels.stream_tick.ref import stream_tick_ref
 
@@ -72,6 +73,29 @@ def fits_fused_tick(n_pad: int, k_pad: int,
         <= dispatch.vmem_budget_bytes()
 
 
+def fused_tick_stacked_bytes(s: int, b: int, n_pad: int, k_pad: int,
+                             j_pad: Optional[int]) -> int:
+    """Total device-resident operand bytes (inputs + outputs) of one
+    shard-stacked fused launch over S shards of B streams each."""
+    two_k = 2 * _ceil_to(k_pad, _LANE)
+    n = _ceil_to(n_pad, _LANE)
+    j = _ceil_to(j_pad or 1, _SUBLANE)
+    per_row = 4 * (4 + 2 * n + 5 * two_k + 2 * j)  # state+delta+outputs
+    return s * b * per_row
+
+
+def fits_fused_tick_stacked(s: int, b: int, n_pad: int, k_pad: int,
+                            j_pad: Optional[int]) -> bool:
+    """Stacked-launch admission: the per-grid-step tile must fit VMEM
+    exactly as in the per-batch spelling (stacking leaves each step's
+    footprint unchanged), AND the S-stacked operand set must fit the
+    `dispatch.stacked_budget_bytes()` residency budget. Callers route
+    a failing group to sequential per-shard launches."""
+    return fits_fused_tick(n_pad, k_pad, j_pad) \
+        and dispatch.stacked_residency_bytes_ok(
+            fused_tick_stacked_bytes(s, b, n_pad, k_pad, j_pad))
+
+
 def prepare_stream_tick(states: FingerState, deltas: GraphDelta):
     """Stacked (state, delta) → the kernel's lane-aligned input arrays.
 
@@ -80,8 +104,12 @@ def prepare_stream_tick(states: FingerState, deltas: GraphDelta):
     invariance), the node-slot axis to the sublane multiple (flag 0),
     and tiles the per-edge payloads onto the concatenated
     [senders | receivers] endpoint slots.
+
+    Leading-dim agnostic: every op works on the last axis, so the same
+    preparation serves the per-batch ``(B, ·)`` spelling and the
+    shard-stacked ``(S, B, ·)`` one.
     """
-    b, n = states.strengths.shape
+    *lead, n = states.strengths.shape
     k = deltas.dw.shape[-1]
     k_al = _ceil_to(k, _LANE)
     n_al = _ceil_to(n, _LANE)
@@ -101,11 +129,12 @@ def prepare_stream_tick(states: FingerState, deltas: GraphDelta):
         nid = _pad_last(deltas.node_ids.astype(jnp.int32), j_al)
         nflag = _pad_last(deltas.node_flag, j_al)
     else:
-        nid = jnp.zeros((b, _SUBLANE), jnp.int32)
-        nflag = jnp.zeros((b, _SUBLANE), jnp.float32)
+        nid = jnp.zeros((*lead, _SUBLANE), jnp.int32)
+        nflag = jnp.zeros((*lead, _SUBLANE), jnp.float32)
 
-    return (states.q.reshape(b, 1), states.s_total.reshape(b, 1),
-            states.s_max.reshape(b, 1),
+    return (states.q.reshape(*lead, 1),
+            states.s_total.reshape(*lead, 1),
+            states.s_max.reshape(*lead, 1),
             _pad_last(states.strengths, n_al),
             _pad_last(states.node_mask, n_al),
             ep_ids, ep_dw, ep_wold, ep_mask, nid, nflag)
@@ -150,3 +179,53 @@ def stream_tick_fused(
         strengths=str2[..., :n], node_mask=mask2[..., :n],
         layout=states.layout)
     return dist[:, 0], new_states
+
+
+def stream_tick_fused_stacked(
+    states: FingerState,
+    deltas: GraphDelta,
+    exact_smax: bool = False,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, FingerState]:
+    """Shard-stacked fused tick: (S, B) scores + updated stacked states.
+
+    ``states``/``deltas`` carry (S, B, ·) leaves — S same-layout shards
+    of B streams each, one whole fleet layout-group. The fused path is
+    ONE `pallas_call` over the extended ``(S, B)`` grid (see
+    `kernel.stream_tick_pallas_stacked`); when the per-step tile does
+    not fit VMEM or the state is mask-less, the shard axis is vmapped
+    over the XLA reference instead — the reference is plain XLA, so the
+    vmap is exact and stays a single XLA launch.
+
+    The S-stacked *residency* guard (`fits_fused_tick_stacked`) is the
+    caller's concern: `fleet.pooltick` routes groups that fail it to
+    sequential per-shard launches before ever building stacked
+    operands.
+    """
+    if states.layout is not None \
+            and deltas.n_nodes > states.layout.n_pad:
+        raise ValueError(
+            f"stream_tick_fused_stacked: delta is addressed in an "
+            f"n_pad={deltas.n_nodes} layout but the state's layout is "
+            f"n_pad={states.layout.n_pad} (generation "
+            f"{states.layout.generation}); migrate the state first")
+    n = int(states.strengths.shape[-1])
+    k = int(deltas.dw.shape[-1])
+    j = None if deltas.node_ids is None \
+        else int(deltas.node_ids.shape[-1])
+    if states.node_mask is None or not use_pallas \
+            or not fits_fused_tick(n, k, j):
+        return jax.vmap(
+            lambda st, d: stream_tick_ref(st, d, exact_smax=exact_smax,
+                                          method="dense"))(states,
+                                                           deltas)
+    interpret = dispatch.default_interpret(interpret)
+    prep = prepare_stream_tick(states, deltas)
+    dist, q2, s2, smax2, str2, mask2 = stream_tick_pallas_stacked(
+        *prep, exact_smax=exact_smax, interpret=interpret)
+    new_states = FingerState(
+        q=q2[..., 0], s_total=s2[..., 0], s_max=smax2[..., 0],
+        strengths=str2[..., :n], node_mask=mask2[..., :n],
+        layout=states.layout)
+    return dist[..., 0], new_states

@@ -233,14 +233,6 @@ class ServiceConfig:
                 raise ServiceConfigError(
                     f"method='sparse_tick' needs a positive m_pad "
                     f"edge-store capacity, got {self.m_pad}")
-            if self.checkpoint.directory is not None:
-                raise ServiceConfigError(
-                    "method='sparse_tick' does not support "
-                    "checkpointing (the host-side SlotMap assignments "
-                    "are part of the stream state and are not "
-                    "serialized); set checkpoint.directory=None and "
-                    "rebuild sparse streams from their source graphs "
-                    "on restart")
         else:
             if self.n_slots is not None or self.m_pad is not None:
                 raise ServiceConfigError(

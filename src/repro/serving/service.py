@@ -319,12 +319,6 @@ class FingerService:
         layout I since migrated to" work, bit-exact."""
         config.validate()
         _apply_compilation_cache(config)
-        if config.method == "sparse_tick":
-            raise ServiceConfigError(
-                "restore: sparse slot-space services are not "
-                "checkpointable (the host-side SlotMap assignments are "
-                "part of the stream state); rebuild sparse streams "
-                "from their source graphs with FingerService.open")
         ckpt_dir = directory or config.checkpoint.directory
         if ckpt_dir is None:
             raise ServiceConfigError(
@@ -333,6 +327,8 @@ class FingerService:
         plan = cls._resolve_plan(config, mesh, plan)
         states, step, meta = restore_stacked_state(
             ckpt_dir, exact_smax=config.exact_smax, method=config.method)
+        if config.method == "sparse_tick":
+            return cls._restore_sparse(config, plan, states, step, meta)
         b = int(states.q.shape[0])
         n_pad = int(states.strengths.shape[-1])
         if b != config.batch_size:
@@ -372,6 +368,50 @@ class FingerService:
             config.grace_generations)
         return cls(config, plan, plan.shard_states(states), step=step,
                    remaps=remaps, remaps_gen=remaps_gen)
+
+    @classmethod
+    def _restore_sparse(cls, config: ServiceConfig, plan, states, step,
+                        meta) -> "FingerService":
+        """Sparse tail of `restore`: rebuild the per-stream host
+        `SlotMap`s from the manifest payload and re-validate the slot
+        capacities against the config. No layout-log walk — slot
+        capacities only grow in place (slot ids are preserved), so the
+        saved state IS the current layout's."""
+        from repro.core.sparse import SlotMap
+
+        b = int(states.q.shape[0])
+        if b != config.batch_size:
+            raise ServiceConfigError(
+                f"restore: checkpoint holds {b} stream(s) but "
+                f"config.batch_size={config.batch_size}")
+        cap = states.layout
+        if (cap.n_slots, cap.m_pad) != (config.n_slots, config.m_pad):
+            raise ServiceConfigError(
+                f"restore: checkpoint slot capacities (n_slots="
+                f"{cap.n_slots}, m_pad={cap.m_pad}) != config "
+                f"(n_slots={config.n_slots}, m_pad={config.m_pad}); "
+                "restore with the saved capacities (a fleet manifest "
+                "records them per shard)")
+        payloads = meta.get("slot_maps")
+        if payloads is None or len(payloads) != b:
+            raise ServiceConfigError(
+                "restore: sparse checkpoint carries "
+                f"{0 if payloads is None else len(payloads)} SlotMap "
+                f"payload(s) for {b} stream(s); it predates sparse "
+                "persistence — rebuild these streams from their "
+                "source graphs with FingerService.open")
+        slot_maps = [SlotMap.from_json(p) for p in payloads]
+        for slot, sm in enumerate(slot_maps):
+            if sm.n_virtual > config.n_pad:
+                raise ServiceConfigError(
+                    f"restore: stream {slot}'s SlotMap addresses an "
+                    f"n_pad={sm.n_virtual} virtual space but "
+                    f"config.n_pad={config.n_pad}; virtual bounds "
+                    "never shrink")
+            if sm.n_virtual < config.n_pad:
+                sm.grow_virtual(config.n_pad)  # host-only free repad
+        return cls(config, plan, plan.shard_states(states), step=step,
+                   slot_maps=slot_maps)
 
     # -- introspection ---------------------------------------------------
     @property
@@ -650,14 +690,14 @@ class FingerService:
     # -- persistence -----------------------------------------------------
     def save(self, directory: Optional[str] = None) -> str:
         """Checkpoint the stacked state (atomic write, config-declared
-        prune policy). Returns the checkpoint path."""
+        prune policy). Returns the checkpoint path.
+
+        Sparse services checkpoint too: the host-side per-stream
+        `SlotMap`s — part of the stream state (virtual-id → slot
+        assignments and the free-list allocation order) — serialize
+        into the manifest metadata next to the recorded slot
+        capacities, so `restore` rebuilds translation exactly."""
         self._check_open("save")
-        if self._config.method == "sparse_tick":
-            raise ServiceConfigError(
-                "save: sparse slot-space states are not checkpointable "
-                "— the host-side SlotMap assignments are part of the "
-                "stream state and are not serialized; rebuild sparse "
-                "streams from their source graphs on restart instead")
         ckpt_dir = directory or self._config.checkpoint.directory
         if ckpt_dir is None:
             raise ServiceConfigError(
@@ -667,7 +707,9 @@ class FingerService:
         meta = {
             "kind": _CKPT_KIND,
             "b": int(states.q.shape[0]),
-            "n_pad": int(states.strengths.shape[-1]),
+            "n_pad": (self._config.n_pad
+                      if self._config.method == "sparse_tick"
+                      else int(states.strengths.shape[-1])),
             "has_node_mask": states.node_mask is not None,
             "layout_generation": self._layout.generation,
             "exact_smax": self._config.exact_smax,
@@ -676,6 +718,13 @@ class FingerService:
                         "ingestion": self._config.ingestion,
                         "k_pad": self._config.k_pad},
         }
+        if self._config.method == "sparse_tick":
+            meta["sparse"] = {
+                "n_slots": int(self._capacity.n_slots),
+                "m_pad": int(self._capacity.m_pad),
+                "generation": int(self._capacity.generation),
+            }
+            meta["slot_maps"] = [sm.to_json() for sm in self._slot_maps]
         return save_checkpoint(ckpt_dir, self._step, states,
                                metadata=meta,
                                prune_policy=self._config.checkpoint.prune)

@@ -26,8 +26,8 @@ from repro.fleet import (
     FleetError,
     FleetIngestError,
     FleetLifecycleError,
+    PoolGroupError,
     PoolSpec,
-    RebalanceError,
     RecoveryError,
     ShardUnavailableError,
     UnknownTenantError,
@@ -40,12 +40,12 @@ from repro.serving.migrate import embed_delta
 K_PAD, J_PAD = 3, 2
 
 
-def _two_bucket_cfg(**kw):
+def _two_bucket_cfg(method="dense", **kw):
     return FleetConfig(pools=(
         PoolSpec(name="small", n_pad=8, shards=2, streams_per_shard=2,
-                 k_pad=K_PAD, j_pad=J_PAD),
+                 k_pad=K_PAD, j_pad=J_PAD, method=method),
         PoolSpec(name="large", n_pad=32, shards=2, streams_per_shard=2,
-                 k_pad=K_PAD, j_pad=J_PAD),
+                 k_pad=K_PAD, j_pad=J_PAD, method=method),
     ), **kw)
 
 
@@ -121,11 +121,12 @@ class TestFleetConfig:
         with pytest.raises(FleetConfigError, match="save_every"):
             FleetConfig(pools=(small,),
                         save_every_ticks=5).validate()
-        with pytest.raises(FleetConfigError, match="all-dense"):
-            FleetConfig(pools=(
-                PoolSpec(name="sp", n_pad=64, k_pad=2, j_pad=2,
-                         method="sparse_tick", n_slots=8, m_pad=16),),
-                directory="/tmp/never").validate()
+        # sparse pools persist too (SlotMaps serialize into the shard
+        # checkpoint manifest) — a sparse + directory config is legal
+        FleetConfig(pools=(
+            PoolSpec(name="sp", n_pad=64, k_pad=2, j_pad=2,
+                     method="sparse_tick", n_slots=8, m_pad=16),),
+            directory="/tmp/never").validate()
         with pytest.raises(FleetConfigError, match="no pool named"):
             FleetConfig(pools=(small,)).pool_index("nope")
         assert _two_bucket_cfg().pool_index("large") == 1
@@ -453,7 +454,9 @@ class TestFleetPersistence:
 
 class TestSparsePool:
     """A sparse (slot-space) bucket serves virtual-id deltas at parity
-    with a dense oracle; promotion out of it is refused by name."""
+    with a dense oracle, and a sparse tenant promotes *live* into a
+    dense bucket (slot-map gather) without leaving the oracle
+    trajectory."""
 
     N_VIRT = 64
 
@@ -461,7 +464,9 @@ class TestSparsePool:
         cfg = FleetConfig(pools=(
             PoolSpec(name="slots", n_pad=self.N_VIRT, shards=1,
                      streams_per_shard=2, k_pad=4, j_pad=2,
-                     method="sparse_tick", n_slots=12, m_pad=24),))
+                     method="sparse_tick", n_slots=12, m_pad=24),
+            PoolSpec(name="wide", n_pad=128, shards=1,
+                     streams_per_shard=2, k_pad=4, j_pad=2),))
         names = ["u", "v"]
         graphs = {n: _graph(8, i + 41) for i, n in enumerate(names)}
         fleet = FingerFleet.open(cfg)
@@ -472,8 +477,10 @@ class TestSparsePool:
         try:
             for n in names:
                 fleet.admit(n, graphs[n])
+            assert fleet.directory.get("u").pool == 0  # best fit
             rng = np.random.default_rng(5)
-            for t in range(3):
+
+            def tick(t):
                 ds = {}
                 for n in names:
                     i, j = sorted(rng.choice(8, 2,
@@ -490,28 +497,42 @@ class TestSparsePool:
                 for i, n in enumerate(names):
                     assert abs(got[n] - float(ref[i])) < 1e-5, \
                         (t, n, got[n], float(ref[i]))
-            with pytest.raises(RebalanceError, match="sparse"):
-                fleet.promote("u")
+
+            for t in range(3):
+                tick(t)
+            # live sparse -> dense promotion: the tenant's FINGER row
+            # leaves the slot universe through its SlotMap gather and
+            # keeps serving from the dense bucket at exact parity
+            report = fleet.promote("u")
+            e = fleet.directory.get("u")
+            assert e.pool == 1 and report["to"][0] == 1
+            assert e.slot_of_node is not None
+            for t in range(2):
+                tick(10 + t)
         finally:
             fleet.close()
             oracle.close()
 
 
 class TestStackedSequentialParity:
-    """PR 9's stacked pool-tick dispatch is a pure execution-plane
+    """The stacked pool-tick dispatch is a pure execution-plane
     optimization: the identical lifecycle — admit → ticks → cross-
     bucket promotion → staged-tick compaction → save/restore → shard
     kill + WAL tick + recovery — run with ``stacked_ticks`` on and off
-    produces the same per-tenant scores to 1e-5 at every step."""
+    produces the same per-tenant scores to 1e-5 at every step. Holds
+    for every tick method: the vmapped dense bodies AND the megakernel
+    methods, whose stacked spelling is one (S, B)-gridded
+    `pallas_call` per layout group."""
 
     NAMES = ["a", "b", "c"]
     SIZES = {"a": 5, "b": 6, "c": 18}
 
-    def _lifecycle(self, stacked, tmp_path):
+    def _lifecycle(self, stacked, tmp_path, method="dense"):
         sizes = dict(self.SIZES)
         graphs = {n: _graph(sizes[n], i + 61)
                   for i, n in enumerate(self.NAMES)}
-        cfg = _two_bucket_cfg(compact_occupancy=0.95,
+        cfg = _two_bucket_cfg(method=method,
+                              compact_occupancy=0.95,
                               stacked_ticks=stacked,
                               directory=str(tmp_path))
         trace = []
@@ -556,14 +577,107 @@ class TestStackedSequentialParity:
             fleet.close()
         return trace
 
-    def test_lifecycle_scores_match_to_1e5(self, tmp_path):
-        stacked = self._lifecycle(True, tmp_path / "on")
-        sequential = self._lifecycle(False, tmp_path / "off")
+    @staticmethod
+    def _assert_traces_match(stacked, sequential):
         assert len(stacked) == len(sequential)
         for i, (s, q) in enumerate(zip(stacked, sequential)):
             assert set(s) == set(q), i
             for n in s:
                 assert abs(s[n] - q[n]) < 1e-5, (i, n, s[n], q[n])
+
+    def test_lifecycle_scores_match_to_1e5(self, tmp_path):
+        self._assert_traces_match(
+            self._lifecycle(True, tmp_path / "on"),
+            self._lifecycle(False, tmp_path / "off"))
+
+    def test_fused_lifecycle_scores_match_to_1e5(self, tmp_path):
+        """Megakernel pools through the same full lifecycle: the
+        stacked (S, B)-gridded launch must be score-invisible against
+        per-shard sequential fused ticks — including across the group
+        splits promotion and compaction cause."""
+        self._assert_traces_match(
+            self._lifecycle(True, tmp_path / "on",
+                            method="fused_tick"),
+            self._lifecycle(False, tmp_path / "off",
+                            method="fused_tick"))
+
+    def _sparse_lifecycle(self, stacked, tmp_path):
+        """Sparse lifecycle: sparse-pool ticks, live sparse → dense
+        promotion, whole-fleet save/restore (SlotMaps through the
+        checkpoint manifest), sparse shard kill + WAL tick + disk-
+        base recovery."""
+        cfg = FleetConfig(pools=(
+            PoolSpec(name="slots", n_pad=24, shards=2,
+                     streams_per_shard=2, k_pad=4, j_pad=2,
+                     method="sparse_tick", n_slots=12, m_pad=24),
+            PoolSpec(name="big", n_pad=64, shards=1,
+                     streams_per_shard=2, k_pad=4, j_pad=2),
+        ), stacked_ticks=stacked, directory=str(tmp_path))
+        names = ["u", "v", "w"]
+        graphs = {n: _graph(8, i + 71) for i, n in enumerate(names)}
+        trace = []
+        rng = np.random.default_rng(13)
+        fleet = FingerFleet.open(cfg)
+        try:
+            for n in names:
+                fleet.admit(n, graphs[n])
+            assert all(fleet.directory.get(n).pool == 0
+                       for n in names)
+
+            def tick():
+                ds = {}
+                for n in names:
+                    i, j = sorted(rng.choice(8, 2,
+                                             replace=False).tolist())
+                    ds[n] = GraphDelta.from_arrays(
+                        [i], [j], [float(rng.uniform(0.5, 2.0))],
+                        [0.0], n_nodes=24, k_pad=4, j_pad=2)
+                fleet.ingest(ds)
+                fleet.poll()
+                trace.append(fleet.scores())
+
+            for _ in range(3):
+                tick()
+            fleet.promote("u")  # sparse -> dense, live
+            assert fleet.directory.get("u").pool == 1
+            tick()
+            # sparse shards persist: whole-fleet save/restore
+            fleet.save()
+            fleet.close()
+            fleet = FingerFleet.restore(cfg)
+            tick()
+            # kill one sparse shard (its stacked group shrinks S=2→1),
+            # WAL-only tick, then disk-base recovery through the
+            # checkpoint's serialized SlotMaps
+            fleet.kill_shard("slots", fleet.directory.get("v").shard)
+            tick()
+            fleet.recover()
+            trace.append(fleet.scores())
+            tick()
+        finally:
+            fleet.close()
+        return trace
+
+    def test_sparse_lifecycle_scores_match_to_1e5(self, tmp_path):
+        self._assert_traces_match(
+            self._sparse_lifecycle(True, tmp_path / "on"),
+            self._sparse_lifecycle(False, tmp_path / "off"))
+
+
+class TestPoolTickGrouping:
+    """`pooltick` group rules: one stacked launch covers one layout
+    group of one method — mixed-method entry lists are a caller bug
+    and raise by name instead of warming a plan no poll() will use."""
+
+    def test_warm_pool_tick_rejects_mixed_methods(self):
+        from repro.fleet import pooltick
+        from repro.graphs.layout import NodeLayout
+
+        dense = ServiceConfig(batch_size=2, n_pad=8, k_pad=3, j_pad=2)
+        fused = dense.with_(method="fused_tick")
+        lay = NodeLayout(8)
+        with pytest.raises(PoolGroupError, match="mixed"):
+            pooltick.warm_pool_tick([(dense, lay), (fused, lay)])
 
 
 class TestWalRetention:

@@ -363,12 +363,45 @@ class TestSparseServing:
         with pytest.raises(IngestError, match="per-stream"):
             sparse.ingest(stacked)
 
-    def test_save_compact_shrink_rejected_by_name(self):
+    def test_compact_shrink_rejected_by_name(self):
         sparse, _, _ = self._open_pair()
-        with pytest.raises(ServiceConfigError,
-                           match="not checkpointable"):
-            sparse.save("/tmp/never-written")
         with pytest.raises(ServiceConfigError, match="self-compacts"):
             sparse.compact()
         with pytest.raises(LayoutMigrationError, match="only grows"):
             sparse.repad(32)
+
+    def test_sparse_checkpoint_round_trip(self, tmp_path):
+        """Sparse services checkpoint: the per-stream `SlotMap`s ride
+        in the manifest, so a restored service translates virtual ids
+        (including joins into fresh slots) exactly like the original —
+        pinned by score parity against an un-restored dense control."""
+        sparse, dense, graphs = self._open_pair()
+        rng = np.random.default_rng(7)
+        mirrors = [np.asarray(g.weights).copy() for g in graphs]
+
+        def toggles():
+            ds = []
+            for wm in mirrors:
+                n = wm.shape[0]
+                i, j = sorted(rng.choice(n, 2, replace=False).tolist())
+                w_old = float(wm[i, j])
+                ds.append(GraphDelta.from_arrays(
+                    [i], [j], [0.5 if w_old == 0 else -w_old], [w_old],
+                    n_nodes=self.N_VIRTUAL, k_pad=4, j_pad=2))
+                wm[i, j] = wm[j, i] = 0.0 if w_old else 0.5
+            return ds
+
+        self._tick_both(sparse, dense, toggles(), "pre-save")
+        cfg = sparse.config
+        sparse.save(str(tmp_path))
+        sparse.close()
+        sparse = FingerService.restore(cfg, directory=str(tmp_path))
+        assert sparse.capacity.n_slots == cfg.n_slots
+        self._tick_both(sparse, dense, toggles(), "post-restore edges")
+        # a join lands in a free slot chosen by the restored SlotMap's
+        # free list — relabeling-invariant, so parity must still hold
+        joins = [GraphDelta.from_arrays(
+            [40 + s], [0], [0.7], [0.0], n_nodes=self.N_VIRTUAL,
+            k_pad=4, join=[40 + s], j_pad=2)
+            for s in range(len(graphs))]
+        self._tick_both(sparse, dense, joins, "post-restore joins")
